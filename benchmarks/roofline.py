@@ -1,0 +1,298 @@
+"""§Roofline assembly: read results/dryrun.json, produce the per-cell
+three-term roofline table (deliverable g).
+
+Methodology (documented in EXPERIMENTS.md §Roofline):
+  - HLO_FLOPs / HLO_bytes per device come from the dry-run's delta
+    compiles: XLA cost_analysis counts a scan body once, so the dry-run
+    compiled each cell at two depths with layer scans UNROLLED;
+    total = f(L_small) + m·(f(L_large) − f(L_small)).
+  - rwkv/ssm recurrence chunk loops stay rolled in the delta compiles
+    (their trip counts are large); their per-chunk einsum flops are added
+    here analytically (exact closed forms of the einsums in
+    models/rwkv.py::wkv_chunked and models/ssm.py::ssd_chunked; backward
+    ≈ 2× forward for train cells).
+  - collective bytes: parsed per-op from the compiled HLO (operand/result
+    types × ring-algorithm factors), delta-scaled the same way.  Chunk
+    bodies contain no collectives, so no analytic correction is needed.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (values from the assignment).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Any, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link; one link per collective step
+
+RING_FACTORS = {
+    "all-reduce": 2.0,          # 2(g-1)/g ≈ 2
+    "all-gather": 1.0,          # (g-1)/g of the RESULT bytes
+    "reduce-scatter": 1.0,      # (g-1)/g of the OPERAND bytes (≈ result·g)
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _coll_bytes(colls: dict) -> float:
+    """Wire-byte model from the per-op summary (result_bytes per kind)."""
+    total = 0.0
+    for kind, agg in colls.items():
+        if kind == "ops":
+            continue
+        g_est = None
+        total += RING_FACTORS.get(kind, 1.0) * agg["result_bytes"]
+    return total
+
+
+def _delta_total(scaling: dict, field) -> Optional[float]:
+    if scaling is None:
+        return None
+    s, l, m = scaling["small"], scaling["large"], scaling["multiplier"]
+    vs, vl = field(s), field(l)
+    if vs is None or vl is None:
+        return None
+    return vs + m * (vl - vs)
+
+
+# --------- analytic chunk-loop corrections (rwkv / ssm families) ---------
+def _rwkv_chunk_flops(cfg, tokens_local: int) -> float:
+    """Per-token fwd flops of the rolled WKV chunk loop (one layer):
+    4·H·C·N per token for the two (C,C)x(C,N) intra products +
+    4·H·N² per token for inter read/state update (H heads of dim N)."""
+    H = cfg.n_heads // max(cfg.tp, 1)
+    N = cfg.head_size
+    C = cfg.chunk
+    per_tok = 4 * H * C * N + 4 * H * N * N
+    return per_tok * tokens_local
+
+
+def _ssd_chunk_flops(cfg, tokens_local: int) -> float:
+    H = cfg.ssm_heads // max(cfg.tp, 1)
+    N = cfg.ssm_state
+    Pd = cfg.head_p
+    C = cfg.chunk
+    per_tok = 2 * H * C * Pd + 4 * H * Pd * N + 2 * C * N
+    return per_tok * tokens_local
+
+
+def chunk_correction(arch_id: str, shape_name: str, dp: int, tp: int,
+                     kind: str) -> float:
+    """Analytic flops of the rolled recurrence-chunk loops, per device."""
+    from repro.configs import get_arch
+
+    arch = get_arch(arch_id)
+    if arch.family not in ("rwkv", "ssm"):
+        return 0.0
+    shape = arch.shape(shape_name)
+    cfg = arch.make_config(tp=tp, dp_axes=("data",))
+    if shape.kind == "decode":
+        toks = max(shape.global_batch // dp, 1)
+        mult = 1.0
+    elif shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len // dp
+        mult = 1.0
+    else:
+        toks = shape.global_batch * shape.seq_len // dp
+        mult = 3.0      # fwd + bwd(2x)
+    if arch.family == "rwkv":
+        per_layer = _rwkv_chunk_flops(cfg, toks)
+        layers = cfg.n_layers
+    else:
+        per_layer = _ssd_chunk_flops(cfg, toks)
+        layers = cfg.n_layers
+    return per_layer * layers * mult
+
+
+# --------------------------- HBM byte model ------------------------------
+def analytic_hbm_bytes(arch_id: str, shape_name: str, n_chips: int,
+                       tp: int, coll_bytes: float) -> float:
+    """Fused-TPU HBM traffic estimate, per device per step.
+
+    XLA:CPU's ``bytes accessed`` counts every op unfused (a ~10-50×
+    upper bound vs a fused TPU program), so the memory TERM uses this
+    analytic model instead; both numbers are reported.
+
+    train:   params 2(fwd)+2(bwd read)+4(grad w)+4(grad r)
+             + 16 (adam m,v r+w fp32) + 2 (param write)  = 30 bytes/param
+             + activations: ~6 bytes/token/d_model/layer (bf16 residual
+             save + read + recompute traffic under dots-remat)
+    prefill: params 2 + activations 4/tok/d/L + kv-cache write
+    decode:  params 2 + full kv/state read + small vectors
+    collectives also move HBM: + 2× wire bytes.
+    """
+    from repro.configs import get_arch
+    from repro.configs.base import param_structs
+    from repro.utils.trees import named_leaves
+    import numpy as np
+
+    arch = get_arch(arch_id)
+    shape = arch.shape(shape_name)
+    dp = n_chips // tp
+    cfg = arch.make_config(tp=tp, dp_axes=("data",))
+    params = param_structs(cfg)
+    p_local = 0
+    rules_specs = None
+    from repro.models.registry import family_of
+    from repro.parallel.sharding import flat_spec_axes
+    api = family_of(cfg)
+    rules = api.param_rules(cfg)
+    for n, leaf in named_leaves(params):
+        sz = int(np.prod(leaf.shape))
+        axes = flat_spec_axes(rules.spec(n))
+        p_local += sz // (tp if "model" in axes else 1)
+
+    d = getattr(cfg, "d_model", 0)
+    L = getattr(cfg, "n_layers", 1)
+    if shape.kind == "train":
+        toks = shape.global_batch * max(shape.seq_len, 1) // dp
+        act = 6.0 * toks * d * L if d else 12.0 * toks * 3072
+        return 30.0 * p_local + act + 2.0 * coll_bytes
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len // dp
+        act = 4.0 * toks * d * L if d else 0
+        return 2.0 * p_local + act + 2.0 * coll_bytes
+    # decode: dominated by weight + cache/state read
+    b_local = max(shape.global_batch // dp, 1)
+    cache = 0.0
+    if arch.family == "transformer":
+        lay_kv = cfg.layout.kv_local * cfg.hd
+        slen = min(shape.seq_len,
+                   cfg.swa_window or shape.seq_len)
+        cache = 2.0 * 2 * b_local * slen * lay_kv * L
+    elif arch.family == "rwkv":
+        cache = 4.0 * b_local * (cfg.n_heads // tp) * 64 * 64 * L * 2
+    elif arch.family == "ssm":
+        cache = 4.0 * b_local * (cfg.ssm_heads // tp) * cfg.head_p \
+            * cfg.ssm_state * L * 2
+    return 2.0 * p_local + cache + 2.0 * coll_bytes
+
+
+# ----------------------------- model flops -------------------------------
+def model_flops(arch_id: str, shape_name: str, n_chips: int) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE), per device."""
+    from repro.configs import get_arch
+    from repro.configs.base import param_structs
+    from repro.models.registry import family_of
+    import numpy as np
+
+    arch = get_arch(arch_id)
+    shape = arch.shape(shape_name)
+    cfg = arch.make_config(tp=1, dp_axes=("data",))
+    params = param_structs(cfg)
+    from repro.utils.trees import named_leaves
+
+    total = active = 0
+    moe = getattr(cfg, "moe", None)
+    for n, leaf in named_leaves(params):
+        sz = int(np.prod(leaf.shape))
+        total += sz
+        if moe is not None and any(
+                k in n for k in ("w_gate", "w_up", "w_down")):
+            active += sz * moe.top_k / moe.num_experts
+        else:
+            active += sz
+    if shape.kind == "train":
+        D = shape.global_batch * max(shape.seq_len, 1)
+        return 6 * active * D / n_chips
+    if shape.kind == "prefill":
+        D = shape.global_batch * shape.seq_len
+        return 2 * active * D / n_chips
+    # decode: one token per sequence
+    return 2 * active * shape.global_batch / max(
+        n_chips // 16 if shape.global_batch == 1 else n_chips, 1)
+
+
+def _mesh_facts(r):
+    dims = [int(v) for v in r["mesh"].split("x")]
+    axes = r["axes"]
+    n_chips = 1
+    for d in dims:
+        n_chips *= d
+    tp = dims[axes.index("model")] if "model" in axes else 1
+    return n_chips, n_chips // tp, tp
+
+
+def assemble(records: list[dict], mesh_name: str = "single",
+             tag: str = "") -> list[dict]:
+    rows = []
+    for r in records:
+        if r.get("mesh_name") != mesh_name or r["status"] != "ok":
+            continue
+        if r.get("tag", "") != tag:
+            continue
+        n_chips, dp, tp = _mesh_facts(r)
+        sc = r.get("scaling")
+        flops = _delta_total(sc, lambda x: x["flops"]) \
+            if sc else r["cost"]["flops"]
+        byts = _delta_total(sc, lambda x: x["bytes_accessed"]) \
+            if sc else r["cost"]["bytes_accessed"]
+        coll = _delta_total(
+            sc, lambda x: _coll_bytes(x["collectives"])) \
+            if sc else _coll_bytes(r["collectives"])
+        if flops is None:
+            continue
+        corr = chunk_correction(r["arch"], r["shape"], dp, tp, r["kind"])
+        flops += corr
+        hbm_est = analytic_hbm_bytes(r["arch"], r["shape"], n_chips, tp,
+                                     coll or 0.0)
+        t_comp = flops / PEAK_FLOPS
+        t_mem = hbm_est / HBM_BW
+        t_mem_upper = byts / HBM_BW if byts else 0.0
+        t_coll = (coll or 0.0) / ICI_BW
+        dom = max(("compute", t_comp), ("memory", t_mem),
+                  ("collective", t_coll), key=lambda kv: kv[1])
+        mf = model_flops(r["arch"], r["shape"], n_chips)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "strategy": r.get("strategy"), "reducer": r.get("reducer"),
+            "flops": flops, "bytes_hlo_unfused": byts,
+            "bytes_hbm_est": hbm_est, "coll_bytes": coll,
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_memory_unfused_s": t_mem_upper,
+            "t_collective_s": t_coll,
+            "bottleneck": dom[0],
+            "model_flops": mf,
+            "useful_ratio": mf / flops if flops else None,
+            "roofline_frac": t_comp / max(t_comp, t_mem, t_coll),
+            "memory_temp_gb": (r["memory"]["temp_bytes"] or 0) / 1e9,
+        })
+    return rows
+
+
+def print_table(rows: list[dict], file=sys.stdout):
+    hdr = (f"{'arch':24} {'shape':12} {'comp_ms':>9} {'mem_ms':>9} "
+           f"{'coll_ms':>9} {'bound':>10} {'useful':>7} {'roofl%':>7} "
+           f"{'temp_GB':>8}")
+    print(hdr, file=file)
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        print(f"{r['arch']:24} {r['shape']:12} "
+              f"{r['t_compute_s']*1e3:9.2f} {r['t_memory_s']*1e3:9.2f} "
+              f"{r['t_collective_s']*1e3:9.2f} {r['bottleneck']:>10} "
+              f"{(r['useful_ratio'] or 0):7.2f} "
+              f"{r['roofline_frac']*100:6.1f}% "
+              f"{r['memory_temp_gb']:8.1f}", file=file)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json-out", default="results/roofline.json")
+    args = ap.parse_args()
+    records = json.load(open(args.inp))
+    rows = assemble(records, args.mesh, args.tag)
+    print_table(rows)
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\n[{len(rows)} cells -> {args.json_out}]")
+
+
+if __name__ == "__main__":
+    main()

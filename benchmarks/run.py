@@ -1,0 +1,157 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  - fig13/14/15/16: strategy epoch times from the calibrated DAG cost
+    model (benchmarks/paper_figures.py), validated against the paper's
+    claims (1.6× DepCha/Funnel on Inception; CIFAR convergence at 32;
+    ~50 s/epoch at 256).
+  - strategy_step: MEASURED wall-clock per train step for each embedding
+    strategy on this host (1 CPU device — orders overhead, not network).
+  - kernel_*: measured interpret-mode kernel runtimes vs jnp reference.
+  - roofline_summary: per-bottleneck cell counts from results/dryrun.json
+    (run ``python -m repro.launch.dryrun --all --mesh both`` first).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _t(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    try:
+        import jax
+        jax.block_until_ready(r)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_paper_figures(emit):
+    from benchmarks.paper_figures import fig13, fig14, fig15, fig16, validate
+
+    for name, rows in (("fig13_cifar", fig13()), ("fig14_inception", fig14()),
+                       ("fig15_resnet", fig15())):
+        for row in rows:
+            n, f, c, d = row
+            emit(f"{name}_gpus{n}_funnel", f * 1e6, f"{f:.2f}s_epoch")
+            emit(f"{name}_gpus{n}_concom", c * 1e6, f"{c:.2f}s_epoch")
+            emit(f"{name}_gpus{n}_depcha", d * 1e6, f"{d:.2f}s_epoch")
+    for n, t in fig16():
+        emit(f"fig16_scaling_gpus{n}", t * 1e6, f"{t:.2f}s_epoch")
+    v = validate()
+    emit("paper_claim_inception_1.6x", 0,
+         f"speedup={v['inception_depcha_speedup_min']:.2f}_"
+         f"pass={v['claim_1.6x']}")
+    emit("paper_claim_cifar_convergence", 0,
+         f"gap8={v['cifar_gap_8']:.2f}_gap32={v['cifar_gap_32']:.2f}_"
+         f"pass={v['claim_gap_shrinks']}")
+    emit("paper_claim_50s_epoch_256gpu", v["imagenet_epoch_256"] * 1e6,
+         f"pass={v['claim_50s']}")
+
+
+def bench_strategy_steps(emit):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import GradSyncConfig
+    from repro.data import TokenPipeline
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import transformer as tf
+    from repro.optim import adamw
+    from repro.runtime import make_train_step
+
+    mesh = make_smoke_mesh(1, 1)
+    cfg = tf.TransformerConfig(
+        name="bench", n_layers=4, d_model=128, n_heads=8, kv_heads=4,
+        d_ff=512, vocab=1024, tp=1, attn_chunk=64, dtype=jnp.float32)
+    pipe = TokenPipeline(1024, 128, 8, mesh=mesh)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    batch = pipe.batch_at(0)
+    opt = adamw(1e-3)
+    for strat in ("funnel", "concom", "depcha"):
+        ts = make_train_step(
+            cfg, mesh,
+            GradSyncConfig(strategy=strat, num_channels=4,
+                           bucket_bytes=1 << 16),
+            opt, batch_like=batch, params_like=params)
+        state = opt.init(params)
+        us = _t(lambda: ts.fn(params, state, batch, jnp.int32(0)))
+        emit(f"strategy_step_{strat}", us, "1cpu_4L_128d")
+
+
+def bench_kernels(emit):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.quantize.ops import quantize_blocks
+    from repro.kernels.rwkv6.ops import wkv_chunk
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    B, S, H, D = 1, 256, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    us = _t(lambda: flash_attention(q, k, v, interpret=True))
+    emit("kernel_flash_attention_interp", us, f"S{S}_H{H}_D{D}")
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    us = _t(lambda: attention_ref(qf, qf, qf))
+    emit("kernel_flash_attention_jnp_ref", us, f"S{S}_H{H}_D{D}")
+
+    x = jax.random.normal(ks[3], (1024 * 256,), jnp.float32)
+    us = _t(lambda: quantize_blocks(x, interpret=True))
+    emit("kernel_quantize_interp", us, "1M_elems")
+
+    C, N = 32, 64
+    r = jax.random.normal(ks[4], (2, C, 8, N), jnp.float32)
+    lw = -jnp.exp(jax.random.normal(ks[5], (2, C, 8, N)) - 2)
+    u = jnp.zeros((8, N), jnp.float32)
+    st = jnp.zeros((2, 8, N, N), jnp.float32)
+    us = _t(lambda: wkv_chunk(r, r, r, lw, u, st, interpret=True))
+    emit("kernel_rwkv6_chunk_interp", us, f"C{C}_N{N}")
+
+
+def bench_roofline_summary(emit):
+    path = "results/dryrun.json"
+    if not os.path.exists(path):
+        emit("roofline_summary", 0, "dryrun.json_missing_run_dryrun_first")
+        return
+    from benchmarks.roofline import assemble
+
+    records = json.load(open(path))
+    for mesh in ("single", "multi"):
+        rows = assemble(records, mesh)
+        if not rows:
+            continue
+        by = {}
+        for r in rows:
+            by[r["bottleneck"]] = by.get(r["bottleneck"], 0) + 1
+        emit(f"roofline_cells_{mesh}", 0,
+             "_".join(f"{k}:{v}" for k, v in sorted(by.items())))
+        worst = min(rows, key=lambda r: r["roofline_frac"])
+        emit(f"roofline_worst_{mesh}", worst["roofline_frac"] * 1e6,
+             f"{worst['arch']}_{worst['shape']}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    def emit(name, us, derived):
+        print(f"{name},{us:.1f},{derived}")
+
+    bench_paper_figures(emit)
+    bench_strategy_steps(emit)
+    bench_kernels(emit)
+    bench_roofline_summary(emit)
+
+
+if __name__ == "__main__":
+    main()

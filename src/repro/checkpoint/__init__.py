@@ -1,0 +1,4 @@
+from repro.checkpoint.manager import CheckpointManager, restore, save
+from repro.checkpoint.reshard import reshard
+
+__all__ = ["CheckpointManager", "reshard", "restore", "save"]

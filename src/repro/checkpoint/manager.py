@@ -1,0 +1,154 @@
+"""Fault-tolerant checkpointing: atomic, async, sharded-aware.
+
+Layout (one directory per step):
+    <root>/step_000100.tmp/   → written, fsync'd, then renamed to
+    <root>/step_000100/
+        manifest.json         (step, leaf names/shapes/dtypes, mesh info)
+        <leaf-name>.npy       (full/global array value per leaf)
+
+Atomicity = tmp-dir + rename: a crash mid-write never corrupts the latest
+complete checkpoint; ``latest_step`` only considers renamed dirs.  The
+async writer snapshots arrays to host first (jax.device_get), so training
+continues while the write proceeds.  Restore can target a DIFFERENT mesh
+(elastic re-scale) — see ``repro.checkpoint.reshard``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.utils.trees import flatten_with_names, unflatten_from_names
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _fname(name: str) -> str:
+    return _SAFE.sub("__", name) + ".npy"
+
+
+def _to_savable(v: np.ndarray) -> np.ndarray:
+    """numpy can't persist ml_dtypes (bfloat16, fp8) — widen to float32;
+    restore() casts back per the target tree's dtypes."""
+    if v.dtype.kind == "V" or v.dtype.name in ("bfloat16", "float8_e4m3fn",
+                                               "float8_e5m2"):
+        return v.astype(np.float32)
+    return v
+
+
+def save(root: str, step: int, tree: Any, *, blocking: bool = True) -> str:
+    """Write checkpoint atomically; returns the final directory path."""
+    named, _ = flatten_with_names(tree)
+    host = [(n, _to_savable(np.asarray(jax.device_get(v))))
+            for n, v in named]
+
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + ".tmp"
+
+    def write():
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": []}
+        for n, v in host:
+            np.save(os.path.join(tmp, _fname(n)), v)
+            manifest["leaves"].append(
+                {"name": n, "shape": list(v.shape), "dtype": str(v.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        write()
+        return final
+    t = threading.Thread(target=write, daemon=True)
+    t.start()
+    return final
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for d in os.listdir(root):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(root, d, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(root: str, step: int, like: Any) -> Any:
+    """Load a checkpoint into the structure of ``like`` (host numpy)."""
+    path = os.path.join(root, f"step_{step:08d}")
+    named, treedef = flatten_with_names(like)
+    out = []
+    for n, leaf in named:
+        v = np.load(os.path.join(path, _fname(n)))
+        want = tuple(leaf.shape)
+        if tuple(v.shape) != want:
+            raise ValueError(f"{n}: checkpoint {v.shape} != expected {want}")
+        out.append(np.asarray(jax.numpy.asarray(v, dtype=leaf.dtype)))
+    return unflatten_from_names(treedef, out)
+
+
+class CheckpointManager:
+    """Periodic async checkpointing with retention (keep last k)."""
+
+    def __init__(self, root: str, *, every: int = 100, keep: int = 3,
+                 blocking: bool = False):
+        self.root = root
+        self.every = every
+        self.keep = keep
+        self.blocking = blocking
+        self._last_thread: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    def maybe_save(self, step: int, tree: Any) -> bool:
+        if step % self.every:
+            return False
+        self.wait()
+        if self.blocking:
+            save(self.root, step, tree, blocking=True)
+        else:
+            named, _ = flatten_with_names(tree)
+            host_tree = tree  # device_get happens inside save()
+            self._last_thread = threading.Thread(
+                target=save, args=(self.root, step, host_tree),
+                kwargs={"blocking": True}, daemon=True)
+            # snapshot to host BEFORE returning control (cheap on CPU;
+            # on TPU this is the D2H copy that must precede async write)
+            jax.block_until_ready(jax.tree.leaves(tree))
+            self._last_thread.start()
+        self._gc()
+        return True
+
+    def wait(self):
+        if self._last_thread is not None:
+            self._last_thread.join()
+            self._last_thread = None
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1))
+            for d in os.listdir(self.root)
+            if (m := re.fullmatch(r"step_(\d+)", d)))
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.root)
+
+    def restore(self, like: Any, step: Optional[int] = None) -> tuple[int, Any]:
+        s = self.latest() if step is None else step
+        if s is None:
+            raise FileNotFoundError(f"no checkpoint under {self.root}")
+        return s, restore(self.root, s, like)

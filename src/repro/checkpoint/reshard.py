@@ -1,0 +1,41 @@
+"""Elastic re-scale: load a checkpoint onto a DIFFERENT mesh.
+
+Checkpoints store *global* arrays (manager.py), so resharding is just
+placement under the new mesh's NamedShardings — the mechanism behind
+elastic scaling (node loss → smaller mesh; capacity gain → bigger mesh).
+Divisibility is validated per leaf so a bad target mesh fails loudly
+before any training step runs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import ShardingRules, flat_spec_axes
+from repro.utils.trees import flatten_with_names, unflatten_from_names
+
+
+def validate_divisibility(tree: Any, specs: Any, mesh: Mesh) -> None:
+    named, _ = flatten_with_names(tree)
+    spec_named, _ = flatten_with_names(specs)
+    for (name, leaf), (_, spec) in zip(named, spec_named):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            if leaf.shape[dim] % n:
+                raise ValueError(
+                    f"{name}: dim {dim} ({leaf.shape[dim]}) not divisible "
+                    f"by mesh axes {axes} (={n})")
+
+
+def reshard(tree: Any, rules: ShardingRules, mesh: Mesh) -> Any:
+    """Place a host (or differently-sharded) tree onto ``mesh``."""
+    specs = rules.tree_specs(tree)
+    validate_divisibility(tree, specs, mesh)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+    return jax.device_put(tree, shardings)

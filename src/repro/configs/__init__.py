@@ -1,0 +1,63 @@
+"""Architecture registry: the 10 assigned archs + the paper's own models.
+
+``--arch <id>`` everywhere resolves through ``get_arch``.
+"""
+from repro.configs.base import (
+    ArchSpec,
+    ShapeSpec,
+    decode_state_structs,
+    image_input_specs,
+    lm_shapes,
+    param_structs,
+    train_input_specs,
+)
+from repro.configs.granite_moe_1b_a400m import ARCH as _granite
+from repro.configs.h2o_danube_1_8b import ARCH as _danube
+from repro.configs.inception_bn_imagenet import ARCH as _inception
+from repro.configs.kimi_k2_1t_a32b import ARCH as _kimi
+from repro.configs.llama_3_2_vision_11b import ARCH as _llama_vision
+from repro.configs.minitron_8b import ARCH as _minitron
+from repro.configs.musicgen_large import ARCH as _musicgen
+from repro.configs.qwen3_1_7b import ARCH as _qwen3
+from repro.configs.resnet50_cifar import ARCH as _resnet
+from repro.configs.rwkv6_7b import ARCH as _rwkv6
+from repro.configs.starcoder2_3b import ARCH as _starcoder2
+from repro.configs.zamba2_2_7b import ARCH as _zamba2
+
+ASSIGNED = (
+    _llama_vision,
+    _musicgen,
+    _danube,
+    _qwen3,
+    _starcoder2,
+    _minitron,
+    _rwkv6,
+    _granite,
+    _kimi,
+    _zamba2,
+)
+PAPER_OWN = (_resnet, _inception)
+
+ARCHS = {a.arch_id: a for a in ASSIGNED + PAPER_OWN}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+__all__ = [
+    "ARCHS",
+    "ASSIGNED",
+    "ArchSpec",
+    "PAPER_OWN",
+    "ShapeSpec",
+    "decode_state_structs",
+    "get_arch",
+    "image_input_specs",
+    "lm_shapes",
+    "param_structs",
+    "train_input_specs",
+]

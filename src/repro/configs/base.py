@@ -1,0 +1,123 @@
+"""Config machinery: ArchSpec (one per assigned architecture) + the
+standard LM shape grid + input_specs construction (ShapeDtypeStruct
+stand-ins — weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import family_of
+from repro.parallel.sharding import flat_spec_axes
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+    applicable: bool = True
+    note: str = ""
+
+
+def lm_shapes(long_ok: bool, long_note: str = "") -> tuple[ShapeSpec, ...]:
+    return (
+        ShapeSpec("train_4k", "train", 4096, 256),
+        ShapeSpec("prefill_32k", "prefill", 32768, 32),
+        ShapeSpec("decode_32k", "decode", 32768, 128),
+        ShapeSpec("long_500k", "decode", 524288, 1,
+                  applicable=long_ok, note=long_note),
+    )
+
+
+FULL_ATTN_NOTE = ("pure full attention: 512k decode KV cache is "
+                  "O(seq x layers) with no sub-quadratic structure in the "
+                  "assigned config — skipped per assignment rules "
+                  "(DESIGN.md §6)")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str
+    source: str                                   # citation tag
+    make_config: Callable[..., Any]               # (tp, dp_axes, **overrides)
+    make_smoke: Callable[[], Any]                 # tiny, tp=1
+    shapes: tuple[ShapeSpec, ...]
+    # extra per-batch inputs: name -> (per-sample shape fn(cfg, S), dtype)
+    extra_inputs: tuple[tuple[str, Callable[[Any, int], tuple[int, ...]], Any], ...] = ()
+    # (L_small, L_large, unit): HLO cost accounting pair — XLA counts scan
+    # bodies once, so exact totals = f(L_small) + m·(f(L_large)-f(L_small))
+    # with m = (n_layers - L_small)/unit.  None → no layer scan (convnets).
+    layer_pair: Optional[tuple[int, int, int]] = (1, 2, 1)
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.arch_id}: unknown shape {name}")
+
+
+def _globalize(local_shape: tuple[int, ...], spec, mesh) -> tuple[int, ...]:
+    out = list(local_shape)
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            out[dim] *= mesh.shape[a]
+    return tuple(out)
+
+
+def train_input_specs(arch: ArchSpec, cfg, shape: ShapeSpec) -> dict:
+    GB, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((GB, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((GB, S), jnp.int32),
+        "global_tokens": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+    for name, shape_fn, dtype in arch.extra_inputs:
+        specs[name] = jax.ShapeDtypeStruct((GB, *shape_fn(cfg, S)), dtype)
+    return specs
+
+
+def image_input_specs(cfg, shape: ShapeSpec) -> dict:
+    GB = shape.global_batch
+    return {
+        "images": jax.ShapeDtypeStruct(
+            (GB, cfg.img_size, cfg.img_size, 3), jnp.float32),
+        "labels": jax.ShapeDtypeStruct((GB,), jnp.int32),
+        "global_tokens": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+
+
+def decode_state_structs(arch: ArchSpec, cfg, shape: ShapeSpec, mesh,
+                         *, replicate_batch: bool = False) -> Any:
+    """Global ShapeDtypeStructs for the decode cache/state."""
+    api = family_of(cfg)
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) or 1
+    if replicate_batch:
+        b_local = shape.global_batch
+        batch_entry = None
+    else:
+        b_local = shape.global_batch // dp_size
+        batch_entry = tuple(dp) if len(dp) > 1 else (dp[0] if dp else None)
+    local = jax.eval_shape(
+        lambda: api.make_decode_state(cfg, b_local, shape.seq_len))
+    specs = api.decode_state_specs(cfg, batch_entry)
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(
+            _globalize(l.shape, s, mesh), l.dtype),
+        local, specs), specs
+
+
+def param_structs(cfg) -> Any:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    api = family_of(cfg)
+    return jax.eval_shape(
+        lambda: api.init(jax.random.PRNGKey(0), cfg))

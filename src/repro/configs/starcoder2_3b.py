@@ -1,0 +1,42 @@
+"""starcoder2-3b [dense] — 30L d=3072 24H (GQA kv=2) ff=12288 vocab=49152,
+RoPE, non-gated GELU FFN [arXiv:2402.19173; hf].
+
+24 heads don't divide tp=16 → padded to 32 heads (DESIGN.md §6; the 8
+extra heads are ordinary learned heads — systems-equivalent compute).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, FULL_ATTN_NOTE, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+
+def make_config(tp: int = 16, dp_axes=("data",), **over):
+    kw = dict(
+        name="starcoder2-3b",
+        n_layers=30, d_model=3072, n_heads=24, kv_heads=2,
+        d_ff=12288, vocab=49152, head_dim=128,
+        act="gelu", gated=False, rope_theta=999_999.0,
+        tp=tp, dp_axes=tuple(dp_axes),
+    )
+    kw.update(over)
+    return TransformerConfig(**kw)
+
+
+def make_smoke():
+    # keeps the head-padding path live: 3 heads on tp=1 (no padding) plus
+    # the padded case is covered by the tp-equivalence test
+    return TransformerConfig(
+        name="starcoder2-smoke",
+        n_layers=2, d_model=48, n_heads=3, kv_heads=1, d_ff=96,
+        vocab=97, head_dim=16, act="gelu", gated=False,
+        tp=1, attn_chunk=32, dtype=jnp.float32)
+
+
+ARCH = ArchSpec(
+    arch_id="starcoder2-3b",
+    family="transformer",
+    source="arXiv:2402.19173",
+    make_config=make_config,
+    make_smoke=make_smoke,
+    shapes=lm_shapes(long_ok=False, long_note=FULL_ATTN_NOTE),
+)

@@ -1,0 +1,28 @@
+"""Core: the paper's contribution — collective embedding in training DAGs.
+
+See DESIGN.md §2-3 for the MXNET/MPI → JAX/XLA mapping.
+"""
+from repro.core.buckets import Bucket, BucketPlan, make_bucket_plan
+from repro.core.dependency import chain, gate, new_token, update
+from repro.core.kvstore import GradSync, GradSyncConfig, KVStore
+from repro.core.overlap import scan_layers, sync_in_backward
+from repro.core.strategies import REDUCERS, STRATEGIES, make_reducer, sync_grads
+
+__all__ = [
+    "Bucket",
+    "BucketPlan",
+    "GradSync",
+    "GradSyncConfig",
+    "KVStore",
+    "REDUCERS",
+    "STRATEGIES",
+    "chain",
+    "gate",
+    "make_bucket_plan",
+    "make_reducer",
+    "new_token",
+    "scan_layers",
+    "sync_grads",
+    "sync_in_backward",
+    "update",
+]

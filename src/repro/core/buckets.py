@@ -1,0 +1,182 @@
+"""Gradient bucketing: KVStore keys → communication buffers.
+
+The paper allreduces one tensor per KVStore key from a dedicated
+``comm_buf`` (Figs 6, 9, 11).  We generalize the comm buffer to a *bucket*:
+a contiguous 1-D staging buffer holding one or more gradient leaves of the
+same reduction signature.  Bucket size is a schedule parameter (paper's
+per-key granularity == ``bucket_bytes=0``); hashing buckets to channels
+reproduces ConCom's key→communicator hash.
+
+Leaves are grouped by their *reduction signature* — the tuple of mesh axes
+their gradient must be psum'd over (``missing_axes`` of the param spec) —
+because a single collective can only serve leaves that reduce over the same
+axis group (the MPI analogue: one communicator per process group).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import missing_axes
+from repro.utils.trees import flatten_with_names
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafInfo:
+    name: str
+    index: int          # position in the flat gradient list
+    shape: tuple[int, ...]
+    dtype: Any
+    size: int           # elements
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One communication buffer: a set of leaves reduced by one collective."""
+
+    leaves: tuple[LeafInfo, ...]
+    reduce_axes: tuple[str, ...]   # mesh axes of the psum (the "communicator")
+    channel: int                   # ConCom: which communicator chain
+    bucket_id: int
+
+    @property
+    def size(self) -> int:
+        return sum(l.size for l in self.leaves)
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(l.name for l in self.leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    buckets: tuple[Bucket, ...]
+    treedef: Any
+    num_leaves: int
+    comm_dtype: Any
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(b.size for b in self.buckets) * np.dtype(self.comm_dtype).itemsize
+
+    def channels(self) -> dict[int, list[Bucket]]:
+        out: dict[int, list[Bucket]] = {}
+        for b in self.buckets:
+            out.setdefault(b.channel, []).append(b)
+        return out
+
+
+def make_bucket_plan(
+    grads_like: Any,
+    param_specs: Any,
+    mesh,
+    *,
+    bucket_bytes: int = 4 * 1024 * 1024,
+    num_channels: int = 1,
+    comm_dtype=jnp.float32,
+    reverse: bool = True,
+    exclude_axes: tuple[str, ...] = (),
+) -> BucketPlan:
+    """Build a bucket plan for a gradient pytree.
+
+    Args:
+      grads_like: pytree of arrays or ShapeDtypeStructs (gradient shapes).
+      param_specs: matching pytree of PartitionSpecs for the *params*.
+      mesh: the device mesh (for axis names/sizes).
+      bucket_bytes: max staging-buffer size; 0 → one bucket per leaf
+        (the paper's per-key granularity).
+      num_channels: ConCom communicator count; buckets are round-robin
+        hashed to channels (paper: ``key % num_comms``).
+      reverse: bucket in reverse key order — gradients become ready
+        back-to-front during backprop, so reverse order lets early buckets
+        fill first (overlap-friendly; the paper iterates keys in order
+        because MXNET orders keys input→output, ready order is reversed).
+      exclude_axes: mesh axes some other mechanism reduces (e.g. ZeRO-1's
+        reduce-scatter covers the DP axes) — dropped from reduce sets.
+    """
+    named, treedef = flatten_with_names(grads_like)
+    specs_named, _ = flatten_with_names(param_specs)
+    itemsize = np.dtype(comm_dtype).itemsize
+
+    infos: list[tuple[LeafInfo, tuple[str, ...]]] = []
+    for i, ((name, leaf), (_, spec)) in enumerate(zip(named, specs_named)):
+        axes = missing_axes(spec, mesh)
+        if exclude_axes:
+            axes = tuple(a for a in axes if a not in exclude_axes)
+        if not axes:
+            continue   # nothing to reduce — leaf passes through sync
+        info = LeafInfo(
+            name=name,
+            index=i,
+            shape=tuple(leaf.shape),
+            dtype=leaf.dtype,
+            size=int(np.prod(leaf.shape)) if leaf.shape else 1,
+        )
+        infos.append((info, axes))
+
+    if reverse:
+        infos = infos[::-1]
+
+    # group by reduction signature, then fill size-capped buckets in order
+    buckets: list[Bucket] = []
+    by_axes: dict[tuple[str, ...], list[LeafInfo]] = {}
+    order: list[tuple[str, ...]] = []
+    for info, axes in infos:
+        if axes not in by_axes:
+            by_axes[axes] = []
+            order.append(axes)
+        by_axes[axes].append(info)
+
+    bid = 0
+    for axes in order:
+        cur: list[LeafInfo] = []
+        cur_bytes = 0
+        for info in by_axes[axes]:
+            leaf_bytes = info.size * itemsize
+            if cur and bucket_bytes and cur_bytes + leaf_bytes > bucket_bytes:
+                buckets.append(
+                    Bucket(tuple(cur), axes, bid % num_channels, bid)
+                )
+                bid += 1
+                cur, cur_bytes = [], 0
+            cur.append(info)
+            cur_bytes += leaf_bytes
+            if bucket_bytes == 0 and cur:
+                buckets.append(
+                    Bucket(tuple(cur), axes, bid % num_channels, bid)
+                )
+                bid += 1
+                cur, cur_bytes = [], 0
+        if cur:
+            buckets.append(Bucket(tuple(cur), axes, bid % num_channels, bid))
+            bid += 1
+
+    return BucketPlan(
+        buckets=tuple(buckets),
+        treedef=treedef,
+        num_leaves=len(named),
+        comm_dtype=comm_dtype,
+    )
+
+
+def pack(bucket: Bucket, flat_leaves: Sequence[jax.Array], comm_dtype) -> jax.Array:
+    """CopyFromTo(g, send_buf): stage bucket leaves into one 1-D comm buffer."""
+    parts = [
+        jnp.ravel(flat_leaves[l.index]).astype(comm_dtype) for l in bucket.leaves
+    ]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def unpack(
+    bucket: Bucket, buf: jax.Array, flat_out: list[jax.Array | None]
+) -> None:
+    """CopyFromTo(recv_buf, g): split the reduced buffer back into leaves."""
+    off = 0
+    for l in bucket.leaves:
+        piece = jax.lax.dynamic_slice_in_dim(buf, off, l.size, 0)
+        flat_out[l.index] = piece.reshape(l.shape).astype(l.dtype)
+        off += l.size

@@ -1,0 +1,119 @@
+"""Compressed gradient allreduce (beyond-paper lever, DESIGN.md §3).
+
+int8 block-quantized allreduce with error feedback:
+
+  q = round(g / scale)  per block of 256 elements, scale = max|g|/127
+  allreduce in int16/int32 accumulate (we model as: all_gather int8 shards
+  is wasteful; instead reduce-scatter fp-decoded partials) — on TPU the
+  practical scheme is quantize → reduce-scatter(int8 decoded on the fly is
+  not expressible in one HLO op) — so we use the standard 2-phase scheme:
+
+    (1) reduce_scatter the fp32 buffer shard-wise is what we *replace*;
+        instead each device quantizes its full buffer, all-to-alls int8
+        shards, locally dequantizes+sums, requantizes its reduced shard,
+        and all-gathers int8.
+
+  Wire bytes: 2 × size × 1 byte (vs 2 × size × 4 bytes fp32) → ~4× less
+  collective traffic at the cost of two quantize kernels (Pallas:
+  ``repro/kernels/quantize``).  Error feedback keeps the residual locally
+  and adds it to the next step's gradient (Karimireddy et al., 2019-style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
+    pad = (-x.shape[0]) % mult
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x, pad
+
+
+def quantize_blockwise(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (n,) f32 → (q int8 (n,), scales f32 (n/BLOCK,))."""
+    xb = x.reshape(-1, BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0]
+
+
+def dequantize_blockwise(q: jax.Array, scale: jax.Array) -> jax.Array:
+    qb = q.reshape(-1, BLOCK).astype(jnp.float32)
+    return (qb * scale[:, None]).reshape(-1)
+
+
+def compressed_allreduce(
+    buf: jax.Array, axes: tuple[str, ...], *, group_size: int,
+    inter_axes: tuple[str, ...] = ()
+) -> jax.Array:
+    """Quantized allreduce over ``axes`` (total group size ``group_size``).
+
+    Scheme (ring-equivalent two-phase):
+      quantize → all-to-all int8 shards → local dequant+reduce →
+      requantize shard → all-gather int8 → dequant.
+    Falls back to fp psum when the buffer is too small to shard.
+    """
+    n = buf.shape[0]
+    axis = axes if len(axes) > 1 else axes[0]
+    buf_p, pad = _pad_to(buf, BLOCK * group_size)
+    m = buf_p.shape[0]
+    if m < BLOCK * group_size:
+        return jax.lax.psum(buf, axis)
+
+    # phase 1: everyone quantizes its local gradient, shards go to owners
+    q, s = quantize_blockwise(buf_p)
+    q_sh = q.reshape(group_size, m // group_size)
+    s_sh = s.reshape(group_size, (m // BLOCK) // group_size)
+    # all_to_all over a single flattened group axis
+    q_recv = _all_to_all_grouped(q_sh, axes)      # (group, m/group) int8
+    s_recv = _all_to_all_grouped(s_sh, axes)
+    # phase 2: dequantize each peer's shard and reduce locally
+    deq = jax.vmap(dequantize_blockwise)(
+        q_recv.reshape(group_size, -1), s_recv.reshape(group_size, -1)
+    )
+    red = jnp.sum(deq, axis=0)                     # (m/group,) f32
+    if inter_axes:
+        # hierarchical-compressed: fp psum of the 1/group shard across
+        # the slow axes (pods) — 1/group of the bytes on that tier
+        red = jax.lax.psum(red, inter_axes)
+    # phase 3: requantize the reduced shard, all-gather
+    q2, s2 = quantize_blockwise(red)
+    q_all = _all_gather_grouped(q2, axes)          # (m,) int8
+    s_all = _all_gather_grouped(s2, axes)
+    out = dequantize_blockwise(q_all, s_all)
+    return out[:n] if pad else out
+
+
+def _all_to_all_grouped(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """all_to_all over possibly-multiple mesh axes, splitting dim 0."""
+    if len(axes) == 1:
+        return jax.lax.all_to_all(
+            x, axes[0], split_axis=0, concat_axis=0, tiled=False
+        ).reshape(x.shape)
+    # multi-axis: treat (a0, a1) as one group by chaining
+    out = x
+    # reshape shard dim into (len(a0), len(a1)) blocks handled sequentially
+    out = jax.lax.all_to_all(out, axes, split_axis=0, concat_axis=0, tiled=False)
+    return out.reshape(x.shape)
+
+
+def _all_gather_grouped(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    axis = axes if len(axes) > 1 else axes[0]
+    return jax.lax.all_gather(x, axis, axis=0, tiled=True)
+
+
+def error_feedback_step(
+    grad: jax.Array, residual: jax.Array, sync_fn
+) -> tuple[jax.Array, jax.Array]:
+    """g' = sync(g + r); r' = (g + r) - dequant-roundtrip(g + r)."""
+    corrected = grad + residual
+    synced = sync_fn(corrected)
+    q, s = quantize_blockwise(_pad_to(corrected, BLOCK)[0])
+    approx = dequantize_blockwise(q, s)[: corrected.shape[0]]
+    new_residual = corrected - approx
+    return synced, new_residual

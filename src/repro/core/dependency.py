@@ -1,0 +1,58 @@
+"""Dependency-token engine: MXNET read/write tags → XLA scheduling edges.
+
+MXNET's engine (paper §3.1) orders tasks with explicit read/mutate tags on
+objects; DepCha (paper §4.3) serializes collectives by making each one
+*write* a shared dummy variable — successive writes to one object execute
+in queue order on every worker.
+
+The XLA analogue of "a write to the dummy variable" is an artificial
+dataflow edge, injected with ``jax.lax.optimization_barrier``:  every
+consumer of any barrier output is scheduled after every producer of any
+barrier input.  A tiny scalar *token* threaded through barriers therefore
+reproduces the dummy-variable chain:
+
+  - ``gate(x, token)``        = read-dependency:  x's consumers wait for token
+  - ``update(token, x)``      = mutate-dependency: new token waits for x
+
+Both are free at runtime (the token is a scalar; barriers emit no code) —
+they only constrain the scheduler, exactly like MXNET's tags.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def new_token() -> jax.Array:
+    """A fresh dependency token (the paper's 'dummy' variable)."""
+    return jnp.zeros((), dtype=jnp.float32)
+
+
+def gate(x: Any, token: jax.Array) -> Any:
+    """Return ``x`` such that its consumers are scheduled after ``token``.
+
+    MXNET analogue: push(op, read_deps=[dummy.tag]).
+    """
+    flat, treedef = jax.tree_util.tree_flatten(x)
+    out = jax.lax.optimization_barrier(tuple(flat) + (token,))
+    return jax.tree_util.tree_unflatten(treedef, list(out[:-1]))
+
+
+def update(token: jax.Array, *completed: Any) -> jax.Array:
+    """Return a new token scheduled after all of ``completed``.
+
+    MXNET analogue: push(op, mutate=[dummy.tag]) — the op 'writes' the dummy.
+    """
+    flat: list[Any] = [token]
+    for c in completed:
+        flat.extend(jax.tree_util.tree_leaves(c))
+    out = jax.lax.optimization_barrier(tuple(flat))
+    return out[0]
+
+
+def chain(token: jax.Array, x: Any) -> tuple[Any, jax.Array]:
+    """gate + update in one step: x waits on token; next token waits on x."""
+    gated = gate(x, token)
+    return gated, update(token, gated)

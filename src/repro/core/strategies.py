@@ -1,0 +1,170 @@
+"""The paper's three collective-embedding designs, as HLO schedules.
+
+Every strategy computes the identical reduction (psum of each bucket over
+its reduction axes); they differ ONLY in the dependency structure handed to
+the XLA scheduler — the direct analogue of which MXNET thread issues the
+MPI call (DESIGN.md §2, §3):
+
+  funnel  — ONE token chain through every collective: collective i+1 cannot
+            start before collective i's result exists.  At most one in
+            flight; zero comm/comm overlap.  Paper §4.1.
+  concom  — buckets hashed to `num_channels` chains; chains are mutually
+            independent, so up to `num_channels` collectives fly at once
+            (the OUTSTANDING window of paper Fig 8).  Paper §4.2.
+  depcha  — no post-backward chain at all for scan-resident params (their
+            psums were already emitted inside the backward scan by
+            ``repro.core.overlap``); the leftover (non-scan) buckets are
+            reduced on independent chains like concom.  A dummy-token write
+            chain orders the in-scan collectives.  Paper §4.3.
+
+Beyond-paper reducers (selected via ``reducer=``):
+  flat          — plain psum over all reduction axes (paper's primitive).
+  hierarchical  — 3-stage RS→pod-AR→AG (DESIGN.md: TPU analogue of the
+                  paper's intra-node/inter-node/broadcast split).
+  compressed    — int8 block-quantized wire format (~4x fewer bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dependency as dep
+from repro.core.buckets import Bucket, BucketPlan, pack, unpack
+from repro.core.compression import compressed_allreduce
+from repro.core.hierarchical import flat_allreduce, hierarchical_allreduce
+
+Reducer = Callable[[jax.Array, Bucket], jax.Array]
+
+STRATEGIES = ("funnel", "concom", "depcha")
+REDUCERS = ("flat", "hierarchical", "compressed")
+
+
+def make_reducer(
+    name: str, mesh_shape: dict[str, int], *, mean_axes: tuple[str, ...] = ()
+) -> Reducer:
+    """Build the per-bucket collective. ``mean_axes``: divide by their size
+    (data-parallel mean; the paper's rescale=1/mini_batch_size is applied in
+    the loss instead when ``mean_axes`` is empty)."""
+
+    def scale_of(bucket: Bucket) -> float:
+        n = 1
+        for a in bucket.reduce_axes:
+            if a in mean_axes:
+                n *= mesh_shape[a]
+        return 1.0 / n
+
+    if name == "flat":
+
+        def reduce_flat(buf: jax.Array, bucket: Bucket) -> jax.Array:
+            out = flat_allreduce(buf, bucket.reduce_axes)
+            s = scale_of(bucket)
+            return out * s if s != 1.0 else out
+
+        return reduce_flat
+
+    if name == "hierarchical":
+
+        def reduce_hier(buf: jax.Array, bucket: Bucket) -> jax.Array:
+            axes = bucket.reduce_axes
+            if "pod" in axes and "data" in axes:
+                out = hierarchical_allreduce(
+                    buf,
+                    intra_axis="data",
+                    inter_axis="pod",
+                    intra_size=mesh_shape["data"],
+                )
+                rest = tuple(a for a in axes if a not in ("pod", "data"))
+                if rest:
+                    out = jax.lax.psum(out, rest)
+            else:
+                out = flat_allreduce(buf, axes)
+            s = scale_of(bucket)
+            return out * s if s != 1.0 else out
+
+        return reduce_hier
+
+    if name == "compressed":
+
+        def reduce_comp(buf: jax.Array, bucket: Bucket) -> jax.Array:
+            group = 1
+            for a in bucket.reduce_axes:
+                group *= mesh_shape[a]
+            if group == 1 or buf.shape[0] < 256 * group:
+                out = flat_allreduce(buf, bucket.reduce_axes)
+            else:
+                out = compressed_allreduce(
+                    buf, bucket.reduce_axes, group_size=group
+                )
+            s = scale_of(bucket)
+            return out * s if s != 1.0 else out
+
+        return reduce_comp
+
+    raise ValueError(f"unknown reducer {name!r}, want one of {REDUCERS}")
+
+
+def _sync_chain(
+    buckets: list[Bucket],
+    flat_grads: list[jax.Array],
+    flat_out: list[jax.Array | None],
+    reducer: Reducer,
+    comm_dtype,
+    token: jax.Array,
+) -> jax.Array:
+    """One serialized chain: bucket i+1's collective waits on bucket i's."""
+    for bucket in buckets:
+        send_buf = pack(bucket, flat_grads, comm_dtype)     # CopyFromTo(g, send_buf)
+        send_buf = dep.gate(send_buf, token)                # WaitToRead / read-dep
+        recv_buf = reducer(send_buf, bucket)                # MPI_Allreduce
+        token = dep.update(token, recv_buf)                 # write the dummy var
+        unpack(bucket, recv_buf, flat_out)                  # CopyFromTo(recv, g)
+    return token
+
+
+def sync_grads(
+    grads: Any,
+    plan: BucketPlan,
+    *,
+    strategy: str,
+    reducer: Reducer,
+    skip_names: frozenset[str] = frozenset(),
+) -> Any:
+    """Apply a collective-embedding strategy to a gradient pytree.
+
+    ``skip_names``: leaves already reduced inside the backward (depcha's
+    in-scan psums) — they pass through untouched.
+    """
+    flat_grads = jax.tree_util.tree_leaves(grads)
+    assert len(flat_grads) == plan.num_leaves, (
+        f"plan built for {plan.num_leaves} leaves, got {len(flat_grads)}"
+    )
+    flat_out: list[jax.Array | None] = list(flat_grads)
+
+    live: dict[int, list[Bucket]] = {}
+    for bucket in plan.buckets:
+        keep = [l for l in bucket.leaves if l.name not in skip_names]
+        if not keep:
+            continue
+        b = dataclasses.replace(bucket, leaves=tuple(keep))
+        live.setdefault(bucket.channel, []).append(b)
+
+    if strategy == "funnel":
+        # single chain through ALL buckets regardless of channel
+        token = dep.new_token()
+        all_buckets = [b for ch in sorted(live) for b in live[ch]]
+        _sync_chain(all_buckets, flat_grads, flat_out, reducer,
+                    plan.comm_dtype, token)
+    elif strategy in ("concom", "depcha"):
+        # independent chain per channel → up to num_channels in flight
+        for ch in sorted(live):
+            token = dep.new_token()
+            _sync_chain(live[ch], flat_grads, flat_out, reducer,
+                        plan.comm_dtype, token)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}, want {STRATEGIES}")
+
+    return jax.tree_util.tree_unflatten(plan.treedef, flat_out)

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    ImagePipeline,
+    TokenPipeline,
+    Prefetcher,
+)
+
+__all__ = ["ImagePipeline", "TokenPipeline", "Prefetcher"]

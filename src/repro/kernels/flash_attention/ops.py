@@ -1,0 +1,34 @@
+"""jit'd public wrapper: GQA-shaped (B, S, H, D) API over the MHA kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret",
+                                             "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, interpret: bool = False,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) → (B, S, Hq, D).
+
+    GQA: kv heads are repeated to match q heads before the kernel (the
+    kernel operates per fused batch·head row).
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    o = flash_attention_fwd(qf, kf, vf, causal=causal,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+    return o.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,3 @@
+from repro.kernels.quantize.ops import dequantize_blocks, quantize_blocks
+
+__all__ = ["dequantize_blocks", "quantize_blocks"]

@@ -1,0 +1,29 @@
+"""jit'd wrappers over 1-D buffers (the comm-buf layout GradSync uses)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize.kernel import (
+    BLOCK,
+    dequantize_blocks_kernel,
+    quantize_blocks_kernel,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_blocks(buf: jax.Array, *, interpret: bool = False):
+    """buf: (n,) f32, n % 256 == 0 → (q (n,) int8, scales (n/256,))."""
+    x = buf.reshape(-1, BLOCK)
+    q, s = quantize_blocks_kernel(x, interpret=interpret)
+    return q.reshape(-1), s
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_blocks(q: jax.Array, s: jax.Array, *,
+                      interpret: bool = False):
+    x = dequantize_blocks_kernel(q.reshape(-1, BLOCK), s,
+                                 interpret=interpret)
+    return x.reshape(-1)

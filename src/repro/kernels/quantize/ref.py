@@ -1,0 +1,17 @@
+"""Pure-jnp oracle — mirrors repro.core.compression blockwise math."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (n_blocks, 256) f32 → (int8, scales (n_blocks,))."""
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jax.Array, s: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * s[:, None]

@@ -1,0 +1,3 @@
+from repro.kernels.rwkv6.ops import wkv_chunk
+
+__all__ = ["wkv_chunk"]

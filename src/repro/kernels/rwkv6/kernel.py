@@ -1,0 +1,84 @@
+"""RWKV-6 chunked-WKV Pallas TPU kernel (one chunk step).
+
+The inner loop of ``repro.models.rwkv.wkv_chunked``: per (batch·head) the
+chunk computes the intra-chunk decay-weighted attention, the inter-chunk
+state read, and the state update — all in VMEM (C ≤ 64, N = 64: every
+tile is ≤ 64×64 f32).  Grid = (BH,), one program per head-row.
+
+  y[t] = (r_t · W_{t-1}) S0 + Σ_{s<t} (r_t · W_{t-1}/W_s · k_s) v_s
+         + (r_t · u·k_t) v_t
+  S1   = D(W_C) S0 + Σ_s D(W_C/W_s) k_s v_s^T
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+                y_ref, s1_ref):
+    r = r_ref[0].astype(jnp.float32)      # (C, N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)    # (C, N), log-decay <= 0
+    u = u_ref[0].astype(jnp.float32)      # (1, N) bonus
+    s0 = s0_ref[0].astype(jnp.float32)    # (N, N)
+
+    C = r.shape[0]
+    L = jnp.cumsum(lw, axis=0)            # (C, N)
+    Lprev = L - lw
+
+    r_dec = r * jnp.exp(Lprev)
+    y = jax.lax.dot_general(               # inter-chunk read
+        r_dec, s0, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    att = jax.lax.dot_general(             # intra-chunk scores
+        r_dec, k * jnp.exp(-L), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    att = jnp.where(s_idx < t_idx, att, 0.0)
+    diag = jnp.sum(r * (u * k), axis=1)    # bonus
+    y = y + jax.lax.dot_general(
+        att, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y = y + diag[:, None] * v
+
+    wc = L[C - 1]                           # (N,)
+    k_dec = k * jnp.exp(wc[None, :] - L)
+    s1 = s0 * jnp.exp(wc)[:, None] + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+    s1_ref[0] = s1
+
+
+def wkv_chunk_kernel(r, k, v, logw, u, state, *, interpret: bool = False):
+    """r,k,v,logw: (BH, C, N); u: (BH, 1, N); state: (BH, N, N).
+    Returns (y (BH, C, N) f32, new state (BH, N, N) f32)."""
+    BH, C, N = r.shape
+    return pl.pallas_call(
+        _wkv_kernel,
+        grid=(BH,),
+        in_specs=[
+            pl.BlockSpec((1, C, N), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, C, N), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, C, N), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, C, N), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1, N), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, N, N), lambda b: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, N), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, N, N), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, C, N), jnp.float32),
+            jax.ShapeDtypeStruct((BH, N, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, logw, u, state)

@@ -1,0 +1,24 @@
+"""jit'd wrapper for the RWKV-6 chunk kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv_chunk_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv_chunk(r, k, v, logw, u, state, *, interpret: bool = False):
+    """One WKV chunk.  r,k,v,logw: (B, C, H, N); u: (H, N);
+    state: (B, H, N, N) → (y (B,C,H,N) f32, new state)."""
+    B, C, H, N = r.shape
+    def flat(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, C, N)
+    u_b = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, 1, N)
+    y, s1 = wkv_chunk_kernel(
+        flat(r), flat(k), flat(v), flat(logw), u_b,
+        state.reshape(B * H, N, N), interpret=interpret)
+    return (y.reshape(B, H, C, N).transpose(0, 2, 1, 3),
+            s1.reshape(B, H, N, N))

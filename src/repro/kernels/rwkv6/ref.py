@@ -1,0 +1,27 @@
+"""Sequential-recurrence oracle for the WKV chunk kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, logw, u, state):
+    """Step-by-step recurrence.  r,k,v,logw: (BH, C, N); u: (BH, 1, N);
+    state: (BH, N, N).  Returns (y (BH,C,N) f32, final state)."""
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    logw = logw.astype(jnp.float32)
+    u = u.astype(jnp.float32)[:, 0]
+
+    def step(S, xs):
+        rt, kt, vt, lwt = xs                       # (BH, N)
+        # y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+        kv = kt[:, :, None] * vt[:, None, :]       # (BH, N, N)
+        y = jnp.einsum("bn,bnm->bm", rt, S + u[:, :, None] * kv)
+        S = S * jnp.exp(lwt)[:, :, None] + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    S, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), S

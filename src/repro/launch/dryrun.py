@@ -1,0 +1,421 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+  - the sharding config is coherent (SPMD partitioning succeeds),
+  - the program compiles (no unsupported collective / shape mismatch),
+  - memory_analysis() shows the per-device footprint,
+  - cost_analysis() + the HLO collective schedule feed §Roofline.
+
+Results append incrementally to a JSON file (compiles are minutes each on
+one CPU core; a crash loses nothing).  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k --mesh single --out results/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    decode_state_structs,
+    get_arch,
+    image_input_specs,
+    param_structs,
+    train_input_specs,
+    ARCHS,
+)
+from repro.core import GradSyncConfig
+from repro.launch.mesh import make_production_mesh, mesh_shape_dict
+from repro.models.registry import family_of
+from repro.optim import adamw, sgd
+from repro.parallel.sharding import batch_spec, dp_axes_of
+from repro.runtime.train_loop import make_train_step, _batch_specs
+
+_COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=\s*([a-z0-9\[\],{} ]+)", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_stats(hlo_text: str) -> list[dict]:
+    """Parse per-op collective operand bytes + group size from HLO text."""
+    out = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(
+            r"%?[\w.-]+\s*=\s*(\([^)]*\)|[a-z0-9\[\],{} ]+)\s*"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?", line)
+        if not m or (m.group(3) == "-done"):
+            continue
+        kind = m.group(2)
+        tys = m.group(1)
+        bytes_total = 0
+        for dt, dims in _SHAPE_RE.findall(tys):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d.strip():
+                    n *= int(d)
+            bytes_total += n * _DTYPE_BYTES[dt]
+        g = _GROUPS_RE.search(line)
+        group = len(g.group(1).split(",")) if g else 0
+        out.append({"kind": kind, "result_bytes": bytes_total,
+                    "group_size": group})
+    return out
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _delta_unroll_chunks(arch) -> bool:
+    """Unroll chunk scans in the delta compiles?  Transformer kv-chunk
+    loops are short (<=32 trips) → unroll for exact attention accounting.
+    rwkv/ssm recurrence loops are long (T up to 128) → keep rolled; their
+    bodies hold no collectives, and the flop contribution is added
+    analytically in benchmarks/roofline.py (§Roofline methodology)."""
+    return arch.family not in ("rwkv", "ssm")
+
+
+def _lower_for(arch, cfg, shape, mesh, sync, api, rules, step_kw=None):
+    """Build + lower the cell's step function for a given config."""
+    dp = dp_axes_of(mesh)
+    params_sds = param_structs(cfg)
+    pspecs = rules.tree_specs(params_sds)
+    step_kw = step_kw or {}
+    if shape.kind == "train":
+        if arch.family in ("resnet", "inception"):
+            batch_sds = image_input_specs(cfg, shape)
+            opt = sgd(0.1, momentum=0.9)
+        else:
+            batch_sds = train_input_specs(arch, cfg, shape)
+            opt = adamw(3e-4)
+        ts = make_train_step(cfg, mesh, sync, opt,
+                             batch_like=batch_sds, params_like=params_sds,
+                             donate=False, **step_kw)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        args = (params_sds, opt_sds, batch_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        lowered = ts.fn.lower(*args)
+    elif shape.kind == "prefill":
+        GB, S = shape.global_batch, shape.seq_len
+        bspec = batch_spec(mesh)
+        extras = {
+            name: jax.ShapeDtypeStruct((GB, *shape_fn(cfg, S)), dt)
+            for name, shape_fn, dt in arch.extra_inputs}
+
+        def prefill_fn(params, tokens, extras):
+            kw = {}
+            if "img_embeds" in extras:
+                kw["img_embeds"] = extras["img_embeds"]
+            if "frame_embeds" in extras:
+                kw["frame_embeds"] = extras["frame_embeds"]
+            logits, cache = api.prefill(params, tokens, cfg, **kw) \
+                if kw else api.prefill(params, tokens, cfg)
+            return logits, cache
+
+        batch_entry = tuple(dp) if len(dp) > 1 else (dp[0] if dp else None)
+        cspecs = api.decode_state_specs(cfg, batch_entry)
+        espec = {k: bspec for k in extras}
+        lspec = P(batch_entry, "model")   # logits: (B, V/tp) vocab-sharded
+        fn = jax.jit(jax.shard_map(
+            prefill_fn, mesh=mesh,
+            in_specs=(pspecs, bspec, espec),
+            out_specs=(lspec, cspecs),
+            check_vma=False))
+        lowered = fn.lower(
+            params_sds, jax.ShapeDtypeStruct((GB, S), jnp.int32), extras)
+    elif shape.kind == "decode":
+        GB, S = shape.global_batch, shape.seq_len
+        dp_size = int(np.prod([mesh.shape[a] for a in dp])) or 1
+        if GB % dp_size:
+            # batch=1 long-context decode: no DP to exploit — replicate
+            # over the data axes (honest idle-chip finding; SP is the
+            # §Perf lever), shard only over "model".
+            bspec = P(None)
+        else:
+            bspec = batch_spec(mesh)
+        state_sds, cspecs = decode_state_structs(
+            arch, cfg, shape, mesh, replicate_batch=bool(GB % dp_size))
+        extras = {
+            name: jax.ShapeDtypeStruct((GB, *shape_fn(cfg, S)), dt)
+            for name, shape_fn, dt in arch.extra_inputs
+            if name == "img_embeds"}   # decode conditions on images only
+
+        def decode_fn(params, state, tok, pos, extras):
+            kw = {"img_embeds": extras["img_embeds"]} if extras else {}
+            logits, new_state = api.decode_step(
+                params, state, tok, pos, cfg, **kw) \
+                if kw else api.decode_step(params, state, tok, pos, cfg)
+            return logits, new_state
+
+        espec = {k: bspec for k in extras}
+        lspec = P(bspec[0] if len(bspec) else None, "model")
+        fn = jax.jit(jax.shard_map(
+            decode_fn, mesh=mesh,
+            in_specs=(pspecs, cspecs, bspec, P(), espec),
+            out_specs=(lspec, cspecs),
+            check_vma=False))
+        lowered = fn.lower(
+            params_sds, state_sds,
+            jax.ShapeDtypeStruct((GB,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32), extras)
+    else:
+        raise ValueError(shape.kind)
+    return lowered
+
+
+def _cost_record(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = collective_stats(hlo)
+    return {
+        "flops": float(cost.get("flops", -1)) if cost else None,
+        "bytes_accessed": float(cost.get("bytes accessed", -1))
+        if cost else None,
+        "collectives": _summarize(colls),
+    }
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, *,
+               sync: GradSyncConfig | None = None,
+               overrides: dict | None = None) -> dict[str, Any]:
+    """Lower+compile one cell; returns the §Dry-run/§Roofline record.
+
+    Two extra reduced-depth compiles (layer_pair, chunk scans unrolled)
+    give exact HLO cost accounting: XLA's cost_analysis counts a scan
+    body ONCE, so totals are reconstructed as
+        f(L_small) + m · (f(L_large) − f(L_small)).
+    """
+    arch = get_arch(arch_id)
+    shape = arch.shape(shape_name)
+    if not shape.applicable:
+        return {"arch": arch_id, "shape": shape_name, "status": "skipped",
+                "note": shape.note}
+    dp = dp_axes_of(mesh)
+    tp = mesh_shape_dict(mesh).get("model", 1)
+    sync = sync or GradSyncConfig(strategy="depcha", num_channels=4)
+    over = dict(overrides or {})
+    step_kw = {}
+    for k in ("microbatch",):
+        if k in over:
+            step_kw[k] = over.pop(k)
+    base_cfg_probe = arch.make_config(tp=tp, dp_axes=dp)
+    if shape.kind == "train" and sync.strategy == "depcha" \
+            and hasattr(base_cfg_probe, "depcha_in_scan"):
+        over.setdefault("depcha_in_scan", True)
+    cfg = arch.make_config(tp=tp, dp_axes=dp, **over)
+    api = family_of(cfg)
+    rules = api.param_rules(cfg)
+    t0 = time.time()
+
+    lowered = _lower_for(arch, cfg, shape, mesh, sync, api, rules, step_kw)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = collective_stats(hlo)
+
+    # ---- exact-cost delta compiles (reduced depth, chunk scans unrolled)
+    scaling = None
+    if arch.layer_pair is not None:
+        l_small, l_large, unit = arch.layer_pair
+        mult = (cfg.n_layers - l_small) / unit
+        recs = {}
+        for L in (l_small, l_large):
+            cfg_l = arch.make_config(
+                tp=tp, dp_axes=dp,
+                **{**over, "n_layers": L,
+                   "chunk_unroll": _delta_unroll_chunks(arch),
+                   "scan_unroll": max(L, 2)})
+            low = _lower_for(arch, cfg_l, shape, mesh, sync,
+                             family_of(cfg_l), api.param_rules(cfg_l),
+                             step_kw)
+            recs[L] = _cost_record(low.compile())
+        scaling = {"l_small": l_small, "l_large": l_large,
+                   "multiplier": mult,
+                   "chunks_unrolled": _delta_unroll_chunks(arch),
+                   "small": recs[l_small], "large": recs[l_large]}
+
+    def _mem_field(name):
+        v = getattr(mem, name, None)
+        return int(v) if v is not None else None
+
+    record = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "axes": list(mesh.axis_names),
+        "status": "ok",
+        "kind": shape.kind,
+        "strategy": sync.strategy,
+        "reducer": sync.reducer,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": _mem_field("argument_size_in_bytes"),
+            "output_bytes": _mem_field("output_size_in_bytes"),
+            "temp_bytes": _mem_field("temp_size_in_bytes"),
+            "generated_code_bytes": _mem_field(
+                "generated_code_size_in_bytes"),
+        },
+        "cost": {
+            "flops": float(cost.get("flops", -1)) if cost else None,
+            "bytes_accessed": float(cost.get("bytes accessed", -1))
+            if cost else None,
+        },
+        "collectives": _summarize(colls),
+        "scaling": scaling,
+    }
+    return record
+
+
+def _prefill_cache_specs(api, cfg, batch_entry):
+    """Prefill returns full-seq caches; same specs as decode state but the
+    rwkv/ssm prefill returns layer-stacked state dicts of the same form."""
+    return api.decode_state_specs(cfg, batch_entry)
+
+
+def _summarize(colls: list[dict]) -> dict:
+    agg: dict[str, dict] = {}
+    for c in colls:
+        a = agg.setdefault(c["kind"], {"count": 0, "result_bytes": 0})
+        a["count"] += 1
+        a["result_bytes"] += c["result_bytes"]
+    agg["ops"] = colls[:400]
+    return agg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    help="single | multi | both | DxM (e.g. 64x4)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--strategy", default="depcha")
+    ap.add_argument("--reducer", default="flat")
+    ap.add_argument("--bucket-mb", type=float, default=4.0)
+    ap.add_argument("--comm-dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--channels", type=int, default=4)
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides k=v (e.g. remat=full)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    sync = GradSyncConfig(
+        strategy=args.strategy, reducer=args.reducer,
+        bucket_bytes=int(args.bucket_mb * 1024 * 1024),
+        num_channels=args.channels,
+        comm_dtype=jnp.bfloat16 if args.comm_dtype == "bf16"
+        else jnp.float32)
+
+    cells = []
+    arch_ids = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    for aid in arch_ids:
+        arch = ARCHS[aid]
+        names = [s.name for s in arch.shapes] \
+            if (args.all or not args.shape) else [args.shape]
+        for sn in names:
+            cells.append((aid, sn))
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+    if args.mesh.count("x") == 1:   # e.g. --mesh 64x4: same 256 chips,
+        import jax                   # different (data, model) factorization
+        from jax.sharding import AxisType
+        d_, m_ = (int(v) for v in args.mesh.split("x"))
+        alt = jax.make_mesh((d_, m_), ("data", "model"),
+                            axis_types=(AxisType.Auto,) * 2)
+        meshes.append((args.mesh, alt))
+    if args.mesh.count("x") == 2:   # e.g. --mesh 4x16x16: N-pod mesh
+        import jax                   # (needs XLA_FLAGS device count >= P*D*M)
+        from jax.sharding import AxisType
+        p_, d_, m_ = (int(v) for v in args.mesh.split("x"))
+        alt = jax.make_mesh((p_, d_, m_), ("pod", "data", "model"),
+                            axis_types=(AxisType.Auto,) * 3)
+        meshes.append((args.mesh, alt))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r.get("mesh_name"), r.get("tag", ""),
+             r.get("strategy"), r.get("reducer"))
+            for r in results}
+
+    for mesh_name, mesh in meshes:
+        for aid, sn in cells:
+            key = (aid, sn, mesh_name, args.tag, args.strategy, args.reducer)
+            if key in done:
+                print(f"[dryrun] SKIP (cached) {aid} {sn} {mesh_name}")
+                continue
+            print(f"[dryrun] {aid} × {sn} × {mesh_name} ...", flush=True)
+            try:
+                rec = lower_cell(aid, sn, mesh, sync=sync,
+                                 overrides=overrides)
+            except Exception as e:
+                rec = {"arch": aid, "shape": sn, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+            rec["mesh_name"] = mesh_name
+            rec["tag"] = args.tag
+            rec.setdefault("strategy", args.strategy)
+            rec.setdefault("reducer", args.reducer)
+            results.append(rec)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+            status = rec["status"]
+            extra = (f" compile={rec.get('compile_s')}s"
+                     if status == "ok" else
+                     f" {rec.get('error', rec.get('note', ''))[:120]}")
+            print(f"[dryrun]   -> {status}{extra}", flush=True)
+
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    er = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] total: {ok} ok, {sk} skipped, {er} error")
+    return 1 if er else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,28 @@
+"""Production meshes.  Functions, not module-level constants — importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests; axes always present so all collective code
+    paths run (psum over size-1 axes is the identity)."""
+    n = data * model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(AxisType.Auto,) * 2,
+        devices=jax.devices()[:n])
+
+
+def mesh_shape_dict(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,102 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --steps 100 --strategy depcha [--smoke]
+
+``--smoke`` runs the arch's reduced config on the local device mesh (the
+CPU-runnable path); without it the full config targets the production
+mesh (requires a real 256-chip slice — on this container use
+``repro.launch.dryrun`` instead, which AOT-compiles the same program).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch
+from repro.core import GradSyncConfig
+from repro.data import ImagePipeline, TokenPipeline
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.models.registry import family_of
+from repro.optim import adamw, cosine_warmup, sgd, zero1
+from repro.parallel.sharding import dp_axes_of
+from repro.runtime import Trainer, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--strategy", default="depcha",
+                    choices=["funnel", "concom", "depcha"])
+    ap.add_argument("--reducer", default="flat",
+                    choices=["flat", "hierarchical", "compressed"])
+    ap.add_argument("--channels", type=int, default=4)
+    ap.add_argument("--bucket-mb", type=float, default=4.0)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    if args.smoke:
+        mesh = make_smoke_mesh(1, 1)
+        cfg = arch.make_smoke()
+        seq, batch = args.seq, args.batch
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        cfg = arch.make_config(
+            tp=mesh.shape["model"], dp_axes=dp_axes_of(mesh),
+            depcha_in_scan=(args.strategy == "depcha"))
+        shape = arch.shapes[0]
+        seq, batch = shape.seq_len, shape.global_batch
+
+    api = family_of(cfg)
+    if arch.family in ("resnet", "inception"):
+        pipe = ImagePipeline(cfg.img_size, cfg.num_classes, batch,
+                             mesh=mesh)
+        opt = sgd(cosine_warmup(args.lr, 10, args.steps), momentum=0.9)
+    else:
+        extras = {
+            name: (tuple(shape_fn(cfg, seq)), jnp.float32)
+            for name, shape_fn, _ in arch.extra_inputs}
+        pipe = TokenPipeline(cfg.vocab, seq, batch, mesh=mesh,
+                             extra_specs=extras)
+        opt = adamw(cosine_warmup(args.lr, 10, args.steps))
+    if args.zero1:
+        import numpy as np
+
+        dp = dp_axes_of(mesh)
+        dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+        opt = zero1(opt, dp, dp_size)
+
+    sync = GradSyncConfig(
+        strategy=args.strategy, reducer=args.reducer,
+        bucket_bytes=int(args.bucket_mb * 1024 * 1024),
+        num_channels=args.channels,
+        exclude_axes=dp_axes_of(mesh) if args.zero1 else ())
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    ts = make_train_step(cfg, mesh, sync, opt,
+                         batch_like=pipe.batch_at(0), params_like=params,
+                         zero1_mode=args.zero1,
+                         microbatch=args.microbatch)
+    ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) \
+        if args.ckpt_dir else None
+    trainer = Trainer(ts, pipe, ckpt, log_every=10)
+    _, _, hist = trainer.run(params, opt.init(params), args.steps)
+    print(f"[train] {args.arch} {args.strategy}: "
+          f"loss {hist['losses'][0]:.3f} -> {hist['losses'][-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.registry import FAMILIES, ModelAPI, family_of
+
+__all__ = ["FAMILIES", "ModelAPI", "family_of"]

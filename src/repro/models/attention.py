@@ -1,0 +1,139 @@
+"""Attention: chunked online-softmax (memory-safe reference path).
+
+The pure-jnp chunked implementation is the portable path (and the AD path);
+``repro.kernels.flash_attention`` is the Pallas TPU kernel with the same
+math, validated against this reference.  Supports causal, sliding-window
+(h2o-danube), cross-attention (llama-vision) and single-token decode
+against a KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(
+    q_pos: jax.Array,       # (Sq,) int32 — absolute positions of queries
+    k_pos: jax.Array,       # (Ck,) int32 — absolute positions of keys
+    causal: bool,
+    window: Optional[int],
+    kv_len: Optional[jax.Array],   # dynamic valid-length of the kv cache
+) -> jax.Array:
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        m &= k_pos[None, :] < kv_len
+    return m
+
+
+def attention(
+    q: jax.Array,                 # (B, Sq, Hq, D)
+    k: jax.Array,                 # (B, Sk, Hkv, D)
+    v: jax.Array,                 # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int | jax.Array = 0,
+    kv_len: Optional[jax.Array] = None,
+    chunk: int = 1024,
+    use_flash: bool = False,
+    unroll_all: bool = False,
+) -> jax.Array:
+    """Grouped-query attention with online softmax over KV chunks.
+
+    ``q_offset``: absolute position of q[0] (decode: the cache length).
+    ``kv_len``: dynamic number of valid kv positions (decode with a
+    fixed-size cache).  Returns (B, Sq, Hq, D).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    rep = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+
+    if use_flash and causal and window is None and kv_len is None and Sq == Sk:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        return flash_attention(q, k, v, causal=True)
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, rep, D)
+    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+
+    chunk = min(chunk, Sk)
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_valid = jnp.minimum(
+            kv_len if kv_len is not None else jnp.int32(Sk), Sk
+        )
+    else:
+        kv_valid = kv_len
+
+    kc = k.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        acc, m_run, l_run = carry
+        kci, vci, ci = xs
+        k_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        # scores: (B, Sq, Hkv, rep, chunk)
+        s = jnp.einsum(
+            "bqhrd,bchd->bqhrc", qf, kci.astype(jnp.float32)
+        )
+        msk = _mask(q_pos, k_pos, causal, window,
+                    kv_valid if (kv_valid is not None or pad) else None)
+        s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqhrc,bchd->bqhrd", p, vci.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Sq, Hkv, rep, D), jnp.float32)
+    m0 = jnp.full((B, Sq, Hkv, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, rep), jnp.float32)
+    (acc, m_run, l_run), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32)),
+        unroll=n_chunks if unroll_all else 1,
+    )
+    l_safe = jnp.where(l_run > 0, l_run, 1.0)
+    out = acc / l_safe[..., None]
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, Hq, D)
+    k_cache: jax.Array,      # (B, Smax, Hkv, D)
+    v_cache: jax.Array,
+    kv_len: jax.Array,       # scalar int32: valid cache length (incl. new tok)
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Single-token decode: dense masked attention over the cache (the
+    score row is (B, Hq, Smax) — tiny; no chunking needed)."""
+    B, _, Hq, D = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    rep = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, rep, D)
+    s = jnp.einsum("bhrd,bshd->bhrs", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(Smax, dtype=jnp.int32)
+    valid = pos < kv_len
+    if window is not None:
+        valid &= pos > (kv_len - 1) - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrs,bshd->bhrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)

@@ -1,0 +1,180 @@
+"""Shared model building blocks, written for execution INSIDE shard_map.
+
+All layers operate on *local shards* and emit their tensor-parallel
+collectives explicitly (DESIGN.md §5) — the framework, not XLA's sharding
+propagation, owns the collective schedule (that is the paper's subject).
+
+Conventions:
+  - "model" mesh axis = tensor parallel (TP); size available via cfg.tp.
+  - Activations between blocks are replicated across "model".
+  - Column-parallel weights: stored P(..., "model") — local matmul.
+  - Row-parallel weights: stored P("model", ...) — local matmul + psum.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MODEL_AXIS = "model"
+
+
+# ---------------------------------------------------------------- numerics
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions: (...,) int → cos/sin (..., head_dim/2) f32."""
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (S, D/2) or (B, S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+# -------------------------------------------------------------- init utils
+def dense_init(rng, shape, in_dim: int, dtype) -> jax.Array:
+    std = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_rngs(rng, n: int):
+    return list(jax.random.split(rng, n))
+
+
+# -------------------------------------------------- TP matmuls (explicit)
+def col_parallel(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x replicated, w column-sharded → output sharded (no collective)."""
+    return x @ w
+
+
+def row_parallel(x_sharded: jax.Array, w: jax.Array) -> jax.Array:
+    """x sharded on contraction dim, w row-sharded → psum over model."""
+    return jax.lax.psum(x_sharded @ w, MODEL_AXIS)
+
+
+# -------------------------------------------- vocab-sharded embedding/loss
+def embed_lookup(emb_local: jax.Array, ids: jax.Array, tp: int) -> jax.Array:
+    """emb_local: (V/tp, d); ids: (B, S) global vocab ids → (B, S, d).
+
+    Each device looks up ids inside its vocab shard (others → 0), psum
+    rebuilds the full embedding.  No gather of a global table — matters at
+    vocab 256k (minitron) / 164k (kimi).
+    """
+    v_local = emb_local.shape[0]
+    start = jax.lax.axis_index(MODEL_AXIS) * v_local
+    local_ids = ids - start
+    in_shard = (local_ids >= 0) & (local_ids < v_local)
+    safe = jnp.where(in_shard, local_ids, 0)
+    out = jnp.take(emb_local, safe, axis=0)
+    out = jnp.where(in_shard[..., None], out, 0)
+    return jax.lax.psum(out, MODEL_AXIS) if tp > 1 else out
+
+
+def sharded_softmax_xent(
+    logits_local: jax.Array, labels: jax.Array, tp: int
+) -> jax.Array:
+    """Cross-entropy over vocab sharded on the model axis.
+
+    logits_local: (B, S, V/tp) f32; labels: (B, S) global ids.
+    Returns per-token loss (B, S) — never materializes the full vocab.
+    """
+    logits_local = logits_local.astype(jnp.float32)
+    v_local = logits_local.shape[-1]
+    local_max = jnp.max(logits_local, axis=-1)
+    # shift is only for numerical stability — exact to stop-grad (xent is
+    # shift-invariant), and pmax has no AD rule anyway
+    local_max = jax.lax.stop_gradient(local_max)
+    gmax = jax.lax.pmax(local_max, MODEL_AXIS) if tp > 1 else local_max
+    shifted = logits_local - gmax[..., None]
+    local_sumexp = jnp.sum(jnp.exp(shifted), axis=-1)
+    sumexp = jax.lax.psum(local_sumexp, MODEL_AXIS) if tp > 1 else local_sumexp
+    start = jax.lax.axis_index(MODEL_AXIS) * v_local
+    local_ids = labels - start
+    in_shard = (local_ids >= 0) & (local_ids < v_local)
+    safe = jnp.where(in_shard, local_ids, 0)
+    true_logit = jnp.take_along_axis(shifted, safe[..., None], axis=-1)[..., 0]
+    true_logit = jnp.where(in_shard, true_logit, 0.0)
+    if tp > 1:
+        true_logit = jax.lax.psum(true_logit, MODEL_AXIS)
+    return jnp.log(sumexp) - true_logit
+
+
+# ------------------------------------------------------------ GQA helpers
+@dataclasses.dataclass(frozen=True)
+class HeadLayout:
+    """How q and kv heads distribute over the TP axis (DESIGN.md §5).
+
+    When kv_heads < tp, each device *slices* the replicated kv projection to
+    the kv head(s) its local q heads read (grad correctness falls out of the
+    slice transpose + model-axis psum of replicated-param grads).
+    """
+
+    n_heads: int          # possibly padded up to a multiple of tp
+    kv_heads: int
+    head_dim: int
+    tp: int
+
+    @property
+    def q_local(self) -> int:
+        return self.n_heads // self.tp
+
+    @property
+    def group(self) -> int:          # q heads per kv head
+        return self.n_heads // self.kv_heads
+
+    @property
+    def kv_sharded(self) -> bool:
+        return self.kv_heads >= self.tp
+
+    @property
+    def kv_local(self) -> int:
+        if self.kv_sharded:
+            return self.kv_heads // self.tp
+        return max(self.q_local // self.group, 1)
+
+    def kv_slice_start(self) -> jax.Array:
+        """First kv head this device needs (only when not kv_sharded)."""
+        idx = jax.lax.axis_index(MODEL_AXIS)
+        return (idx * self.q_local) // self.group
+
+
+def pad_heads(n_heads: int, tp: int) -> int:
+    """Round up so heads shard evenly (starcoder2: 24 → 32 on tp=16)."""
+    return int(-(-n_heads // tp) * tp)

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN with expert parallelism over the "model" axis.
+
+Activations are replicated across TP inside a block (DESIGN.md §5), so
+dispatch needs NO collective: every device routes all local tokens, keeps
+the slots bound for its own expert shard, runs its experts, and a single
+psum(model) combines contributions — the same wire cost as one
+row-parallel matmul.  Token→slot assignment is sort-based (no (T, E, C)
+one-hot cube; kimi-k2 is 384 experts × 64k tokens/device).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ACTIVATIONS, MODEL_AXIS, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    num_experts: int
+    top_k: int
+    d_expert: int
+    shared_experts: int = 0      # dense experts always active (kimi-k2: 1)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+def capacity(tokens: int, cfg: MoECfg) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(c, 4)
+
+
+def moe_ffn(
+    p: dict[str, jax.Array],
+    x: jax.Array,                # (T, d) local tokens, replicated over model
+    cfg: MoECfg,
+    tp: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (out (T, d), aux_loss scalar)."""
+    T, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    e_local = E // tp if tp > 1 else E
+    C = capacity(T, cfg)
+
+    # ---- route (replicated) ----
+    logits = (x.astype(jnp.float32)) @ p["router"].astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)                     # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)                                        # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        jnp.ones((T * K,), jnp.float32)
+    ) / (T * K)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- sort-based slot assignment ----
+    flat_e = expert_ids.reshape(-1)                                     # (T*K,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_e = jnp.arange(T * K, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = pos_in_e < C
+    # scatter token rows into this device's expert slots
+    start = jax.lax.axis_index(MODEL_AXIS) * e_local if tp > 1 else 0
+    local_e = sorted_e - start
+    mine = keep & (local_e >= 0) & (local_e < e_local)
+    slot = jnp.where(mine, local_e * C + pos_in_e, e_local * C)         # drop
+    tok = (order // K).astype(jnp.int32)
+    buf = jnp.zeros((e_local * C, d), x.dtype)
+    buf = buf.at[slot].add(
+        jnp.where(mine[:, None], x[tok], 0), mode="drop"
+    )
+    h = buf.reshape(e_local, C, d)
+
+    # ---- expert FFN (E_local, C, d) ----
+    if "w_up" in p:   # gated (SwiGLU) experts
+        g = jnp.einsum("ecd,edf->ecf", h, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", h, p["w_up"].astype(x.dtype))
+        a = swiglu(g, u)
+    else:
+        a = ACTIVATIONS["gelu"](
+            jnp.einsum("ecd,edf->ecf", h, p["w_gate"].astype(x.dtype))
+        )
+    y = jnp.einsum("ecf,efd->ecd", a, p["w_down"].astype(x.dtype))
+    y = y.reshape(e_local * C, d)
+
+    # ---- combine: gather slots back to (T*K), weight by gate, segment-sum
+    gathered = jnp.where(
+        mine[:, None],
+        jnp.take(y, jnp.minimum(slot, e_local * C - 1), axis=0),
+        0,
+    )
+    gates_sorted = gate_vals.reshape(-1)[order]
+    contrib = gathered * gates_sorted[:, None].astype(gathered.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[tok].add(contrib)
+    if tp > 1:
+        out = jax.lax.psum(out, MODEL_AXIS)        # sum over expert shards
+        aux = aux  # aux identical on all model-ranks (replicated routing)
+
+    # ---- shared (always-on) experts, row/col TP like a dense MLP ----
+    if cfg.shared_experts and "ws_g" in p:
+        a = swiglu(x @ p["ws_g"].astype(x.dtype),
+                   x @ p["ws_u"].astype(x.dtype))  # col-parallel pair
+        shared = a @ p["ws_down"].astype(x.dtype)  # row-parallel
+        shared = jax.lax.psum(shared, MODEL_AXIS) if tp > 1 else shared
+        out = out + shared
+    return out, aux

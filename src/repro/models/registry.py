@@ -1,0 +1,107 @@
+"""Uniform model-family API: every family exposes the same six hooks so
+the launcher / dry-run / train loop are family-agnostic."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import resnet as resnet_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tf_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    family: str
+    init: Callable[..., Any]
+    param_rules: Callable[[Any], Any]
+    in_scan_names: Callable[[Any], frozenset[str]]
+    train_forward: Callable[..., jax.Array]
+    prefill: Optional[Callable[..., Any]] = None
+    decode_step: Optional[Callable[..., Any]] = None
+    make_decode_state: Optional[Callable[..., Any]] = None
+    decode_state_specs: Optional[Callable[..., Any]] = None
+
+
+def _tf_make_state(cfg, batch, max_len):
+    # sliding-window archs: ring cache bounded at the window size
+    if getattr(cfg, "swa_window", None):
+        max_len = min(max_len, cfg.swa_window)
+    return tf_lib.make_cache(cfg, batch, max_len)
+
+
+def _rwkv_make_state(cfg, batch, max_len):
+    return rwkv_lib.make_state(cfg, batch)
+
+
+def _ssm_make_state(cfg, batch, max_len):
+    return ssm_lib.make_state(cfg, batch, attn_window=min(max_len, 4096))
+
+
+FAMILIES: dict[str, ModelAPI] = {
+    "transformer": ModelAPI(
+        family="transformer",
+        init=tf_lib.init_params,
+        param_rules=tf_lib.param_rules,
+        in_scan_names=tf_lib.in_scan_param_names,
+        train_forward=tf_lib.train_forward,
+        prefill=tf_lib.prefill,
+        decode_step=tf_lib.decode_step,
+        make_decode_state=_tf_make_state,
+        decode_state_specs=tf_lib.decode_state_specs,
+    ),
+    "rwkv": ModelAPI(
+        family="rwkv",
+        init=rwkv_lib.init_params,
+        param_rules=rwkv_lib.param_rules,
+        in_scan_names=rwkv_lib.in_scan_param_names,
+        train_forward=rwkv_lib.train_forward,
+        prefill=rwkv_lib.prefill,
+        decode_step=rwkv_lib.decode_step,
+        make_decode_state=_rwkv_make_state,
+        decode_state_specs=rwkv_lib.decode_state_specs,
+    ),
+    "ssm": ModelAPI(
+        family="ssm",
+        init=ssm_lib.init_params,
+        param_rules=ssm_lib.param_rules,
+        in_scan_names=ssm_lib.in_scan_param_names,
+        train_forward=ssm_lib.train_forward,
+        prefill=ssm_lib.prefill,
+        decode_step=ssm_lib.decode_step,
+        make_decode_state=_ssm_make_state,
+        decode_state_specs=ssm_lib.decode_state_specs,
+    ),
+    "resnet": ModelAPI(
+        family="resnet",
+        init=resnet_lib.init_params,
+        param_rules=resnet_lib.param_rules,
+        in_scan_names=resnet_lib.in_scan_param_names,
+        train_forward=resnet_lib.train_forward,
+    ),
+    "inception": ModelAPI(
+        family="inception",
+        init=resnet_lib.init_inception,
+        param_rules=lambda cfg: resnet_lib.param_rules(cfg),
+        in_scan_names=resnet_lib.in_scan_param_names,
+        train_forward=resnet_lib.inception_train_forward,
+    ),
+}
+
+
+def family_of(cfg) -> ModelAPI:
+    if isinstance(cfg, tf_lib.TransformerConfig):
+        return FAMILIES["transformer"]
+    if isinstance(cfg, rwkv_lib.RWKVConfig):
+        return FAMILIES["rwkv"]
+    if isinstance(cfg, ssm_lib.SSMConfig):
+        return FAMILIES["ssm"]
+    if isinstance(cfg, resnet_lib.ResNetConfig):
+        return FAMILIES["resnet"]
+    if isinstance(cfg, resnet_lib.InceptionConfig):
+        return FAMILIES["inception"]
+    raise TypeError(f"unknown config type {type(cfg)}")

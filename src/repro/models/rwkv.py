@@ -1,0 +1,361 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with
+data-dependent per-channel decay.  TP: heads sharded over "model";
+the tiny ddlerp/LoRA modulation params are replicated and their outputs
+sliced to the local channel shard.
+
+The WKV recurrence is evaluated in chunked-parallel form (chunk=C):
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T          (per head, S: (N, N))
+  y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+Intra-chunk terms use log-space decay differences (numerically safe:
+all exponents <= 0); inter-chunk state carries through a lax.scan.
+``repro/kernels/rwkv6`` is the Pallas TPU kernel for the chunk step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.overlap import scan_layers
+from repro.models.common import (
+    MODEL_AXIS,
+    dense_init,
+    embed_lookup,
+    rms_norm,
+    sharded_softmax_xent,
+    split_rngs,
+)
+from repro.parallel.sharding import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    head_size: int = 64
+    lora_w: int = 64
+    lora_mix: int = 32
+    dtype: Any = jnp.bfloat16
+    tp: int = 1
+    chunk: int = 32
+    remat: str = "dots"
+    scan_unroll: int = 1
+    depcha_in_scan: bool = False
+    dp_axes: tuple[str, ...] = ("data",)
+    chunk_unroll: bool = False
+    depcha_reducer: str = "flat"
+    intra_size: int = 16
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_size
+
+    @property
+    def heads_local(self) -> int:
+        return self.n_heads // self.tp if self.tp > 1 else self.n_heads
+
+    @property
+    def d_local(self) -> int:
+        return self.d_model // self.tp if self.tp > 1 else self.d_model
+
+    @property
+    def vocab_padded(self) -> int:
+        return -(-self.vocab // self.tp) * self.tp
+
+
+def init_params(rng, cfg: RWKVConfig) -> dict:
+    d, L, dt = cfg.d_model, cfg.n_layers, cfg.dtype
+    r = split_rngs(rng, 16)
+    blocks = {
+        "ln1": jnp.ones((L, d), dt),
+        "ln2": jnp.ones((L, d), dt),
+        # ddlerp mix coefficients (5 targets: r, k, v, w, g) + base
+        "mu_x": jnp.zeros((L, d), dt),
+        "mu_rkvwg": jnp.zeros((L, 5, d), dt),
+        "lora_mix_a": dense_init(r[0], (L, d, 5 * cfg.lora_mix), d, dt),
+        "lora_mix_b": jnp.zeros((L, 5, cfg.lora_mix, d), dt),
+        # time-mix projections (column-sharded over heads)
+        "wr": dense_init(r[1], (L, d, d), d, dt),
+        "wk": dense_init(r[2], (L, d, d), d, dt),
+        "wv": dense_init(r[3], (L, d, d), d, dt),
+        "wg": dense_init(r[4], (L, d, d), d, dt),
+        "wo": dense_init(r[5], (L, d, d), d, dt),
+        # decay: w = exp(-exp(w0 + lora)); bonus u
+        "w0": jnp.full((L, d), -5.0, jnp.float32),
+        "lora_w_a": dense_init(r[6], (L, d, cfg.lora_w), d, dt),
+        "lora_w_b": jnp.zeros((L, cfg.lora_w, d), dt),
+        "u": jnp.zeros((L, d), jnp.float32),
+        "ln_x": jnp.ones((L, d), dt),           # per-head groupnorm scale
+        # channel-mix
+        "mu_ck": jnp.zeros((L, d), dt),
+        "mu_cr": jnp.zeros((L, d), dt),
+        "ck": dense_init(r[7], (L, d, cfg.d_ff), d, dt),
+        "cv": dense_init(r[8], (L, cfg.d_ff, d), cfg.d_ff, dt),
+        "cr": dense_init(r[9], (L, d, d), d, dt),
+    }
+    return {
+        "embed": dense_init(r[10], (cfg.vocab_padded, d), d, dt),
+        "blocks": blocks,
+        "ln_f": jnp.ones((d,), dt),
+        "lm_head": dense_init(r[11], (d, cfg.vocab_padded), d, dt),
+    }
+
+
+def param_rules(cfg: RWKVConfig) -> ShardingRules:
+    return ShardingRules(rules=(
+        (r"embed", P(MODEL_AXIS, None)),
+        (r"lm_head", P(None, MODEL_AXIS)),
+        (r"/w[rkvg]$", P(None, None, MODEL_AXIS)),
+        (r"/wo$", P(None, MODEL_AXIS, None)),
+        (r"/ck$", P(None, None, MODEL_AXIS)),
+        (r"/cv$", P(None, MODEL_AXIS, None)),
+        (r"/cr$", P(None, None, MODEL_AXIS)),
+        # per-channel vectors sharded with the head shard
+        (r"/(w0|u|ln_x)$", P(None, MODEL_AXIS)),
+    ))
+
+
+def in_scan_param_names(params) -> frozenset[str]:
+    from repro.utils.trees import named_leaves
+    return frozenset(n for n, _ in named_leaves(params)
+                     if n.startswith("blocks/"))
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """xx_t = x_{t-1}; first position uses ``last`` (decode) or zeros."""
+    if x.shape[1] == 1 and last is not None:
+        return last[:, None, :]
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if last is not None:
+        shifted = shifted.at[:, 0].set(last)
+    return shifted
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent interpolation → 5 mixed inputs (r, k, v, w, g)."""
+    dx = xx - x
+    base = x + dx * p["mu_x"]
+    lo = jnp.tanh(base @ p["lora_mix_a"])          # (B,S,5*lm)
+    lo = lo.reshape(*lo.shape[:2], 5, -1)
+    mod = jnp.einsum("bstl,tld->bstd", lo, p["lora_mix_b"])
+    mix = p["mu_rkvwg"][None, None] + mod          # (B,S,5,d)
+    return x[:, :, None, :] + dx[:, :, None, :] * mix
+
+
+def _decay(p, xw, d_local_slice):
+    """w_t in (0,1): exp(-exp(w0 + lora_w(xw))), sliced to local channels."""
+    lo = jnp.tanh(xw @ p["lora_w_a"]) @ p["lora_w_b"]   # (B,S,d) full
+    lo = d_local_slice(lo)
+    w0 = p["w0"]                                        # already local (sharded)
+    logw = -jnp.exp(jnp.clip(w0[None, None].astype(jnp.float32)
+                             + lo.astype(jnp.float32), -10.0, 8.0))
+    return logw                                          # (B,S,d_local) <= 0
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int, unroll_all=False):
+    """Chunked WKV.  r,k,v: (B,S,H,N); logw: (B,S,H,N) (<=0); u: (H,N);
+    state: (B,H,N,N) [indexed state[b,h,i,j] ~ k-dim i, v-dim j].
+    Returns (y (B,S,H,N), final state)."""
+    B, S, H, N = r.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    S_out = S
+    if pad:
+        # zero-pad: k=0 adds nothing to the state; logw=0 (w=1) leaves
+        # the decay product unchanged — exact for the valid positions
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zp)
+        k = jnp.pad(k, zp)
+        v = jnp.pad(v, zp)
+        logw = jnp.pad(logw, zp)
+        S = S + pad
+    T = S // C
+    rc = r.reshape(B, T, C, H, N).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    kc = k.reshape(B, T, C, H, N).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    vc = v.reshape(B, T, C, H, N).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    lw = logw.reshape(B, T, C, H, N).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+
+    uf = u.astype(jnp.float32)
+
+    def body(S0, xs):
+        rr, kk, vv, ww = xs                      # (B,H,C,N)
+        L = jnp.cumsum(ww, axis=2)               # log ∏_{s<=t} w_s
+        Lprev = L - ww                           # log ∏_{s<t}
+        # inter-chunk contribution: y_inter[t] = (r_t * W_{t-1}) @ S0
+        r_dec = rr * jnp.exp(Lprev)
+        y = jnp.einsum("bhcn,bhnm->bhcm", r_dec, S0)
+        # intra-chunk: A[t,s] = sum_n r_tn k_sn exp(Lprev_t - L_s)_n , s<t
+        att = jnp.einsum("bhcn,bhsn->bhcs",
+                         rr * jnp.exp(Lprev), kk * jnp.exp(-L))
+        # guard: exp(Lprev_t - L_s) for s<t is <=... computed stably via
+        # factored exps; strictly-lower mask keeps only s<t terms
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        # diagonal (bonus) term: (r_t · u k_t) v_t
+        diag = jnp.einsum("bhcn,bhcn->bhc", rr, uf[None, :, None, :] * kk)
+        y = y + jnp.einsum("bhcs,bhsn->bhcn", att, vv) + diag[..., None] * vv
+        # state update: S_C = D(W_C) S0 + Σ_s D(W_C/W_s) k_s v_s^T
+        WC = L[:, :, -1:, :]                      # (B,H,1,N)
+        k_dec = kk * jnp.exp(WC - L)
+        S1 = S0 * jnp.exp(WC.squeeze(2))[..., None] + \
+            jnp.einsum("bhsn,bhsm->bhnm", k_dec, vv)
+        return S1, y
+
+    state, ys = jax.lax.scan(
+        body, state.astype(jnp.float32), (rc, kc, vc, lw),
+        unroll=T if unroll_all else 1)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, N)
+    if pad:
+        y = y[:, :S_out]
+    return y.astype(r.dtype), state
+
+
+def _time_mix(p, x, cfg: RWKVConfig, state, last_x):
+    """Returns (out, new_state, new_last_x)."""
+    B, S, _ = x.shape
+    H, N = cfg.heads_local, cfg.head_size
+    xx = _token_shift(x, last_x)
+    mixed = _ddlerp(p, x, xx)                     # (B,S,5,d)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    if cfg.tp > 1:
+        off = jax.lax.axis_index(MODEL_AXIS) * cfg.d_local
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, off, cfg.d_local, 2)
+    else:
+        sl = lambda t: t
+
+    r = (xr @ p["wr"]).reshape(B, S, H, N)
+    k = (xk @ p["wk"]).reshape(B, S, H, N)
+    v = (xv @ p["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = _decay(p, xw, sl).reshape(B, S, H, N)
+    u = p["u"].reshape(H, N)
+
+    y, new_state = wkv_chunked(r, k, v, logw, u, state, cfg.chunk,
+                               unroll_all=cfg.chunk_unroll)
+    # per-head groupnorm
+    yf = y.astype(jnp.float32)
+    mean = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mean) * jax.lax.rsqrt(var + 64e-5)
+    yn = (yn.reshape(B, S, -1) * p["ln_x"].astype(jnp.float32)).astype(x.dtype)
+    out = (yn * g) @ p["wo"]
+    out = jax.lax.psum(out, MODEL_AXIS) if cfg.tp > 1 else out
+    return out, new_state, x[:, -1]
+
+
+def _channel_mix(p, x, cfg: RWKVConfig, last_x):
+    xx = _token_shift(x, last_x)
+    xk = x + (xx - x) * p["mu_ck"]
+    xr = x + (xx - x) * p["mu_cr"]
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))        # (B,S,ff_local) col-par
+    out = k @ p["cv"]                                 # row-parallel
+    r_local = jax.nn.sigmoid(xr @ p["cr"])            # (B,S,d_local) col-par
+    if cfg.tp > 1:
+        out = jax.lax.psum(out, MODEL_AXIS)
+        r = jax.lax.all_gather(r_local, MODEL_AXIS, axis=-1, tiled=True)
+    else:
+        r = r_local
+    return r * out, x[:, -1]
+
+
+def block(p, x, cfg: RWKVConfig, state=None, lasts=None):
+    """One RWKV block.  state: (B,H,N,N) or zeros; lasts: decode shifts."""
+    B = x.shape[0]
+    H, N = cfg.heads_local, cfg.head_size
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+    l_tm = lasts["tm"] if lasts else None
+    l_cm = lasts["cm"] if lasts else None
+    a, new_state, new_ltm = _time_mix(p, rms_norm(x, p["ln1"]), cfg, state, l_tm)
+    x = x + a
+    m, new_lcm = _channel_mix(p, rms_norm(x, p["ln2"]), cfg, l_cm)
+    x = x + m
+    return x, new_state, {"tm": new_ltm, "cm": new_lcm}
+
+
+# ------------------------------------------------------------------ train
+def train_forward(params, batch, cfg: RWKVConfig) -> jax.Array:
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed"], tokens, cfg.tp).astype(cfg.dtype)
+
+    def body(p, x):
+        out, _, _ = block(p, x, cfg)
+        return out
+
+    if cfg.depcha_in_scan:
+        from repro.parallel.sharding import reduce_axes_tree
+        mesh_axes = tuple(cfg.dp_axes) + (("model",) if cfg.tp > 1 else ())
+        depcha = reduce_axes_tree(
+            param_rules(cfg), params["blocks"], "blocks/", mesh_axes)
+    else:
+        depcha = ()
+    x = scan_layers(
+        body, params["blocks"], x,
+        depcha_axes=depcha,
+        unroll=cfg.scan_unroll, remat=cfg.remat,
+        depcha_reducer=cfg.depcha_reducer, intra_size=cfg.intra_size,
+    )
+    h = rms_norm(x, params["ln_f"])
+    logits = h @ params["lm_head"]
+    per_tok = sharded_softmax_xent(logits, batch["labels"], cfg.tp)
+    return jnp.sum(per_tok) / batch["global_tokens"]
+
+
+# ------------------------------------------------------------------ serve
+def make_state(cfg: RWKVConfig, batch: int):
+    H, N = cfg.heads_local, cfg.head_size
+    return {
+        "wkv": jnp.zeros((cfg.n_layers, batch, H, N, N), jnp.float32),
+        "tm": jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.dtype),
+        "cm": jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.dtype),
+    }
+
+
+def decode_state_specs(cfg: RWKVConfig, batch_entry):
+    return {
+        "wkv": P(None, batch_entry, MODEL_AXIS, None, None),
+        "tm": P(None, batch_entry, None),   # residual stream: replicated
+        "cm": P(None, batch_entry, None),
+    }
+
+
+def prefill(params, tokens, cfg: RWKVConfig):
+    x = embed_lookup(params["embed"], tokens, cfg.tp).astype(cfg.dtype)
+
+    def body(x, xs):
+        p, st = xs
+        out, new_st, lasts = block(p, x, cfg, state=st)
+        return out, (new_st, lasts["tm"], lasts["cm"])
+
+    B = tokens.shape[0]
+    H, N = cfg.heads_local, cfg.head_size
+    st0 = jnp.zeros((cfg.n_layers, B, H, N, N), jnp.float32)
+    x, (wkv, tm, cm) = jax.lax.scan(body, x, (params["blocks"], st0),
+                                    unroll=cfg.scan_unroll)
+    h = rms_norm(x[:, -1:], params["ln_f"])
+    logits = (h @ params["lm_head"])[:, 0]
+    return logits, {"wkv": wkv, "tm": tm, "cm": cm}
+
+
+def decode_step(params, state, token, pos, cfg: RWKVConfig):
+    x = embed_lookup(params["embed"], token[:, None], cfg.tp).astype(cfg.dtype)
+
+    def body(x, xs):
+        p, st, tm, cm = xs
+        out, new_st, lasts = block(
+            p, x, cfg, state=st, lasts={"tm": tm, "cm": cm})
+        return out, (new_st, lasts["tm"], lasts["cm"])
+
+    x, (wkv, tm, cm) = jax.lax.scan(
+        body, x, (params["blocks"], state["wkv"], state["tm"], state["cm"]),
+        unroll=cfg.scan_unroll)
+    h = rms_norm(x, params["ln_f"])
+    logits = (h @ params["lm_head"])[:, 0]
+    return logits, {"wkv": wkv, "tm": tm, "cm": cm}

@@ -1,0 +1,477 @@
+"""Mamba-2 (SSD, arXiv:2405.21060) block and the Zamba2 hybrid
+(arXiv:2411.15242): a Mamba-2 backbone with a *shared* transformer block
+applied every ``attn_every`` layers (weights reused at each application).
+
+SSD recurrence per head (P = head dim, N = ssm state):
+  h_t = a_t h_{t-1} + dt_t * x_t B_t^T        h: (P, N), a_t scalar/head
+  y_t = h_t C_t + D x_t
+evaluated chunk-parallel: intra-chunk attention  M[t,s] = C_t·B_s ·
+exp(cumlog a (t..s]) · dt_s  (strictly causal + diagonal), inter-chunk
+state carried by lax.scan.  TP: heads sharded over "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.overlap import scan_layers, sync_in_backward
+from repro.models import attention as attn_lib
+from repro.models.common import (
+    MODEL_AXIS,
+    HeadLayout,
+    apply_rope,
+    dense_init,
+    embed_lookup,
+    rms_norm,
+    rope_angles,
+    sharded_softmax_xent,
+    split_rngs,
+    swiglu,
+)
+from repro.parallel.sharding import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int                      # shared-attn MLP width (zamba2)
+    vocab: int
+    ssm_state: int = 64
+    head_p: int = 64               # channels per ssm head
+    expand: int = 2
+    d_conv: int = 4
+    attn_every: int = 0            # 0 → pure mamba; zamba2: 6
+    n_heads: int = 32              # shared attention block heads
+    kv_heads: int = 32
+    dtype: Any = jnp.bfloat16
+    tp: int = 1
+    chunk: int = 64
+    rope_theta: float = 10_000.0
+    remat: str = "dots"
+    scan_unroll: int = 1
+    depcha_in_scan: bool = False
+    dp_axes: tuple[str, ...] = ("data",)
+    chunk_unroll: bool = False
+    depcha_reducer: str = "flat"
+    intra_size: int = 16
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.head_p
+
+    @property
+    def heads_local(self) -> int:
+        return self.ssm_heads // self.tp if self.tp > 1 else self.ssm_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return -(-self.vocab // self.tp) * self.tp
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def init_params(rng, cfg: SSMConfig) -> dict:
+    d, L, dt = cfg.d_model, cfg.n_layers, cfg.dtype
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    r = split_rngs(rng, 16)
+    # fused in-proj: z (di) | x (di) | B (N) | C (N) | dt (H)
+    proj_out = 2 * di + 2 * N + H
+    blocks = {
+        "ln": jnp.ones((L, d), dt),
+        "w_in": dense_init(r[0], (L, d, proj_out), d, dt),
+        "conv_w": dense_init(r[1], (L, cfg.d_conv, di + 2 * N), cfg.d_conv, dt),
+        "A_log": jnp.zeros((L, H), jnp.float32),
+        "D": jnp.ones((L, H), jnp.float32),
+        "dt_bias": jnp.zeros((L, H), jnp.float32),
+        "ln_y": jnp.ones((L, di), dt),
+        "w_out": dense_init(r[2], (L, di, d), di, dt),
+    }
+    params = {
+        "embed": dense_init(r[3], (cfg.vocab_padded, d), d, dt),
+        "blocks": blocks,
+        "ln_f": jnp.ones((d,), dt),
+        "lm_head": dense_init(r[4], (d, cfg.vocab_padded), d, dt),
+    }
+    if cfg.attn_every:
+        lay = HeadLayout(cfg.n_heads, cfg.kv_heads, cfg.hd, cfg.tp)
+        params["shared_attn"] = {
+            "ln1": jnp.ones((d,), dt),
+            "wq": dense_init(r[5], (d, cfg.n_heads * cfg.hd), d, dt),
+            "wk": dense_init(r[6], (d, cfg.kv_heads * cfg.hd), d, dt),
+            "wv": dense_init(r[7], (d, cfg.kv_heads * cfg.hd), d, dt),
+            "wo": dense_init(r[8], (cfg.n_heads * cfg.hd, d), d, dt),
+            "ln2": jnp.ones((d,), dt),
+            "wg": dense_init(r[9], (d, cfg.d_ff), d, dt),
+            "wu": dense_init(r[11], (d, cfg.d_ff), d, dt),
+            "wdown": dense_init(r[10], (cfg.d_ff, d), cfg.d_ff, dt),
+        }
+    return params
+
+
+def param_rules(cfg: SSMConfig) -> ShardingRules:
+    # NOTE: w_in fuses z|x|B|C|dt: B/C/dt parts are replicated reads, so the
+    # fused weight stays replicated; z|x sub-blocks are sliced per device.
+    rules = [
+        (r"embed", P(MODEL_AXIS, None)),
+        (r"lm_head", P(None, MODEL_AXIS)),
+        (r"/w_out$", P(None, MODEL_AXIS, None)),
+        (r"shared_attn/wq$", P(None, MODEL_AXIS)),
+        (r"shared_attn/wo$", P(MODEL_AXIS, None)),
+        (r"shared_attn/w[gu]$", P(None, MODEL_AXIS)),
+        (r"shared_attn/wdown$", P(MODEL_AXIS, None)),
+        (r"/(A_log|D|dt_bias)$", P(None, MODEL_AXIS)),
+        (r"/ln_y$", P(None, MODEL_AXIS)),
+    ]
+    if cfg.attn_every and cfg.kv_heads >= cfg.tp:
+        rules += [
+            (r"shared_attn/wk$", P(None, MODEL_AXIS)),
+            (r"shared_attn/wv$", P(None, MODEL_AXIS)),
+        ]
+    return ShardingRules(rules=tuple(rules))
+
+
+def in_scan_param_names(params) -> frozenset[str]:
+    from repro.utils.trees import named_leaves
+    return frozenset(n for n, _ in named_leaves(params)
+                     if n.startswith("blocks/"))
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: (B,S,C); w: (K,C); state: (B,K-1,C)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(xh, B_in, C_in, loga, dt, state, chunk: int, unroll_all=False):
+    """Chunked SSD. xh: (B,S,H,P); B_in/C_in: (B,S,N); loga: (B,S,H) (<=0);
+    dt: (B,S,H); state: (B,H,P,N).  Returns (y, new_state)."""
+    Bb, S, H, Pd = xh.shape
+    N = B_in.shape[-1]
+    C = min(chunk, S)
+    pad = (-S) % C
+    S_out = S
+    if pad:
+        # zero-pad: x=0 and dt=0 (loga=0, a=1) leave the state unchanged
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_in = jnp.pad(B_in, ((0, 0), (0, pad), (0, 0)))
+        C_in = jnp.pad(C_in, ((0, 0), (0, pad), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    T = S // C
+    f32 = jnp.float32
+    xc = xh.reshape(Bb, T, C, H, Pd).transpose(1, 0, 3, 2, 4).astype(f32)
+    bc = B_in.reshape(Bb, T, C, N).transpose(1, 0, 2, 3).astype(f32)
+    cc = C_in.reshape(Bb, T, C, N).transpose(1, 0, 2, 3).astype(f32)
+    lg = loga.reshape(Bb, T, C, H).transpose(1, 0, 3, 2).astype(f32)
+    dc = dt.reshape(Bb, T, C, H).transpose(1, 0, 3, 2).astype(f32)
+
+    def body(S0, xs):
+        xx, bb, ccc, ll, dd = xs      # (B,H,C,P), (B,C,N), (B,C,N), (B,H,C), (B,H,C)
+        Lc = jnp.cumsum(ll, axis=2)   # (B,H,C)
+        # inter-chunk: y_inter[t] = exp(Lc_t) * C_t @ S0^T
+        y = jnp.einsum("bcn,bhpn->bhcp", ccc, S0) * jnp.exp(Lc)[..., None]
+        # intra-chunk causal attention (incl. diagonal):
+        # M[t,s] = (C_t·B_s) exp(Lc_t - Lc_s) dt_s   for s <= t
+        scores = jnp.einsum("bcn,bsn->bcs", ccc, bb)
+        dec = jnp.exp(Lc[:, :, :, None] - Lc[:, :, None, :])   # (B,H,C,C)
+        mask = jnp.tril(jnp.ones((C, C), bool))
+        M = scores[:, None] * jnp.where(mask[None, None], dec, 0.0) \
+            * dd[:, :, None, :]
+        y = y + jnp.einsum("bhts,bhsp->bhtp", M, xx)
+        # state: S1 = exp(Lc_C) S0 + Σ_s exp(Lc_C - Lc_s) dt_s x_s B_s^T
+        WC = Lc[:, :, -1]
+        w_s = jnp.exp(WC[:, :, None] - Lc) * dd                # (B,H,C)
+        S1 = S0 * jnp.exp(WC)[..., None, None] + \
+            jnp.einsum("bhc,bhcp,bcn->bhpn", w_s, xx, bb)
+        return S1, y
+
+    state, ys = jax.lax.scan(body, state.astype(f32), (xc, bc, cc, lg, dc),
+                             unroll=T if unroll_all else 1)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(Bb, S, H, Pd)
+    if pad:
+        y = y[:, :S_out]
+    return y, state
+
+
+def mamba_block(p, x, cfg: SSMConfig, state=None, conv_state=None):
+    """One Mamba-2 block on the residual stream.  Returns
+    (out, new_ssm_state, new_conv_state)."""
+    Bb, S, d = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    Hl, Pd = cfg.heads_local, cfg.head_p
+    h = rms_norm(x, p["ln"])
+    zxbcdt = h @ p["w_in"]                       # replicated (small N,H tails)
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state)
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    # local head shard
+    if cfg.tp > 1:
+        off_d = jax.lax.axis_index(MODEL_AXIS) * (di // cfg.tp)
+        off_h = jax.lax.axis_index(MODEL_AXIS) * Hl
+        xs = jax.lax.dynamic_slice_in_dim(xs, off_d, di // cfg.tp, 2)
+        z = jax.lax.dynamic_slice_in_dim(z, off_d, di // cfg.tp, 2)
+        dt = jax.lax.dynamic_slice_in_dim(dt, off_h, Hl, 2)
+    xh = xs.reshape(Bb, S, Hl, Pd)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    loga = -jnp.exp(p["A_log"])[None, None] * dt            # (B,S,Hl) <= 0
+    if state is None:
+        state = jnp.zeros((Bb, Hl, Pd, N), jnp.float32)
+    y, new_state = ssd_chunked(xh, Bc, Cc, loga, dt, state, cfg.chunk,
+                               unroll_all=cfg.chunk_unroll)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bb, S, -1)
+    # gated rms groupnorm, one group per ssm head (TP-invariant: heads are
+    # never split across devices — matches Mamba-2 ngroups usage)
+    yz = y * jax.nn.silu(z.astype(jnp.float32))
+    ln_y = p["ln_y"]
+    yg = yz.reshape(Bb, S, Hl, Pd)
+    var = jnp.mean(jnp.square(yg), axis=-1, keepdims=True)
+    yz = (yg * jax.lax.rsqrt(var + 1e-6)).reshape(Bb, S, -1) \
+        * ln_y.astype(jnp.float32)
+    out = yz.astype(x.dtype) @ p["w_out"]
+    out = jax.lax.psum(out, MODEL_AXIS) if cfg.tp > 1 else out
+    return x + out, new_state, new_conv
+
+
+def shared_attn_block(p, x, cfg: SSMConfig, rope, kv_cache=None, pos=None):
+    """Zamba2's shared transformer block (GQA + SwiGLU MLP).
+
+    Train/prefill: kv_cache None → full causal self-attention.
+    Decode: kv_cache (B,Smax,kv_local,hd) pair + absolute pos."""
+    Bb, S, d = x.shape
+    lay = HeadLayout(cfg.n_heads, cfg.kv_heads, cfg.hd, cfg.tp)
+    h = rms_norm(x, p["ln1"])
+    q = (h @ p["wq"]).reshape(Bb, S, lay.q_local, cfg.hd)
+    if lay.kv_sharded:
+        wk, wv = p["wk"], p["wv"]
+    else:
+        start = lay.kv_slice_start() * cfg.hd if cfg.tp > 1 else 0
+        wk = jax.lax.dynamic_slice_in_dim(p["wk"], start,
+                                          lay.kv_local * cfg.hd, 1)
+        wv = jax.lax.dynamic_slice_in_dim(p["wv"], start,
+                                          lay.kv_local * cfg.hd, 1)
+    k = (h @ wk).reshape(Bb, S, lay.kv_local, cfg.hd)
+    v = (h @ wv).reshape(Bb, S, lay.kv_local, cfg.hd)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if kv_cache is None:
+        o = attn_lib.attention(q, k, v, causal=True,
+                               unroll_all=cfg.chunk_unroll)
+        new_cache = (k, v)          # prefill: caller slices its window
+    else:
+        kc, vc = kv_cache
+        smax = kc.shape[1]
+        slot = pos % smax
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        o = attn_lib.decode_attention(q, kc, vc, jnp.minimum(pos + 1, smax))
+        new_cache = (kc, vc)
+    o = o.reshape(Bb, S, -1) @ p["wo"]
+    o = jax.lax.psum(o, MODEL_AXIS) if cfg.tp > 1 else o
+    x = x + o
+    h = rms_norm(x, p["ln2"])
+    f = swiglu(h @ p["wg"], h @ p["wu"]) @ p["wdown"]
+    f = jax.lax.psum(f, MODEL_AXIS) if cfg.tp > 1 else f
+    return x + f, new_cache
+
+
+# ------------------------------------------------------------------ train
+def _groups(cfg: SSMConfig) -> list[int]:
+    """Mamba-layer group sizes between shared-attn applications."""
+    if not cfg.attn_every:
+        return [cfg.n_layers]
+    out = []
+    rem = cfg.n_layers
+    while rem > 0:
+        g = min(cfg.attn_every, rem)
+        out.append(g)
+        rem -= g
+    return out
+
+
+def train_forward(params, batch, cfg: SSMConfig) -> jax.Array:
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    x = embed_lookup(params["embed"], tokens, cfg.tp).astype(cfg.dtype)
+    rope = rope_angles(jnp.arange(S), cfg.hd, cfg.rope_theta) \
+        if cfg.attn_every else None
+
+    def body(p, x):
+        out, _, _ = mamba_block(p, x, cfg)
+        return out
+
+    if cfg.depcha_in_scan:
+        from repro.parallel.sharding import reduce_axes_tree
+        mesh_axes = tuple(cfg.dp_axes) + (("model",) if cfg.tp > 1 else ())
+        depcha = reduce_axes_tree(
+            param_rules(cfg), params["blocks"], "blocks/", mesh_axes)
+    else:
+        depcha = ()
+
+    off = 0
+    for gi, g in enumerate(_groups(cfg)):
+        grp = jax.tree.map(lambda a: a[off:off + g], params["blocks"])
+        x = scan_layers(
+            body, grp, x,
+            depcha_axes=depcha,
+            unroll=cfg.scan_unroll, remat=cfg.remat,
+            depcha_reducer=cfg.depcha_reducer, intra_size=cfg.intra_size,
+        )
+        off += g
+        if cfg.attn_every and off < cfg.n_layers:
+            fn = lambda p, xx: shared_attn_block(p, xx, cfg, rope)[0]
+            if cfg.depcha_in_scan:
+                # shared weights are reused: sync once, outside (tail bucket)
+                pass
+            x = fn(params["shared_attn"], x)
+
+    h = rms_norm(x, params["ln_f"])
+    logits = h @ params["lm_head"]
+    per_tok = sharded_softmax_xent(logits, batch["labels"], cfg.tp)
+    return jnp.sum(per_tok) / batch["global_tokens"]
+
+
+# ------------------------------------------------------------------ serve
+def n_attn_sites(cfg: SSMConfig) -> int:
+    if not cfg.attn_every:
+        return 0
+    return max(len(_groups(cfg)) - 1, 0)
+
+
+def make_state(cfg: SSMConfig, batch: int, attn_window: int):
+    Hl, Pd, N = cfg.heads_local, cfg.head_p, cfg.ssm_state
+    lay = HeadLayout(cfg.n_heads, cfg.kv_heads, cfg.hd, cfg.tp)
+    di, Nc = cfg.d_inner, cfg.ssm_state
+    st = {
+        "ssm": jnp.zeros((cfg.n_layers, batch, Hl, Pd, N), jnp.float32),
+        "conv": jnp.zeros(
+            (cfg.n_layers, batch, cfg.d_conv - 1, di + 2 * Nc), cfg.dtype),
+    }
+    na = n_attn_sites(cfg)
+    if na:
+        st["attn_k"] = jnp.zeros(
+            (na, batch, attn_window, lay.kv_local, cfg.hd), cfg.dtype)
+        st["attn_v"] = jnp.zeros_like(st["attn_k"])
+    return st
+
+
+def decode_state_specs(cfg: SSMConfig, batch_entry):
+    specs = {
+        "ssm": P(None, batch_entry, MODEL_AXIS, None, None),
+        "conv": P(None, batch_entry, None, None),   # replicated channels
+    }
+    if n_attn_sites(cfg):
+        specs["attn_k"] = P(None, batch_entry, None, MODEL_AXIS, None)
+        specs["attn_v"] = P(None, batch_entry, None, MODEL_AXIS, None)
+    return specs
+
+
+def prefill(params, tokens, cfg: SSMConfig, attn_window: int = 0):
+    Bb, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens, cfg.tp).astype(cfg.dtype)
+    rope = rope_angles(jnp.arange(S), cfg.hd, cfg.rope_theta) \
+        if cfg.attn_every else None
+    st = make_state(cfg, Bb, attn_window or S)
+
+    ssm_out, conv_out, k_out, v_out = [], [], [], []
+    off = 0
+    for gi, g in enumerate(_groups(cfg)):
+        grp = jax.tree.map(lambda a: a[off:off + g], params["blocks"])
+
+        def body(x, xs):
+            p, st_i, cv_i = xs
+            out, ns, nc = mamba_block(p, x, cfg, state=st_i, conv_state=cv_i)
+            return out, (ns, nc)
+
+        x, (ns, nc) = jax.lax.scan(
+            body, x, (grp, st["ssm"][off:off + g], st["conv"][off:off + g]),
+            unroll=cfg.scan_unroll)
+        ssm_out.append(ns); conv_out.append(nc)
+        off += g
+        if cfg.attn_every and off < cfg.n_layers:
+            x, (k, v) = shared_attn_block(params["shared_attn"], x, cfg, rope)
+            w = attn_window or S
+            keep = min(w, S)
+            pad = w - keep
+            k_w = jnp.pad(k[:, S - keep:], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_w = jnp.pad(v[:, S - keep:], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            if keep == w and S % w:   # ring-align: token p lives at slot p%w
+                k_w = jnp.roll(k_w, S % w, axis=1)
+                v_w = jnp.roll(v_w, S % w, axis=1)
+            k_out.append(k_w); v_out.append(v_w)
+
+    h = rms_norm(x[:, -1:], params["ln_f"])
+    logits = (h @ params["lm_head"])[:, 0]
+    state = {
+        "ssm": jnp.concatenate(ssm_out, 0),
+        "conv": jnp.concatenate(conv_out, 0),
+    }
+    if k_out:
+        state["attn_k"] = jnp.stack(k_out, 0)
+        state["attn_v"] = jnp.stack(v_out, 0)
+    return logits, state
+
+
+def decode_step(params, state, token, pos, cfg: SSMConfig):
+    x = embed_lookup(params["embed"], token[:, None], cfg.tp).astype(cfg.dtype)
+    rope = rope_angles(jnp.array([pos]), cfg.hd, cfg.rope_theta) \
+        if cfg.attn_every else None
+
+    def body(x, xs):
+        p, st_i, cv_i = xs
+        out, ns, nc = mamba_block(p, x, cfg, state=st_i, conv_state=cv_i)
+        return out, (ns, nc)
+
+    off = 0
+    site = 0
+    ssm_out, conv_out = [], []
+    new_k, new_v = [], []
+    for gi, g in enumerate(_groups(cfg)):
+        grp = jax.tree.map(lambda a: a[off:off + g], params["blocks"])
+        x, (ns, nc) = jax.lax.scan(
+            body, x, (grp, state["ssm"][off:off + g],
+                      state["conv"][off:off + g]),
+            unroll=cfg.scan_unroll)
+        ssm_out.append(ns); conv_out.append(nc)
+        off += g
+        if cfg.attn_every and off < cfg.n_layers:
+            kv = (state["attn_k"][site], state["attn_v"][site])
+            x, new_kv = shared_attn_block(
+                params["shared_attn"], x, cfg, rope, kv_cache=kv, pos=pos)
+            new_k.append(new_kv[0]); new_v.append(new_kv[1])
+            site += 1
+
+    h = rms_norm(x, params["ln_f"])
+    logits = (h @ params["lm_head"])[:, 0]
+    new_state = {
+        "ssm": jnp.concatenate(ssm_out, 0),
+        "conv": jnp.concatenate(conv_out, 0),
+    }
+    if new_k:
+        new_state["attn_k"] = jnp.stack(new_k, 0)
+        new_state["attn_v"] = jnp.stack(new_v, 0)
+    return logits, new_state

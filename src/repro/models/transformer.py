@@ -1,0 +1,573 @@
+"""Unified decoder-only transformer LM covering the LM-family archs.
+
+Config flags cover: GQA (any kv_heads vs tp), RoPE, sliding-window attention
+(h2o-danube), qk-norm (qwen3), MoE FFN (granite, kimi-k2), cross-attention
+image layers (llama-3.2-vision), stub modality embeddings (musicgen frame
+embeds / vision patch embeds), padded heads (starcoder2 24H → 32 on tp=16),
+padded vocab (granite 49155 → 49168).
+
+All forward code runs inside shard_map on local shards with explicit TP
+collectives (DESIGN.md §5).  Layers are scanned (HLO size O(1) in depth —
+kimi-k2 at 61L compiles like 1L).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.overlap import scan_layers, sync_in_backward
+from repro.models import attention as attn_lib
+from repro.models.common import (
+    ACTIVATIONS,
+    HeadLayout,
+    MODEL_AXIS,
+    apply_rope,
+    dense_init,
+    embed_lookup,
+    pad_heads,
+    rms_norm,
+    rope_angles,
+    sharded_softmax_xent,
+    split_rngs,
+    swiglu,
+)
+from repro.models.moe import MoECfg, moe_ffn
+from repro.parallel.sharding import ShardingRules
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # 0 → d_model // n_heads
+    act: str = "silu"
+    gated: bool = True
+    qk_norm: bool = False
+    swa_window: Optional[int] = None
+    rope_theta: float = 500_000.0
+    moe: Optional[MoECfg] = None
+    cross_attn_every: Optional[int] = None   # 1 cross layer per N self layers
+    n_img_tokens: int = 0
+    frame_embeds: bool = False        # musicgen stub conditioning input
+    dtype: Any = jnp.bfloat16
+    tp: int = 1
+    attn_chunk: int = 1024
+    remat: str = "dots"
+    scan_unroll: int = 1
+    depcha_in_scan: bool = False      # emit DP psums inside backward scan
+    dp_axes: tuple[str, ...] = ("data",)
+    use_flash: bool = False
+    chunk_unroll: bool = False        # unroll chunk scans (exact HLO cost)
+    depcha_reducer: str = "flat"      # flat | hierarchical (in-scan sync)
+    intra_size: int = 16              # intra-pod "data" size (hierarchical)
+    fsdp: bool = False                # ZeRO-3: block weights stored sharded
+                                      # over "data" too; all-gathered per
+                                      # layer inside the scan (bwd transpose
+                                      # = reduce-scatter of the grads)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def heads_padded(self) -> int:
+        return pad_heads(self.n_heads, self.tp)
+
+    @property
+    def vocab_padded(self) -> int:
+        return _round_up(self.vocab, self.tp)
+
+    @property
+    def layout(self) -> HeadLayout:
+        return HeadLayout(self.heads_padded, self.kv_heads, self.hd, self.tp)
+
+    @property
+    def n_cross(self) -> int:
+        if not self.cross_attn_every:
+            return 0
+        return self.n_layers // (self.cross_attn_every + 1)
+
+    @property
+    def n_self(self) -> int:
+        return self.n_layers - self.n_cross
+
+
+# ------------------------------------------------------------------ params
+def init_params(rng, cfg: TransformerConfig) -> dict:
+    """Global (unsharded) parameter pytree.  Use under jax.eval_shape for
+    full-size configs (dry-run); materialize only for reduced configs."""
+    d, hd, L = cfg.d_model, cfg.hd, cfg.n_self
+    Hq, Hkv = cfg.heads_padded, cfg.kv_heads
+    ff = cfg.d_ff
+    dt = cfg.dtype
+    rngs = split_rngs(rng, 24)
+
+    def blk(L_: int, r, cross: bool) -> dict:
+        p = {
+            "ln1": jnp.ones((L_, d), dt),
+            "wq": dense_init(r[0], (L_, d, Hq * hd), d, dt),
+            "wk": dense_init(r[1], (L_, d, Hkv * hd), d, dt),
+            "wv": dense_init(r[2], (L_, d, Hkv * hd), d, dt),
+            "wo": dense_init(r[3], (L_, Hq * hd, d), Hq * hd, dt),
+            "ln2": jnp.ones((L_, d), dt),
+        }
+        if cfg.qk_norm:
+            p["qnorm"] = jnp.ones((L_, hd), dt)
+            p["knorm"] = jnp.ones((L_, hd), dt)
+        if cross:
+            p["lnkv"] = jnp.ones((L_, d), dt)
+            p["gate_attn"] = jnp.zeros((L_,), dt)
+        if cfg.moe is not None and not cross:
+            m = cfg.moe
+            p["router"] = dense_init(r[4], (L_, d, m.num_experts), d, jnp.float32)
+            p["w_gate"] = dense_init(r[5], (L_, m.num_experts, d, m.d_expert), d, dt)
+            p["w_up"] = dense_init(r[6], (L_, m.num_experts, d, m.d_expert), d, dt)
+            p["w_down"] = dense_init(
+                r[7], (L_, m.num_experts, m.d_expert, d), m.d_expert, dt
+            )
+            if m.shared_experts:
+                ds = m.d_expert * m.shared_experts
+                p["ws_g"] = dense_init(r[8], (L_, d, ds), d, dt)
+                p["ws_u"] = dense_init(r[10], (L_, d, ds), d, dt)
+                p["ws_down"] = dense_init(r[9], (L_, ds, d), ds, dt)
+        else:
+            if cfg.gated:
+                # separate gate/up (a fused [gate|up] matrix would shard the
+                # concatenated dim — wrong halves per device)
+                p["wg"] = dense_init(r[4], (L_, d, ff), d, dt)
+                p["wu"] = dense_init(r[6], (L_, d, ff), d, dt)
+            else:
+                p["wi"] = dense_init(r[4], (L_, d, ff), d, dt)
+            p["wdown"] = dense_init(r[5], (L_, ff, d), ff, dt)
+        return p
+
+    params = {
+        "embed": dense_init(rngs[0], (cfg.vocab_padded, d), d, dt),
+        "blocks": blk(L, rngs[1:12], cross=False),
+        "ln_f": jnp.ones((d,), dt),
+        "lm_head": dense_init(rngs[11], (d, cfg.vocab_padded), d, dt),
+    }
+    if cfg.n_cross:
+        params["cross_blocks"] = blk(cfg.n_cross, rngs[12:23], cross=True)
+    return params
+
+
+# FSDP storage: the big per-layer matrices get "data" on a second dim;
+# the scan body all-gathers them before use (fsdp_gather).  dim chosen so
+# the head/expert structure stays intact (the non-model matrix dim).
+_FSDP_DIM = {
+    "wq": 1, "wo": 2, "wi": 1, "wg": 1, "wu": 1, "wdown": 2,
+    "w_gate": 3, "w_up": 3, "w_down": 2, "ws_g": 1, "ws_u": 1,
+    "ws_down": 2,
+}
+
+
+def param_rules(cfg: TransformerConfig) -> ShardingRules:
+    kv_sharded = cfg.layout.kv_sharded
+    fsdp = getattr(cfg, "fsdp", False)
+
+    dp = tuple(cfg.dp_axes)      # fsdp shards over EVERY dp axis (pods too)
+    dp_entry = dp if len(dp) > 1 else dp[0]
+
+    def spec3(model_dim: int, name: str) -> P:
+        entries = [None, None, None]
+        entries[model_dim] = MODEL_AXIS
+        if fsdp and name in _FSDP_DIM:
+            entries[_FSDP_DIM[name]] = dp_entry
+        return P(*entries)
+
+    def spec4(model_dim: int, name: str) -> P:
+        entries = [None, None, None, None]
+        entries[model_dim] = MODEL_AXIS
+        if fsdp and name in _FSDP_DIM:
+            entries[_FSDP_DIM[name]] = dp_entry
+        return P(*entries)
+
+    rules = [
+        (r"embed", P(MODEL_AXIS, None)),
+        (r"lm_head", P(None, MODEL_AXIS)),
+        (r"/wq$", spec3(2, "wq")),
+        (r"/wo$", spec3(1, "wo")),
+        (r"/wi$", spec3(2, "wi")),
+        (r"/wg$", spec3(2, "wg")),
+        (r"/wu$", spec3(2, "wu")),
+        (r"/wdown$", spec3(1, "wdown")),
+        (r"/w_gate$", spec4(1, "w_gate")),
+        (r"/w_up$", spec4(1, "w_up")),
+        (r"/w_down$", spec4(1, "w_down")),
+        (r"/ws_g$", spec3(2, "ws_g")),
+        (r"/ws_u$", spec3(2, "ws_u")),
+        (r"/ws_down$", spec3(1, "ws_down")),
+    ]
+    if kv_sharded:
+        rules += [
+            (r"/wk$", P(None, None, MODEL_AXIS)),
+            (r"/wv$", P(None, None, MODEL_AXIS)),
+        ]
+    # else: wk/wv replicated, sliced per-device (HeadLayout) — default P()
+    return ShardingRules(rules=tuple(rules))
+
+
+def fsdp_gather(p: dict, cfg: TransformerConfig) -> dict:
+    """All-gather the FSDP-sharded weights of ONE layer (inside the scan
+    body: weights live gathered only for this layer's compute; the AD
+    transpose reduce-scatters the gradients over "data" automatically)."""
+    if not getattr(cfg, "fsdp", False):
+        return p
+    out = dict(p)
+    dp = tuple(cfg.dp_axes)
+    ax = dp if len(dp) > 1 else dp[0]
+    for name, dim in _FSDP_DIM.items():
+        if name in out:
+            # per-layer tensors have the stacking dim stripped → dim-1
+            out[name] = jax.lax.all_gather(
+                out[name], ax, axis=dim - 1, tiled=True)
+    return out
+
+
+def in_scan_param_names(params: dict) -> frozenset[str]:
+    """Leaves whose gradient is psum'd inside the backward scan (depcha)."""
+    from repro.utils.trees import named_leaves
+
+    return frozenset(
+        n for n, _ in named_leaves(params)
+        if n.startswith("blocks/") or n.startswith("cross_blocks/")
+    )
+
+
+# ----------------------------------------------------------------- blocks
+def _attn_qkv(p, h, cfg: TransformerConfig, li=None):
+    """Project to q, k, v local heads.  Returns (B,S,q_local,hd) × kv."""
+    lay = cfg.layout
+    hd = cfg.hd
+    q = (h @ p["wq"]).reshape(*h.shape[:2], lay.q_local, hd)
+    if lay.kv_sharded:
+        k = (h @ p["wk"]).reshape(*h.shape[:2], lay.kv_local, hd)
+        v = (h @ p["wv"]).reshape(*h.shape[:2], lay.kv_local, hd)
+    else:
+        # kv projection replicated; slice the kv head(s) this device reads
+        start = lay.kv_slice_start() * hd if cfg.tp > 1 else 0
+        wk = jax.lax.dynamic_slice_in_dim(p["wk"], start, lay.kv_local * hd, 1)
+        wv = jax.lax.dynamic_slice_in_dim(p["wv"], start, lay.kv_local * hd, 1)
+        k = (h @ wk).reshape(*h.shape[:2], lay.kv_local, hd)
+        v = (h @ wv).reshape(*h.shape[:2], lay.kv_local, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"])
+        k = rms_norm(k, p["knorm"])
+    return q, k, v
+
+
+def _ffn(p, h, cfg: TransformerConfig):
+    if cfg.moe is not None:
+        B, S, d = h.shape
+        out, aux = moe_ffn(p, h.reshape(B * S, d), cfg.moe, cfg.tp)
+        return out.reshape(B, S, d), aux
+    if cfg.gated:
+        a = swiglu(h @ p["wg"], h @ p["wu"])
+    else:
+        a = ACTIVATIONS[cfg.act](h @ p["wi"])
+    out = a @ p["wdown"]
+    out = jax.lax.psum(out, MODEL_AXIS) if cfg.tp > 1 else out
+    return out, jnp.zeros((), jnp.float32)
+
+
+def self_block(p, carry, cfg: TransformerConfig, rope, *, q_offset=0):
+    """One decoder block; carry = (x, aux). rope = (cos, sin)."""
+    x, aux = carry
+    p = fsdp_gather(p, cfg)
+    h = rms_norm(x, p["ln1"])
+    q, k, v = _attn_qkv(p, h, cfg)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    o = attn_lib.attention(
+        q, k, v,
+        causal=True,
+        window=cfg.swa_window,
+        q_offset=q_offset,
+        chunk=cfg.attn_chunk,
+        use_flash=cfg.use_flash,
+        unroll_all=cfg.chunk_unroll,
+    )
+    o = o.reshape(*x.shape[:2], -1) @ p["wo"]
+    o = jax.lax.psum(o, MODEL_AXIS) if cfg.tp > 1 else o
+    x = x + o
+    h = rms_norm(x, p["ln2"])
+    f, aux_i = _ffn(p, h, cfg)
+    return (x + f, aux + aux_i)
+
+
+def cross_block(p, carry, cfg: TransformerConfig, img_embeds):
+    """Gated cross-attention block (llama-3.2-vision style)."""
+    x, aux = carry
+    p = fsdp_gather(p, cfg)
+    h = rms_norm(x, p["ln1"])
+    hkv = rms_norm(img_embeds, p["lnkv"])
+    lay = cfg.layout
+    hd = cfg.hd
+    q = (h @ p["wq"]).reshape(*h.shape[:2], lay.q_local, hd)
+    if lay.kv_sharded:
+        k = (hkv @ p["wk"]).reshape(*hkv.shape[:2], lay.kv_local, hd)
+        v = (hkv @ p["wv"]).reshape(*hkv.shape[:2], lay.kv_local, hd)
+    else:
+        start = lay.kv_slice_start() * hd if cfg.tp > 1 else 0
+        wk = jax.lax.dynamic_slice_in_dim(p["wk"], start, lay.kv_local * hd, 1)
+        wv = jax.lax.dynamic_slice_in_dim(p["wv"], start, lay.kv_local * hd, 1)
+        k = (hkv @ wk).reshape(*hkv.shape[:2], lay.kv_local, hd)
+        v = (hkv @ wv).reshape(*hkv.shape[:2], lay.kv_local, hd)
+    o = attn_lib.attention(
+        q, k, v, causal=False, chunk=cfg.attn_chunk,
+        unroll_all=cfg.chunk_unroll,
+    )
+    o = o.reshape(*x.shape[:2], -1) @ p["wo"]
+    o = jax.lax.psum(o, MODEL_AXIS) if cfg.tp > 1 else o
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * o
+    h = rms_norm(x, p["ln2"])
+    f, aux_i = _ffn(p, h, cfg)
+    return (x + f, aux + aux_i)
+
+
+def _depcha_axes(cfg: TransformerConfig, params_subtree, prefix: str):
+    """Per-leaf grad-reduction groups for in-scan sync (DP axes, plus
+    "model" for leaves replicated over the model axis)."""
+    if not cfg.depcha_in_scan:
+        return ()
+    from repro.parallel.sharding import reduce_axes_tree
+
+    mesh_axes = tuple(cfg.dp_axes) + (("model",) if cfg.tp > 1 else ())
+    return reduce_axes_tree(param_rules(cfg), params_subtree, prefix, mesh_axes)
+
+
+def _stack_scan(cfg: TransformerConfig, body, stacked, carry):
+    return scan_layers(
+        body,
+        stacked,
+        carry,
+        depcha_axes=_depcha_axes(cfg, stacked, "blocks/"),
+        unroll=cfg.scan_unroll,
+        remat=cfg.remat,
+        depcha_reducer=cfg.depcha_reducer,
+        intra_size=cfg.intra_size,
+    )
+
+
+def backbone(params, x, cfg: TransformerConfig, rope, img_embeds=None,
+             q_offset=0):
+    """Run all blocks. x: (B, S, d) → (B, S, d), aux."""
+    carry = (x, jnp.zeros((), jnp.float32))
+    body = lambda p, c: self_block(p, c, cfg, rope, q_offset=q_offset)
+    if cfg.n_cross == 0:
+        carry = _stack_scan(cfg, body, params["blocks"], carry)
+    else:
+        per = cfg.cross_attn_every
+        cb = params["cross_blocks"]
+        for g in range(cfg.n_cross):
+            grp = jax.tree.map(lambda a: a[g * per:(g + 1) * per],
+                               params["blocks"])
+            carry = _stack_scan(cfg, body, grp, carry)
+            cp = jax.tree.map(lambda a: a[g], cb)
+            cfn = lambda p, c: cross_block(p, c, cfg, img_embeds)
+            if cfg.depcha_in_scan:
+                cfn = sync_in_backward(
+                    cfn, _depcha_axes(cfg, cp, "cross_blocks/"))
+            carry = cfn(cp, carry)
+        rem = cfg.n_self - cfg.n_cross * per
+        if rem:
+            grp = jax.tree.map(lambda a: a[-rem:], params["blocks"])
+            carry = _stack_scan(cfg, body, grp, carry)
+    return carry
+
+
+# ------------------------------------------------------------------ train
+def train_forward(params, batch, cfg: TransformerConfig) -> jax.Array:
+    """Local-shard loss: sum of token xent / global token count.
+
+    psum over DP axes (done by the train step) yields the exact global mean
+    — the paper's rescale=1/mini_batch_size folded into the loss.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens, cfg.tp).astype(cfg.dtype)
+    if cfg.frame_embeds and "frame_embeds" in batch:
+        x = x + batch["frame_embeds"].astype(cfg.dtype)
+    cos, sin = rope_angles(jnp.arange(S), cfg.hd, cfg.rope_theta)
+    img = batch.get("img_embeds")
+    if img is not None:
+        img = img.astype(cfg.dtype)
+    (h, aux) = backbone(params, x, cfg, (cos, sin), img_embeds=img)
+    h = rms_norm(h, params["ln_f"])
+    logits = h @ params["lm_head"]                       # (B, S, V/tp)
+    per_tok = sharded_softmax_xent(logits, batch["labels"], cfg.tp)
+    local_sum = jnp.sum(per_tok)
+    # aux is a per-shard estimate; scale so the DP psum averages it
+    dp_scale = (B * S) / batch["global_tokens"]
+    return local_sum / batch["global_tokens"] + aux * dp_scale / cfg.n_layers
+
+
+# ------------------------------------------------------------------ serve
+def prefill(params, tokens, cfg: TransformerConfig, img_embeds=None,
+            frame_embeds=None):
+    """Full-sequence forward; returns (next_token_logits_local, kv_cache).
+
+    Cache layout: dict of (n_self, B, S, kv_local, hd) stacked arrays.
+    """
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens, cfg.tp).astype(cfg.dtype)
+    if cfg.frame_embeds and frame_embeds is not None:
+        x = x + frame_embeds.astype(cfg.dtype)
+    cos, sin = rope_angles(jnp.arange(S), cfg.hd, cfg.rope_theta)
+    rope = (cos, sin)
+
+    def body(carry, p):
+        x = carry
+        p = fsdp_gather(p, cfg)
+        h = rms_norm(x, p["ln1"])
+        q, k, v = _attn_qkv(p, h, cfg)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        o = attn_lib.attention(q, k, v, causal=True, window=cfg.swa_window,
+                               chunk=cfg.attn_chunk, use_flash=cfg.use_flash,
+                               unroll_all=cfg.chunk_unroll)
+        o = o.reshape(B, S, -1) @ p["wo"]
+        o = jax.lax.psum(o, MODEL_AXIS) if cfg.tp > 1 else o
+        x = x + o
+        h = rms_norm(x, p["ln2"])
+        f, _ = _ffn(p, h, cfg)
+        return x + f, {"k": k, "v": v}
+
+    if cfg.n_cross == 0:
+        x, cache = jax.lax.scan(body, x, params["blocks"],
+                                unroll=cfg.scan_unroll)
+    else:
+        caches = []
+        per = cfg.cross_attn_every
+        for g in range(cfg.n_cross):
+            grp = jax.tree.map(lambda a: a[g * per:(g + 1) * per],
+                               params["blocks"])
+            x, c = jax.lax.scan(body, x, grp, unroll=cfg.scan_unroll)
+            caches.append(c)
+            cp = jax.tree.map(lambda a: a[g], params["cross_blocks"])
+            (x, _) = cross_block(
+                cp, (x, jnp.zeros((), jnp.float32)), cfg,
+                img_embeds.astype(cfg.dtype))
+        rem = cfg.n_self - cfg.n_cross * per
+        if rem:
+            grp = jax.tree.map(lambda a: a[-rem:], params["blocks"])
+            x, c = jax.lax.scan(body, x, grp, unroll=cfg.scan_unroll)
+            caches.append(c)
+        cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *caches)
+
+    h = rms_norm(x[:, -1:], params["ln_f"])
+    logits = h @ params["lm_head"]
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, token, pos, cfg: TransformerConfig,
+                img_embeds=None):
+    """One decode step. token: (B,) int32; pos: absolute position (scalar).
+
+    cache: dict k/v of (n_self, B, Smax, kv_local, hd).  When Smax <
+    pos+1 the cache is treated as a ring buffer (sliding-window archs:
+    Smax == window, the ring IS the window).  Returns
+    (next_logits_local (B, V/tp), new cache).
+    """
+    B = token.shape[0]
+    smax = cache["k"].shape[2]
+    slot = pos % smax
+    kv_len = jnp.minimum(pos + 1, smax)
+    win = cfg.swa_window if (cfg.swa_window and smax > cfg.swa_window) else None
+    x = embed_lookup(params["embed"], token[:, None], cfg.tp).astype(cfg.dtype)
+    cos, sin = rope_angles(jnp.array([pos]), cfg.hd, cfg.rope_theta)
+
+    def body(x, layer):
+        p, kc, vc = layer
+        p = fsdp_gather(p, cfg)
+        h = rms_norm(x, p["ln1"])
+        q, k, v = _attn_qkv(p, h, cfg)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        o = attn_lib.decode_attention(q, kc, vc, kv_len, window=win)
+        o = o.reshape(B, 1, -1) @ p["wo"]
+        o = jax.lax.psum(o, MODEL_AXIS) if cfg.tp > 1 else o
+        x = x + o
+        h = rms_norm(x, p["ln2"])
+        f, _ = _ffn(p, h, cfg)
+        return x + f, {"k": kc, "v": vc}
+
+    def scan_body(x, xs):
+        p, kc, vc = xs
+        x, c = body(x, (p, kc, vc))
+        return x, c
+
+    if cfg.n_cross == 0:
+        x, new_cache = jax.lax.scan(
+            scan_body, x, (params["blocks"], cache["k"], cache["v"]),
+            unroll=cfg.scan_unroll,
+        )
+    else:
+        per = cfg.cross_attn_every
+        new_k, new_v = [], []
+        off = 0
+        for g in range(cfg.n_cross):
+            grp = jax.tree.map(lambda a: a[g * per:(g + 1) * per],
+                               params["blocks"])
+            kc = cache["k"][off:off + per]
+            vc = cache["v"][off:off + per]
+            x, c = jax.lax.scan(scan_body, x, (grp, kc, vc),
+                                unroll=cfg.scan_unroll)
+            new_k.append(c["k"]); new_v.append(c["v"])
+            off += per
+            cp = jax.tree.map(lambda a: a[g], params["cross_blocks"])
+            (x, _) = cross_block(cp, (x, jnp.zeros((), jnp.float32)), cfg,
+                                 img_embeds.astype(cfg.dtype))
+        rem = cfg.n_self - cfg.n_cross * per
+        if rem:
+            grp = jax.tree.map(lambda a: a[-rem:], params["blocks"])
+            x, c = jax.lax.scan(
+                scan_body, x, (grp, cache["k"][off:], cache["v"][off:]),
+                unroll=cfg.scan_unroll)
+            new_k.append(c["k"]); new_v.append(c["v"])
+        new_cache = {"k": jnp.concatenate(new_k, 0),
+                     "v": jnp.concatenate(new_v, 0)}
+
+    h = rms_norm(x, params["ln_f"])
+    logits = (h @ params["lm_head"])[:, 0]               # (B, V/tp)
+    return logits, new_cache
+
+
+def make_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    """Empty KV cache shapes (local shard view)."""
+    lay = cfg.layout
+    shape = (cfg.n_self, batch, max_len, lay.kv_local, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+    }
+
+
+def decode_state_specs(cfg: TransformerConfig, batch_entry):
+    """PartitionSpecs for the decode cache (global view).
+
+    kv-head dim sharded over "model": when kv_sharded that is the natural
+    layout; when kv_heads < tp each rank's slice differs (sliced-KV GQA),
+    so the global dim is tp × kv_local with per-rank content — correct
+    round-trip either way."""
+    s = P(None, batch_entry, None, MODEL_AXIS, None)
+    return {"k": s, "v": s}

@@ -1,0 +1,25 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    sgd,
+)
+from repro.optim.schedules import (
+    constant_lr,
+    cosine_warmup,
+    linear_scaling_rule,
+)
+from repro.optim.zero import zero1
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "apply_updates",
+    "clip_by_global_norm",
+    "constant_lr",
+    "cosine_warmup",
+    "linear_scaling_rule",
+    "sgd",
+    "zero1",
+]

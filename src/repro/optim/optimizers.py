@@ -1,0 +1,90 @@
+"""Optimizers, optax-style pure (init, update) pairs — no external deps.
+
+SGD + momentum is the paper's optimizer (§2.1); AdamW for the LM archs.
+Master weights/moments are fp32 regardless of param dtype (bf16 params are
+round-tripped through the update in fp32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (updates, new_state)
+    zero1_meta: Any = None      # (inner, dp_size) when ZeRO-1 wrapped
+
+
+def _f32(t):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+
+def sgd(lr: Callable[[jax.Array], jax.Array] | float,
+        momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        return {"mom": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        g32 = _f32(grads)
+        mom = jax.tree.map(lambda m, g: momentum * m + g, state["mom"], g32)
+        if nesterov:
+            eff = jax.tree.map(lambda m, g: momentum * m + g, mom, g32)
+        else:
+            eff = mom
+        lr_t = lr_fn(step)
+        updates = jax.tree.map(lambda e: -lr_t * e, eff)
+        return updates, {"mom": mom}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        g32 = _f32(grads)
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], g32)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         state["v"], g32)
+        mh = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+        lr_t = lr_fn(step)
+        updates = jax.tree.map(
+            lambda mh, vh, p: -lr_t * (
+                mh / (jnp.sqrt(vh) + eps)
+                + weight_decay * p.astype(jnp.float32)),
+            mh, vh, params)
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)

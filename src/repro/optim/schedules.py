@@ -1,0 +1,24 @@
+"""LR schedules, incl. the paper's linear-scaling rule (§5.2: lr 0.1 →
+1.0 at 256 workers, i.e. lr ∝ number of workers)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_warmup(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * (step + 1) / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def linear_scaling_rule(base_lr: float, base_workers: int, workers: int):
+    """Paper §5.2: scale the initial LR linearly with worker count."""
+    return base_lr * workers / base_workers

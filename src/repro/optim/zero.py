@@ -1,0 +1,90 @@
+"""ZeRO-1: reduce-scatter gradient sync + sharded optimizer state +
+all-gather of updates (beyond-paper lever; DESIGN.md §3).
+
+Wire cost per step and DP group of size n (bytes of gradient G):
+  flat allreduce:       2G(n-1)/n        (the paper's scheme)
+  zero1 RS + AG:         G(n-1)/n + G(n-1)/n  == same wire bytes, but
+                         optimizer state and update math drop to 1/n per
+                         device (memory) and the RS replaces the psum in
+                         the same DAG slot — so the *collective schedule*
+                         strategies apply unchanged.
+
+Implementation: all gradients are flattened into one fp32 buffer, padded
+to n; ``psum_scatter`` gives each DP rank its 1/n shard; the inner
+optimizer updates the shard (state is shard-sized); ``all_gather``
+rebuilds the full update vector.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.optimizers import Optimizer
+
+
+def _flatten(tree: Any) -> tuple[jax.Array, list]:
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate(
+        [jnp.ravel(l).astype(jnp.float32) for l in leaves])
+    return flat, leaves
+
+
+def _unflatten_like(flat: jax.Array, tree: Any) -> Any:
+    leaves, td = jax.tree_util.tree_flatten(tree)
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape)) if l.shape else 1
+        out.append(jax.lax.dynamic_slice_in_dim(flat, off, n, 0)
+                   .reshape(l.shape).astype(jnp.float32))
+        off += n
+    return jax.tree_util.tree_unflatten(td, out)
+
+
+def zero1(inner: Optimizer, dp_axes: tuple[str, ...], dp_size: int) -> Optimizer:
+    """Wrap ``inner`` so state/update math runs on a 1/dp_size shard.
+
+    Must run inside shard_map.  The *unreduced* grads go in (the RS is the
+    sync); pass strategy-synced grads only with sync disabled for DP axes.
+    """
+    axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def init(params):
+        """NOTE: valid only when ``params`` has the same (local) shapes the
+        update will see — i.e. dp_size==1 or no TP sharding.  For the
+        general case use ``TrainStep.init_opt`` (runtime/train_loop.py),
+        which builds the sharded flat state from the local shard sizes."""
+        flat, _ = _flatten(params)
+        n = flat.shape[0]
+        pad = (-n) % dp_size
+        shard = (n + pad) // dp_size
+        pseudo = jnp.zeros((shard,), jnp.float32)
+        return {"inner": inner.init(pseudo)}
+
+    def update(grads, state, params, step):
+        flat_g, _ = _flatten(grads)
+        flat_p, _ = _flatten(params)
+        n = flat_g.shape[0]            # LOCAL flat size (inside shard_map)
+        pad = (-n) % dp_size
+        if pad:
+            flat_g = jnp.pad(flat_g, (0, pad))
+            flat_p = jnp.pad(flat_p, (0, pad))
+        # (1) reduce-scatter: each rank owns the reduced 1/n shard
+        g_shard = jax.lax.psum_scatter(
+            flat_g, axis, scatter_dimension=0, tiled=True)
+        idx = jax.lax.axis_index(axis)
+        shard = g_shard.shape[0]
+        p_shard = jax.lax.dynamic_slice_in_dim(
+            flat_p, idx * shard, shard, 0)
+        # (2) sharded optimizer math
+        upd_shard, new_inner = inner.update(
+            g_shard, state["inner"], p_shard, step)
+        # (3) all-gather updates
+        flat_u = jax.lax.all_gather(upd_shard, axis, axis=0, tiled=True)
+        flat_u = flat_u[:n] if pad else flat_u
+        updates = _unflatten_like(flat_u, params)
+        return updates, {"inner": new_inner}
+
+    return Optimizer(init, update, zero1_meta=(inner, dp_size))

@@ -1,0 +1,15 @@
+from repro.parallel.sharding import (
+    DP_AXES,
+    MODEL_AXIS,
+    ShardingRules,
+    missing_axes,
+    spec_for_param,
+)
+
+__all__ = [
+    "DP_AXES",
+    "MODEL_AXIS",
+    "ShardingRules",
+    "missing_axes",
+    "spec_for_param",
+]

@@ -1,0 +1,69 @@
+"""Pipeline parallelism skeleton: GPipe-style microbatch schedule over a
+"stage" mesh axis, collective-permute for activations between stages.
+
+Not used by the assigned shapes (TP×DP covers them — DESIGN.md §5), but
+the mechanism ships tested: stages are a shard_map'd scan over microbatch
+waves where each device holds one stage's params and passes activations
+to its +1 neighbour via ``jax.lax.ppermute``.  Bubble fraction =
+(S−1)/(M+S−1) for S stages, M microbatches.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def pipeline_forward(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    stage_params: Any,          # this device's stage params (stacked dim 0
+                                # removed by shard_map over axis "stage")
+    microbatches: jax.Array,    # (M, mb, ...) input microbatches
+    *,
+    axis: str = "stage",
+    n_stages: int,
+) -> jax.Array:
+    """Run M microbatches through S pipeline stages; returns outputs in
+    microbatch order.  Must run inside shard_map with ``axis`` in the
+    mesh.  Each device applies its stage to whatever wave it holds, then
+    ppermutes the activation ring one step."""
+    M = microbatches.shape[0]
+    sid = jax.lax.axis_index(axis)
+    n_waves = M + n_stages - 1
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    mb_shape = microbatches.shape[1:]
+
+    def wave(carry, t):
+        in_flight, outputs = carry
+        # stage 0 injects microbatch t (if any remain)
+        inject = jnp.where(t < M, t, 0)
+        fresh = microbatches[inject]
+        x = jnp.where(sid == 0, fresh, in_flight)
+        y = stage_fn(stage_params, x)
+        # last stage emits a finished microbatch (wave t → mb t-S+1)
+        done_idx = t - (n_stages - 1)
+        emit = jnp.logical_and(sid == n_stages - 1, done_idx >= 0)
+        outputs = jax.lax.cond(
+            jnp.any(emit),
+            lambda o: o.at[jnp.maximum(done_idx, 0)].set(
+                jnp.where(emit, y, o[jnp.maximum(done_idx, 0)])),
+            lambda o: o,
+            outputs)
+        # rotate activations forward one stage
+        nxt = jax.lax.ppermute(y, axis, perm)
+        return (nxt, outputs), None
+
+    init = (jnp.zeros_like(microbatches[0]),
+            jnp.zeros((M, *mb_shape), microbatches.dtype))
+    (_, outputs), _ = jax.lax.scan(
+        wave, init, jnp.arange(n_waves, dtype=jnp.int32))
+    # outputs live on the last stage; broadcast so every stage returns them
+    outputs = jax.lax.psum(
+        jnp.where(sid == n_stages - 1, outputs, 0.0), axis)
+    return outputs
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

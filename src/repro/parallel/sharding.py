@@ -1,0 +1,132 @@
+"""Sharding rules: map parameter/activation logical axes to mesh axes.
+
+Conventions (see DESIGN.md §5):
+  - data-parallel axes: ("pod", "data") when present (multi-pod) else ("data",)
+  - tensor-parallel axis: "model"
+
+Parameter PartitionSpecs are derived from a per-param annotation attached by
+the model code (each module names which of its weight dims is sharded over
+"model").  Everything not mentioned is replicated.
+
+``missing_axes(spec, mesh_axes)`` gives the mesh axes a gradient for that
+param must still be reduced over after ``jax.grad`` inside ``shard_map``:
+the complement of the axes appearing in its spec.  This is the general
+correctness rule used by every grad-sync strategy in ``repro.core``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+DP_AXES = ("pod", "data")  # subset actually present in the mesh is used
+
+
+def dp_axes_of(mesh: Mesh | jax.sharding.AbstractMesh) -> tuple[str, ...]:
+    return tuple(a for a in DP_AXES if a in mesh.axis_names)
+
+
+def flat_spec_axes(spec: P) -> set[str]:
+    out: set[str] = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        if isinstance(entry, (tuple, list)):
+            out.update(entry)
+        else:
+            out.add(entry)
+    return out
+
+
+def missing_axes(spec: P, mesh: Mesh | jax.sharding.AbstractMesh) -> tuple[str, ...]:
+    """Mesh axes NOT appearing in ``spec`` — grads must be psum'd over these."""
+    have = flat_spec_axes(spec)
+    return tuple(a for a in mesh.axis_names if a not in have)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Regex → PartitionSpec table, first match wins.
+
+    Rules map parameter *names* (the stable KVStore keys from
+    ``repro.utils.trees``) to PartitionSpecs.  Model definitions register
+    their rules via ``param_rules()``; configs may override (a §Perf lever).
+    """
+
+    rules: tuple[tuple[str, P], ...]
+    default: P = P()
+
+    def spec(self, name: str) -> P:
+        for pat, spec in self.rules:
+            if re.search(pat, name):
+                return spec
+        return self.default
+
+    def tree_specs(self, params: Any) -> Any:
+        from repro.utils.trees import flatten_with_names, unflatten_from_names
+
+        named, treedef = flatten_with_names(params)
+        return unflatten_from_names(treedef, [self.spec(n) for n, _ in named])
+
+    def shardings(self, params: Any, mesh: Mesh) -> Any:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), self.tree_specs(params)
+        )
+
+
+def spec_for_param(rules: ShardingRules, name: str) -> P:
+    return rules.spec(name)
+
+
+def reduce_axes_tree(
+    rules: ShardingRules, params: Any, prefix: str, mesh_axes: tuple[str, ...]
+) -> Any:
+    """Per-leaf gradient-reduction axis groups (for depcha in-scan sync).
+
+    For each param leaf (named ``prefix + path``): the mesh axes NOT in its
+    PartitionSpec — DP axes for TP-sharded leaves, DP + "model" for
+    replicated leaves (see DESIGN.md §grad-reduction rule).
+    """
+    from repro.utils.trees import flatten_with_names, unflatten_from_names
+
+    named, _ = flatten_with_names(params)
+    axes = []
+    for n, _ in named:
+        have = flat_spec_axes(rules.spec(prefix + n))
+        axes.append(tuple(a for a in mesh_axes if a not in have))
+    return axes  # flat list, aligned with tree_flatten order of ``params``
+
+
+def localize_structs(tree: Any, specs: Any, mesh) -> Any:
+    """Global ShapeDtypeStructs → per-device local shard structs."""
+    def one(leaf, spec):
+        shape = list(leaf.shape)
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+            for a in axes:
+                shape[dim] //= mesh.shape[a]
+        return jax.ShapeDtypeStruct(tuple(shape), leaf.dtype)
+
+    return jax.tree.map(one, tree, specs,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def batch_spec(mesh: Mesh | jax.sharding.AbstractMesh) -> P:
+    """Batch dim sharded over every data-parallel axis present."""
+    dp = dp_axes_of(mesh)
+    return P(dp if len(dp) > 1 else (dp[0] if dp else None))
+
+
+def local_batch(global_batch: int, mesh: Mesh | jax.sharding.AbstractMesh) -> int:
+    n = 1
+    for a in dp_axes_of(mesh):
+        n *= mesh.shape[a]
+    if global_batch % n:
+        raise ValueError(f"global_batch {global_batch} not divisible by DP={n}")
+    return global_batch // n

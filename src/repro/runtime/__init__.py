@@ -1,0 +1,8 @@
+from repro.runtime.train_loop import (
+    SimulatedFailure,
+    Trainer,
+    make_train_step,
+)
+from repro.runtime.serve_loop import Server
+
+__all__ = ["SimulatedFailure", "Server", "Trainer", "make_train_step"]

@@ -1,0 +1,169 @@
+"""Serving runtime: shard_map'd prefill + decode with a batched request
+queue (static batching with padding; the cache lives sharded on-device).
+
+Decode sharding: batch over DP axes, heads/vocab over "model".  Greedy
+sampling uses a vocab-sharded argmax (no full-vocab gather)."""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.registry import family_of
+from repro.parallel.sharding import batch_spec, dp_axes_of
+
+
+def sharded_argmax(logits_local: jax.Array, tp: int) -> jax.Array:
+    """Greedy token from (B, V/tp) vocab-sharded logits → (B,) global ids."""
+    if tp == 1:
+        return jnp.argmax(logits_local, axis=-1).astype(jnp.int32)
+    v_local = logits_local.shape[-1]
+    idx = jax.lax.axis_index("model")
+    local_max = jnp.max(logits_local, axis=-1)
+    local_arg = jnp.argmax(logits_local, axis=-1).astype(jnp.int32) \
+        + idx * v_local
+    # gather (tp, B) maxes+args, pick deterministically (lowest shard wins ties)
+    maxes = jax.lax.all_gather(local_max, "model", axis=0)
+    args = jax.lax.all_gather(local_arg, "model", axis=0)
+    best = jnp.argmax(maxes, axis=0)
+    return jnp.take_along_axis(args, best[None], axis=0)[0]
+
+
+@dataclasses.dataclass
+class ServeFns:
+    prefill: Any
+    decode: Any
+    cache_specs: Any
+
+
+class Server:
+    """Batched greedy-decoding server for any family with serve hooks."""
+
+    def __init__(self, cfg, mesh: Mesh, params, *, max_len: int = 256,
+                 batch: int | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.api = family_of(cfg)
+        assert self.api.prefill is not None, f"{cfg.name} has no serve path"
+        self.rules = self.api.param_rules(cfg)
+        self.pspecs = self.rules.tree_specs(params)
+        self.params = jax.device_put(
+            params, jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                 self.pspecs))
+        self.max_len = max_len
+        self.tp = getattr(cfg, "tp", 1)
+        self._fns: dict[int, ServeFns] = {}
+        self.dp = dp_axes_of(mesh)
+        self.dp_size = int(np.prod([mesh.shape[a] for a in self.dp])) or 1
+
+    def _build(self, B: int) -> ServeFns:
+        cfg, mesh, api = self.cfg, self.mesh, self.api
+        bspec = batch_spec(mesh)
+        B_local = B // self.dp_size
+
+        batch_entry = bspec[0] if len(bspec) else None
+        cspecs = api.decode_state_specs(cfg, batch_entry)
+
+        def prefill_fn(params, tokens):
+            logits, cache = api.prefill(params, tokens, cfg)
+            tok = sharded_argmax(logits.astype(jnp.float32), cfg.tp)
+            return tok, cache
+
+        def decode_fn(params, cache, tok, pos):
+            logits, cache = api.decode_step(params, cache, tok, pos, cfg)
+            nxt = sharded_argmax(logits.astype(jnp.float32), cfg.tp)
+            return nxt, cache
+
+        pf = jax.jit(jax.shard_map(
+            prefill_fn, mesh=mesh,
+            in_specs=(self.pspecs, bspec),
+            out_specs=(bspec, cspecs), check_vma=False))
+        dc = jax.jit(jax.shard_map(
+            decode_fn, mesh=mesh,
+            in_specs=(self.pspecs, cspecs, bspec, P()),
+            out_specs=(bspec, cspecs), check_vma=False),
+            donate_argnums=(1,))
+        return ServeFns(pf, dc, cspecs)
+
+    def _pad_cache(self, cache, prompt_len: int):
+        """Grow prefill cache (seq dim = prompt_len) to max_len slots."""
+        def pad(leaf):
+            if leaf.ndim >= 3 and leaf.shape[2] == prompt_len:
+                pad_n = self.max_len - prompt_len
+                if pad_n > 0:
+                    cfgpad = [(0, 0)] * leaf.ndim
+                    cfgpad[2] = (0, pad_n)
+                    return jnp.pad(leaf, cfgpad)
+            return leaf
+        return jax.tree.map(pad, cache)
+
+    def generate(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
+        """prompts: (B, S) int32 → (B, max_new) greedy continuations."""
+        B, S = prompts.shape
+        if B not in self._fns:
+            self._fns[B] = self._build(B)
+        fns = self._fns[B]
+        toks = jax.device_put(
+            jnp.asarray(prompts, jnp.int32),
+            NamedSharding(self.mesh, batch_spec(self.mesh)))
+        tok, cache = fns.prefill(self.params, toks)
+        needs_pad = any(
+            l.ndim >= 3 and l.shape[2] == S
+            for l in jax.tree.leaves(cache)) and S != self.max_len
+        if needs_pad:
+            cache = self._pad_cache(cache, S)
+            cache = jax.device_put(
+                cache, jax.tree.map(
+                    lambda s: NamedSharding(self.mesh, s), fns.cache_specs))
+        out = [np.asarray(tok)]
+        pos = S
+        for _ in range(max_new - 1):
+            tok, cache = fns.decode(self.params, cache, tok, jnp.int32(pos))
+            out.append(np.asarray(tok))
+            pos += 1
+        return np.stack(out, axis=1)
+
+
+class RequestQueue:
+    """Minimal batching front-end: collects up to ``batch`` requests (or
+    ``timeout_s``), pads to a common length, serves, returns per-request."""
+
+    def __init__(self, server: Server, batch: int, timeout_s: float = 0.05):
+        self.server = server
+        self.batch = batch
+        self.timeout_s = timeout_s
+        self.q: queue.Queue = queue.Queue()
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> "queue.Queue":
+        done: queue.Queue = queue.Queue(maxsize=1)
+        self.q.put((prompt, max_new, done))
+        return done
+
+    def serve_once(self) -> int:
+        """Drain up to ``batch`` requests, run one padded generate."""
+        reqs = []
+        try:
+            reqs.append(self.q.get(timeout=self.timeout_s))
+            while len(reqs) < self.batch:
+                reqs.append(self.q.get_nowait())
+        except queue.Empty:
+            pass
+        if not reqs:
+            return 0
+        max_len = max(r[0].shape[0] for r in reqs)
+        max_new = max(r[1] for r in reqs)
+        n = len(reqs)
+        pad_to = self.batch
+        toks = np.zeros((pad_to, max_len), np.int32)
+        for i, (p, _, _) in enumerate(reqs):
+            toks[i, max_len - p.shape[0]:] = p   # left-pad
+        out = self.server.generate(toks, max_new)
+        for i, (_, mn, done) in enumerate(reqs):
+            done.put(out[i, :mn])
+        return n

@@ -1,0 +1,314 @@
+"""Training runtime: step factory (shard_map + GradSync strategies) and a
+fault-tolerant loop (checkpoint/restart, failure recovery, straggler
+detection, elastic re-mesh).
+
+Grad-reduction rule (DESIGN.md; see also the TP-transpose note): after
+``jax.grad`` inside shard_map(check_vma=False), every gradient is
+``tp ×`` its true per-shard value (psum-transpose inflation), and still
+needs a psum over the mesh axes missing from its param spec.  So:
+
+    grads ← grads / tp                 (uniform correction)
+    grads ← strategy psums over missing axes (GradSync buckets; depcha
+            leaves already reduced inside the backward scan are skipped)
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import GradSync, GradSyncConfig
+from repro.models.registry import family_of
+from repro.optim.optimizers import (
+    Optimizer,
+    apply_updates,
+    clip_by_global_norm,
+)
+from repro.parallel.sharding import batch_spec, dp_axes_of
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure (testing the recovery path)."""
+
+
+def _batch_specs(batch_like: Any, mesh: Mesh) -> Any:
+    bspec = batch_spec(mesh)
+    return {
+        k: (P() if np.ndim(v) == 0 else bspec)
+        for k, v in batch_like.items()
+    }
+
+
+def _opt_state_specs(state_like: Any, params_like: Any, pspecs: Any,
+                     mesh: Mesh) -> Any:
+    """Specs for optimizer state: param-shaped sub-trees mirror param
+    specs; flat ZeRO shards are sharded over the DP axes."""
+    params_td = jax.tree_util.tree_structure(params_like)
+    dp = dp_axes_of(mesh)
+    dp_spec = P(dp if len(dp) > 1 else dp[0]) if dp else P()
+
+    def sub(v):
+        td = jax.tree_util.tree_structure(v)
+        if td == params_td:
+            return pspecs
+        return jax.tree.map(lambda _: dp_spec, v)   # zero1 flat shards
+
+    return {k: sub(v) for k, v in state_like.items()}
+
+
+@dataclasses.dataclass
+class TrainStep:
+    fn: Callable[..., Any]            # jitted (params, opt_state, batch, i)
+    param_specs: Any
+    opt_specs: Any
+    batch_specs: Any
+    mesh: Mesh
+    gradsync: GradSync | None
+    opt_state_like: Any = None        # global ShapeDtypeStructs
+
+    def shardings(self, tree_specs):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), tree_specs)
+
+    def init_opt(self) -> Any:
+        """Zero-initialized optimizer state with the step's shardings.
+
+        Required for ZeRO-1 under TP (the flat shard size depends on the
+        LOCAL param shapes, which ``optimizer.init(global_params)`` cannot
+        see); valid for every shipped optimizer (states are zero-init)."""
+        sh = self.shardings(self.opt_specs)
+        return jax.tree.map(
+            lambda l, s: jax.device_put(jnp.zeros(l.shape, l.dtype), s),
+            self.opt_state_like, sh)
+
+
+def make_train_step(
+    cfg: Any,
+    mesh: Mesh,
+    sync: GradSyncConfig,
+    optimizer: Optimizer,
+    *,
+    batch_like: Any,
+    params_like: Any,
+    clip_norm: float = 1.0,
+    zero1_mode: bool = False,
+    microbatch: int = 1,    # grad-accumulation factor (memory §Perf lever)
+    donate: bool = False,   # enable in production (launcher); off for tests
+) -> TrainStep:
+    """Build the jitted, shard_map'd train step for one (arch, mesh, sync).
+
+    ``batch_like``/``params_like`` may be ShapeDtypeStructs (dry-run) or
+    concrete arrays (training) — only shapes/dtypes are read here.
+    """
+    api = family_of(cfg)
+    rules = api.param_rules(cfg)
+    pspecs = rules.tree_specs(params_like)
+    bspecs = _batch_specs(batch_like, mesh)
+    tp = getattr(cfg, "tp", 1)
+    dp = dp_axes_of(mesh)
+
+    if getattr(optimizer, "zero1_meta", None):
+        # ZeRO-1: flat shard size derives from LOCAL param shapes
+        from repro.parallel.sharding import localize_structs as _loc
+        inner_opt, dp_size = optimizer.zero1_meta
+        local_p = _loc(jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params_like),
+            pspecs, mesh)
+        n_local = sum(int(np.prod(l.shape)) for l in
+                      jax.tree.leaves(local_p))
+        shard = (n_local + (-n_local) % dp_size) // dp_size
+        inner_like = jax.eval_shape(
+            inner_opt.init, jax.ShapeDtypeStruct((shard,), jnp.float32))
+        # global view: each flat leaf is dp-sharded on dim 0
+        opt_state_like = {"inner": jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((l.shape[0] * dp_size,
+                                            *l.shape[1:]), l.dtype),
+            inner_like)}
+    else:
+        opt_state_like = jax.eval_shape(optimizer.init, params_like)
+    ospecs = _opt_state_specs(opt_state_like, params_like, pspecs, mesh)
+
+    in_scan = (api.in_scan_names(params_like)
+               if sync.strategy == "depcha" else frozenset())
+    # bucket plan must see LOCAL shard shapes (it runs inside shard_map)
+    from repro.parallel.sharding import localize_structs
+    grads_local = localize_structs(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                     params_like),
+        pspecs, mesh)
+    gs = GradSync(sync, mesh, pspecs, grads_local, in_scan_names=in_scan)
+
+    def step(params, opt_state, batch, step_idx):
+        if microbatch > 1:
+            # grad accumulation: scan over microbatches — activations live
+            # only for one microbatch (temp memory ÷ microbatch)
+            def split(x):
+                if np.ndim(x) == 0:
+                    return jnp.broadcast_to(x, (microbatch,))
+                b = x.shape[0]
+                return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(
+                    lambda p: api.train_forward(p, mb, cfg))(params)
+                acc_l, acc_g = acc
+                acc_g = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc_g, g)
+                return (acc_l + l, acc_g), None
+
+            zero = (jnp.float32(0.0),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            # chunk_unroll = exact-HLO-accounting mode (dry-run deltas):
+            # unroll so cost_analysis sees every microbatch
+            mb_unroll = microbatch if getattr(
+                cfg, "chunk_unroll", False) else 1
+            (loss, grads), _ = jax.lax.scan(body, zero, mbs,
+                                            unroll=mb_unroll)
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: api.train_forward(p, batch, cfg))(params)
+        if tp > 1:   # psum-transpose inflation (module docstring)
+            grads = jax.tree.map(lambda g: g / tp, grads)
+        # zero1_mode: sync.exclude_axes=dp — buckets then carry only the
+        # model-axis reductions; the DP sum happens in zero1's
+        # reduce-scatter inside optimizer.update.
+        grads = gs(grads)
+        if clip_norm and not zero1_mode:
+            # (zero1: grads are still DP-partial here — the local norm
+            # would differ per rank; clip inside the sharded update
+            # instead if needed)
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = jnp.float32(0.0)
+        updates, opt_state = optimizer.update(
+            grads, opt_state, params, step_idx)
+        params = apply_updates(params, updates)
+        loss = jax.lax.psum(loss, dp) if dp else loss
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    mspecs = {"loss": P(), "grad_norm": P()}
+    wrapped = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(pspecs, ospecs, bspecs, P()),
+        out_specs=(pspecs, ospecs, mspecs),
+        check_vma=False)
+    jitted = jax.jit(wrapped, donate_argnums=(0, 1) if donate else ())
+    return TrainStep(jitted, pspecs, ospecs, bspecs, mesh, gs,
+                     opt_state_like)
+
+
+class Trainer:
+    """Fault-tolerant training driver.
+
+    - checkpoint/restart via CheckpointManager (atomic, async)
+    - deterministic data (batch = f(seed, step)) → exact resume
+    - failure injection (``fail_at``): simulates node loss at given steps;
+      recovery = restore latest checkpoint and replay
+    - straggler mitigation: steps slower than ``straggler_factor`` × the
+      running median are logged and counted; after ``straggler_patience``
+      consecutive hits the (simulated) response is a re-shard event —
+      on a real fleet this triggers hot-spare swap-in
+    """
+
+    def __init__(self, step_fn: TrainStep, pipeline, ckpt,
+                 *, fail_at: frozenset[int] = frozenset(),
+                 straggler_factor: float = 3.0,
+                 straggler_patience: int = 3,
+                 log_every: int = 10,
+                 printer: Callable[[str], None] = print):
+        self.step_fn = step_fn
+        self.pipeline = pipeline
+        self.ckpt = ckpt
+        self.fail_at = set(fail_at)
+        self.straggler_factor = straggler_factor
+        self.straggler_patience = straggler_patience
+        self.log_every = log_every
+        self.printer = printer
+        self.step_times: list[float] = []
+        self.events: list[dict] = []
+
+    def run(self, params, opt_state, num_steps: int,
+            start_step: int = 0) -> tuple[Any, Any, dict]:
+        step = start_step
+        if self.ckpt is not None and self.ckpt.latest() is not None:
+            step, state = self.ckpt.restore(
+                {"params": params, "opt": opt_state})
+            params = jax.device_put(
+                state["params"], self.step_fn.shardings(
+                    self.step_fn.param_specs))
+            opt_state = jax.device_put(
+                state["opt"], self.step_fn.shardings(self.step_fn.opt_specs))
+            self.events.append({"kind": "restore", "step": step})
+            self.printer(f"[trainer] restored checkpoint at step {step}")
+
+        losses = []
+        consec_slow = 0
+        while step < num_steps:
+            batch = self.pipeline.batch_at(step)
+            t0 = time.perf_counter()
+            try:
+                if step in self.fail_at:
+                    self.fail_at.discard(step)
+                    raise SimulatedFailure(f"injected node loss @ {step}")
+                params, opt_state, metrics = self.step_fn.fn(
+                    params, opt_state, batch, jnp.int32(step))
+                jax.block_until_ready(metrics["loss"])
+            except SimulatedFailure as e:
+                self.events.append({"kind": "failure", "step": step})
+                self.printer(f"[trainer] {e}; recovering from checkpoint")
+                if self.ckpt is None or self.ckpt.latest() is None:
+                    self.printer("[trainer] no checkpoint; restart from 0")
+                    step = start_step
+                    continue
+                s, state = self.ckpt.restore(
+                    {"params": params, "opt": opt_state})
+                params = jax.device_put(
+                    state["params"],
+                    self.step_fn.shardings(self.step_fn.param_specs))
+                opt_state = jax.device_put(
+                    state["opt"],
+                    self.step_fn.shardings(self.step_fn.opt_specs))
+                step = s
+                self.events.append({"kind": "recover", "step": s})
+                continue
+
+            dt = time.perf_counter() - t0
+            if len(self.step_times) >= 5:
+                med = statistics.median(self.step_times[-50:])
+                if dt > self.straggler_factor * med:
+                    consec_slow += 1
+                    self.events.append(
+                        {"kind": "straggler", "step": step, "dt": dt,
+                         "median": med})
+                    if consec_slow >= self.straggler_patience:
+                        self.events.append(
+                            {"kind": "remesh_requested", "step": step})
+                        self.printer(
+                            f"[trainer] {consec_slow} consecutive straggler "
+                            f"steps — requesting re-shard / hot-spare swap")
+                        consec_slow = 0
+                else:
+                    consec_slow = 0
+            self.step_times.append(dt)
+
+            losses.append(float(metrics["loss"]))
+            if step % self.log_every == 0:
+                self.printer(
+                    f"[trainer] step {step} loss {losses[-1]:.4f} "
+                    f"({dt*1e3:.1f} ms)")
+            step += 1
+            if self.ckpt is not None:
+                self.ckpt.maybe_save(
+                    step, {"params": params, "opt": opt_state})
+
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return params, opt_state, {"losses": losses, "events": self.events}

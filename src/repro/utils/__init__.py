@@ -1,0 +1,13 @@
+from repro.utils.trees import (
+    flatten_with_names,
+    named_leaves,
+    tree_size_bytes,
+    unflatten_from_names,
+)
+
+__all__ = [
+    "flatten_with_names",
+    "named_leaves",
+    "tree_size_bytes",
+    "unflatten_from_names",
+]

@@ -1,0 +1,59 @@
+"""Pytree utilities: stable key-naming of leaves.
+
+The paper's KVStore names every gradient tensor with an integer key
+("MXNET linearly orders all the relevant tensors and assigns unique keys,
+starting from zero", §3.3).  We reproduce that: leaves of a gradient pytree
+are linearly ordered by their tree path, and that order is identical across
+workers because the pytree structure is identical (same SPMD program).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:  # FlattenedIndexKey and anything else
+            parts.append(str(getattr(p, "key", p)))
+    return "/".join(parts)
+
+
+def flatten_with_names(tree: Any) -> tuple[list[tuple[str, Any]], Any]:
+    """Flatten ``tree`` to ``[(name, leaf), ...]`` + treedef, in stable order."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    named = [(_path_str(path), leaf) for path, leaf in leaves]
+    return named, treedef
+
+
+def named_leaves(tree: Any) -> list[tuple[str, Any]]:
+    return flatten_with_names(tree)[0]
+
+
+def unflatten_from_names(treedef: Any, leaves: list[Any]) -> Any:
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStruct too)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_map_with_names(
+    fn: Callable[[str, Any], Any], tree: Any
+) -> Any:
+    named, treedef = flatten_with_names(tree)
+    return unflatten_from_names(treedef, [fn(n, l) for n, l in named])

@@ -1,0 +1,23 @@
+# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benches must see
+# the real single CPU device; only launch/dryrun.py forces 512 devices.
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def smoke_mesh():
+    from repro.launch.mesh import make_smoke_mesh
+
+    return make_smoke_mesh(1, 1)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,95 @@
+"""Checkpointing: atomic roundtrip, retention, async, elastic reshard."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager, reshard, restore, save
+from repro.checkpoint.manager import latest_step
+from repro.checkpoint.reshard import validate_divisibility
+from repro.parallel.sharding import ShardingRules
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(24.0).reshape(4, 6),
+                   "b": jnp.ones((3,), jnp.bfloat16)},
+        "opt": {"m": {"w": jnp.zeros((4, 6)), "b": jnp.zeros((3,))}},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 7, t)
+    out = restore(str(tmp_path), 7, t)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_atomicity_ignores_tmp(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 3, t)
+    # a crashed write leaves only a .tmp dir — must be invisible
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=2, blocking=True)
+    t = _tree()
+    for s in range(1, 6):
+        mgr.maybe_save(s, t)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    assert len(steps) == 2
+    assert mgr.latest() == 5
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=3, blocking=False)
+    t = _tree()
+    mgr.maybe_save(1, t)
+    mgr.wait()
+    s, out = mgr.restore(t)
+    assert s == 1
+    np.testing.assert_array_equal(
+        np.asarray(out["params"]["w"]), np.asarray(t["params"]["w"]))
+
+
+def test_shape_mismatch_detected(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    bad = jax.tree.map(lambda x: x, t)
+    bad["params"]["w"] = jnp.zeros((5, 6))
+    with pytest.raises(ValueError, match="checkpoint"):
+        restore(str(tmp_path), 1, bad)
+
+
+def test_reshard_elastic(tmp_path, smoke_mesh):
+    """Checkpoint written under one mesh restores onto another (here the
+    smoke mesh — the mechanism is placement-by-spec, mesh-agnostic)."""
+    rules = ShardingRules(rules=(("w", P(None, "model")),))
+    t = {"w": jnp.arange(32.0).reshape(4, 8), "b": jnp.ones((4,))}
+    save(str(tmp_path), 1, t)
+    loaded = restore(str(tmp_path), 1, t)
+    placed = reshard(loaded, rules, smoke_mesh)
+    np.testing.assert_array_equal(np.asarray(placed["w"]), np.asarray(t["w"]))
+
+
+def test_reshard_divisibility_error(smoke_mesh):
+    from repro.launch.mesh import make_smoke_mesh
+
+    rules = ShardingRules(rules=(("w", P(None, "model")),))
+    t = {"w": jnp.zeros((4, 7))}   # 7 not divisible by any model axis > 1
+    specs = rules.tree_specs(t)
+    # on the 1-device smoke mesh it IS divisible; fabricate a failure by
+    # checking the validator logic directly with a fake mesh dict
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 1, "model": 2}
+    with pytest.raises(ValueError, match="not divisible"):
+        validate_divisibility(t, specs, FakeMesh())

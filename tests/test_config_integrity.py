@@ -1,0 +1,91 @@
+"""Config integrity: the FULL assigned configs (via eval_shape only — no
+allocation) must match the assignment table and plausible param counts."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, param_structs
+from repro.utils.trees import named_leaves
+
+# arch -> (expected total params, rel tolerance). MoE = total (not active).
+EXPECTED_PARAMS = {
+    "llama-3.2-vision-11b": (11e9, 0.25),
+    "musicgen-large": (2.2e9, 0.4),        # 48L d2048 + small vocab
+    "h2o-danube-1.8b": (1.8e9, 0.25),
+    "qwen3-1.7b": (2.0e9, 0.3),
+    "starcoder2-3b": (3.2e9, 0.3),         # incl. padded heads
+    "minitron-8b": (8.3e9, 0.25),
+    "rwkv6-7b": (7.6e9, 0.3),
+    "granite-moe-1b-a400m": (1.3e9, 0.35),
+    "kimi-k2-1t-a32b": (1.0e12, 0.15),
+    "zamba2-2.7b": (2.7e9, 0.35),
+}
+
+ASSIGNED_TABLE = {
+    # arch: (n_layers, d_model, vocab)
+    "llama-3.2-vision-11b": (40, 4096, 128256),
+    "musicgen-large": (48, 2048, 2048),
+    "h2o-danube-1.8b": (24, 2560, 32000),
+    "qwen3-1.7b": (28, 2048, 151936),
+    "starcoder2-3b": (30, 3072, 49152),
+    "minitron-8b": (32, 4096, 256000),
+    "rwkv6-7b": (32, 4096, 65536),
+    "granite-moe-1b-a400m": (24, 1024, 49155),
+    "kimi-k2-1t-a32b": (61, 7168, 163840),
+    "zamba2-2.7b": (54, 2560, 32000),
+}
+
+
+@pytest.mark.parametrize("arch_id", sorted(EXPECTED_PARAMS))
+def test_full_config_param_count(arch_id):
+    arch = ARCHS[arch_id]
+    cfg = arch.make_config(tp=16, dp_axes=("data",))
+    structs = param_structs(cfg)          # eval_shape: no allocation
+    total = sum(int(np.prod(l.shape)) for _, l in named_leaves(structs))
+    want, tol = EXPECTED_PARAMS[arch_id]
+    assert abs(total - want) / want < tol, (
+        f"{arch_id}: {total/1e9:.2f}B params vs expected "
+        f"{want/1e9:.2f}B ±{tol*100:.0f}%")
+
+
+@pytest.mark.parametrize("arch_id", sorted(ASSIGNED_TABLE))
+def test_assigned_dims(arch_id):
+    cfg = ARCHS[arch_id].make_config(tp=16, dp_axes=("data",))
+    L, d, v = ASSIGNED_TABLE[arch_id]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.vocab == v
+
+
+def test_all_archs_have_smoke_and_shapes():
+    for aid, arch in ARCHS.items():
+        assert arch.make_smoke() is not None
+        assert len(arch.shapes) >= 1
+        if arch.family in ("transformer", "rwkv", "ssm"):
+            names = {s.name for s in arch.shapes}
+            assert names == {"train_4k", "prefill_32k", "decode_32k",
+                             "long_500k"}, aid
+
+
+def test_full_configs_divisible_for_production_mesh():
+    """Every sharded dim of every full config divides tp=16 (the
+    production model axis) — the dry-run proves this end-to-end; this is
+    the fast structural check."""
+    from repro.models.registry import family_of
+    from repro.parallel.sharding import flat_spec_axes
+
+    for aid in EXPECTED_PARAMS:
+        cfg = ARCHS[aid].make_config(tp=16, dp_axes=("data",))
+        api = family_of(cfg)
+        rules = api.param_rules(cfg)
+        structs = param_structs(cfg)
+        for name, leaf in named_leaves(structs):
+            spec = rules.spec(name)
+            for dim, entry in enumerate(spec):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                n = 1
+                for a in axes:
+                    n *= {"model": 16, "data": 16, "pod": 2}[a]
+                assert leaf.shape[dim] % n == 0, (aid, name, dim)

@@ -1,0 +1,108 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quantize.ops import dequantize_blocks, quantize_blocks
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+from repro.kernels.rwkv6.ops import wkv_chunk
+from repro.kernels.rwkv6.ref import wkv_ref
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,dtype,causal", [
+    (2, 128, 4, 2, 64, jnp.float32, True),
+    (1, 256, 2, 2, 128, jnp.float32, False),
+    (2, 128, 4, 1, 64, jnp.bfloat16, True),
+    (1, 512, 8, 4, 64, jnp.float32, True),
+    (2, 128, 2, 2, 256, jnp.bfloat16, False),
+])
+def test_flash_attention_vs_ref(B, S, Hq, Hkv, D, dtype, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    rep = Hq // Hkv
+    kr = jnp.repeat(k, rep, 2).transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    vr = jnp.repeat(v, rep, 2).transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    qr = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    ref = attention_ref(qr, kr, vr, causal=causal)
+    ref = ref.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("n_blocks", [64, 128, 1024])
+@pytest.mark.parametrize("scale", [1e-4, 1.0, 1e3])
+def test_quantize_vs_ref(n_blocks, scale):
+    x = jax.random.normal(
+        jax.random.PRNGKey(1), (n_blocks * 256,), jnp.float32) * scale
+    q, s = quantize_blocks(x, interpret=True)
+    qr, sr = quantize_ref(x.reshape(-1, 256))
+    np.testing.assert_array_equal(np.asarray(q).reshape(-1, 256),
+                                  np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    xd = dequantize_blocks(q, s, interpret=True)
+    ref = dequantize_ref(qr, sr).reshape(-1)
+    np.testing.assert_allclose(np.asarray(xd), np.asarray(ref), rtol=1e-6)
+    # quantization error bound: |x - deq| <= scale/2 per block
+    err = np.abs(np.asarray(x) - np.asarray(xd)).reshape(-1, 256)
+    bound = np.asarray(s)[:, None] * 0.5 + 1e-7
+    assert np.all(err <= bound)
+
+
+@pytest.mark.parametrize("B,C,H,N,dtype", [
+    (2, 32, 4, 64, jnp.float32),
+    (1, 64, 2, 64, jnp.float32),
+    (2, 16, 8, 64, jnp.bfloat16),
+])
+def test_wkv_chunk_vs_sequential_ref(B, C, H, N, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    r = jax.random.normal(ks[0], (B, C, H, N), dtype)
+    k = jax.random.normal(ks[1], (B, C, H, N), dtype)
+    v = jax.random.normal(ks[2], (B, C, H, N), dtype)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, C, H, N)) * 0.5 - 2.0
+                    ).astype(jnp.float32)
+    u = (jax.random.normal(ks[4], (H, N)) * 0.1).astype(jnp.float32)
+    st = (jax.random.normal(ks[5], (B, H, N, N)) * 0.1).astype(jnp.float32)
+    y, s1 = wkv_chunk(r, k, v, logw, u, st, interpret=True)
+
+    def flat(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, C, N)
+    u_b = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, 1, N)
+    yr, sr = wkv_ref(flat(r), flat(k), flat(v), flat(logw), u_b,
+                     st.reshape(B * H, N, N))
+    yr = yr.reshape(B, H, C, N).transpose(0, 2, 1, 3)
+    sr = sr.reshape(B, H, N, N)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(sr),
+                               atol=tol, rtol=tol)
+
+
+def test_model_wkv_matches_kernel():
+    """The model's chunked-parallel WKV == the Pallas kernel's math (one
+    chunk), tying model and kernel implementations together."""
+    from repro.models.rwkv import wkv_chunked
+
+    B, C, H, N = 2, 32, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    r = jax.random.normal(ks[0], (B, C, H, N), jnp.float32)
+    k = jax.random.normal(ks[1], (B, C, H, N), jnp.float32)
+    v = jax.random.normal(ks[2], (B, C, H, N), jnp.float32)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, C, H, N)) * 0.5 - 2.0)
+    u = jax.random.normal(ks[4], (H, N)) * 0.1
+    st = jax.random.normal(ks[5], (B, H, N, N)) * 0.1
+
+    y_model, s_model = wkv_chunked(r, k, v, logw, u, st, chunk=C)
+    y_kern, s_kern = wkv_chunk(r, k, v, logw, u, st, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_kern),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(s_model), np.asarray(s_kern),
+                               atol=5e-4, rtol=5e-4)

@@ -1,0 +1,32 @@
+"""Multi-device (8 fake CPU devices) correctness, run in a subprocess —
+jax fixes the device count at first init, so the main pytest process
+(1 device) can't host these."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def worker_output():
+    script = os.path.join(os.path.dirname(__file__), "_mdworker.py")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    proc = subprocess.run(
+        [sys.executable, script], env=env,
+        capture_output=True, text=True, timeout=1800)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout
+
+
+def test_worker_completed(worker_output):
+    assert "DONE" in worker_output
+
+
+def test_all_multidevice_checks_pass(worker_output):
+    fails = [l for l in worker_output.splitlines() if l.startswith("FAIL")]
+    passes = [l for l in worker_output.splitlines() if l.startswith("PASS")]
+    assert not fails, fails
+    assert len(passes) >= 15, worker_output

@@ -1,0 +1,126 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from jax.sharding import PartitionSpec as P
+
+from repro.core.buckets import make_bucket_plan, pack, unpack
+from repro.core.compression import (
+    dequantize_blockwise,
+    quantize_blockwise,
+)
+from repro.models.common import HeadLayout, rms_norm
+from repro.parallel.sharding import ShardingRules
+
+hypothesis.settings.register_profile(
+    "fast", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("fast")
+
+
+@st.composite
+def leaf_shapes(draw):
+    n = draw(st.integers(1, 6))
+    return [tuple(draw(st.lists(st.integers(1, 8), min_size=1, max_size=3)))
+            for _ in range(n)]
+
+
+@given(leaf_shapes(), st.integers(0, 256), st.integers(1, 4))
+def test_bucket_plan_covers_each_leaf_once(shapes, bucket_bytes, channels):
+    from repro.launch.mesh import make_smoke_mesh
+
+    mesh = make_smoke_mesh(1, 1)
+    grads = {f"g{i}": jnp.zeros(s, jnp.float32)
+             for i, s in enumerate(shapes)}
+    specs = jax.tree.map(lambda _: P(), grads)
+    plan = make_bucket_plan(grads, specs, mesh,
+                            bucket_bytes=bucket_bytes,
+                            num_channels=channels)
+    names = [l.name for b in plan.buckets for l in b.leaves]
+    assert sorted(names) == sorted(grads)
+    # size-capped: any multi-leaf bucket is within cap (single leaves may
+    # exceed — a leaf larger than the cap still needs one collective)
+    for b in plan.buckets:
+        if bucket_bytes and len(b.leaves) > 1:
+            assert b.size * 4 <= bucket_bytes or len(b.leaves) == 1
+    # channels are within range
+    assert all(0 <= b.channel < channels for b in plan.buckets)
+
+
+@given(leaf_shapes())
+def test_pack_unpack_identity(shapes):
+    from repro.launch.mesh import make_smoke_mesh
+
+    mesh = make_smoke_mesh(1, 1)
+    rng = np.random.default_rng(0)
+    grads = {f"g{i}": jnp.asarray(rng.standard_normal(s), jnp.float32)
+             for i, s in enumerate(shapes)}
+    specs = jax.tree.map(lambda _: P(), grads)
+    plan = make_bucket_plan(grads, specs, mesh, bucket_bytes=97)
+    flat = jax.tree.leaves(grads)
+    out = [None] * len(flat)
+    for b in plan.buckets:
+        unpack(b, pack(b, flat, jnp.float32), out)
+    for got, want in zip(out, flat):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+
+@given(st.integers(1, 64), st.floats(1e-5, 1e4))
+def test_quantize_error_bound(n_blocks, scale):
+    rng = np.random.default_rng(n_blocks)
+    x = jnp.asarray(rng.standard_normal(n_blocks * 256) * scale,
+                    jnp.float32)
+    q, s = quantize_blockwise(x)
+    xd = dequantize_blockwise(q, s)
+    err = np.abs(np.asarray(x) - np.asarray(xd)).reshape(-1, 256)
+    bound = np.asarray(s)[:, None] * 0.5 * (1 + 1e-5) + 1e-8
+    assert np.all(err <= bound)
+
+
+@given(st.integers(1, 8), st.integers(1, 32))
+def test_rms_norm_scale_invariance(b, d):
+    """rms_norm(c*x) ≈ rms_norm(x) for c>0 — exact up to the eps term
+    (eps=1e-6 regularizes the rsqrt, so tiny-variance rows deviate)."""
+    rng = np.random.default_rng(b * 100 + d)
+    x = jnp.asarray(rng.standard_normal((b, d)) + 0.1, jnp.float32)
+    g = jnp.ones((d,), jnp.float32)
+    y1 = rms_norm(x, g)
+    y2 = rms_norm(x * 7.5, g)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-3, rtol=2e-3)
+
+
+@given(st.sampled_from([1, 2, 4, 8, 16]),
+       st.sampled_from([1, 2, 4, 8, 16, 32, 64]),
+       st.sampled_from([1, 2, 4, 8, 16, 32]))
+def test_head_layout_invariants(tp, n_heads, kv_heads):
+    hypothesis.assume(n_heads % tp == 0)
+    hypothesis.assume(kv_heads <= n_heads)
+    hypothesis.assume(n_heads % kv_heads == 0)
+    lay = HeadLayout(n_heads, kv_heads, 64, tp)
+    assert lay.q_local * tp == n_heads
+    if lay.kv_sharded:
+        assert lay.kv_local * tp == kv_heads
+    else:
+        # every device's q heads map to exactly the kv heads it slices
+        group = lay.group
+        for dev in range(tp):
+            start = (dev * lay.q_local) // group
+            for qi in range(lay.q_local):
+                g_q = dev * lay.q_local + qi
+                kv = g_q // group
+                assert start <= kv < start + lay.kv_local
+
+
+@given(st.integers(1, 5), st.integers(1, 3))
+def test_sharding_rules_first_match_wins(n_rules, seed):
+    rules = ShardingRules(rules=tuple(
+        (f"w{i}", P("model" if i % 2 == 0 else None))
+        for i in range(n_rules)))
+    # w0 matches rule 0 regardless of later rules
+    assert rules.spec("blocks/w0") == P("model")
+    assert rules.spec("nomatch") == P()

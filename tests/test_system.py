@@ -1,0 +1,158 @@
+"""End-to-end system behaviour: fault-tolerant training runtime +
+batched serving (deliverables a/b/c integration)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import GradSyncConfig
+from repro.data import ImagePipeline, Prefetcher, TokenPipeline
+from repro.models import transformer as tf
+from repro.optim import adamw, cosine_warmup, sgd, zero1
+from repro.runtime import Server, Trainer, make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup(smoke_mesh):
+    cfg = tf.TransformerConfig(
+        name="sys", n_layers=2, d_model=32, n_heads=4, kv_heads=2,
+        d_ff=64, vocab=64, tp=1, attn_chunk=16, dtype=jnp.float32)
+    pipe = TokenPipeline(64, 16, 4, seed=11, mesh=smoke_mesh)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw(cosine_warmup(3e-3, 5, 100))
+    ts = make_train_step(
+        cfg, smoke_mesh,
+        GradSyncConfig(strategy="depcha", num_channels=2,
+                       bucket_bytes=1 << 14),
+        opt, batch_like=pipe.batch_at(0), params_like=params)
+    return cfg, pipe, params, opt, ts
+
+
+def test_loss_decreases(setup, tmp_path):
+    cfg, pipe, params, opt, ts = setup
+    # repeat ONE batch so the loss must fall (overfit sanity)
+    class OneBatch:
+        def batch_at(self, step):
+            return pipe.batch_at(0)
+    tr = Trainer(ts, OneBatch(), None, log_every=1000)
+    _, _, hist = tr.run(params, opt.init(params), 30)
+    assert hist["losses"][-1] < hist["losses"][0] - 0.1, hist["losses"][::10]
+
+
+def test_failure_recovery_is_deterministic(setup, tmp_path):
+    cfg, pipe, params, opt, ts = setup
+    opt_state = opt.init(params)
+
+    ck1 = CheckpointManager(str(tmp_path / "a"), every=5, keep=2,
+                            blocking=True)
+    p1, _, _ = Trainer(ts, pipe, ck1, log_every=1000).run(
+        params, opt_state, 12)
+
+    ck2 = CheckpointManager(str(tmp_path / "b"), every=5, keep=2,
+                            blocking=True)
+    p2, _, hist = Trainer(ts, pipe, ck2, log_every=1000,
+                          fail_at=frozenset({8})).run(
+        params, opt_state, 12)
+    kinds = [e["kind"] for e in hist["events"]]
+    assert "failure" in kinds and "recover" in kinds
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_strategies_reach_same_params(setup, smoke_mesh):
+    """funnel / concom / depcha are schedule-only: same trained params."""
+    cfg, pipe, params, opt, _ = setup
+    finals = []
+    for strat in ("funnel", "concom", "depcha"):
+        ts = make_train_step(
+            cfg, smoke_mesh, GradSyncConfig(strategy=strat, num_channels=3,
+                                            bucket_bytes=512),
+            opt, batch_like=pipe.batch_at(0), params_like=params)
+        tr = Trainer(ts, pipe, None, log_every=1000)
+        p, _, _ = tr.run(params, opt.init(params), 5)
+        finals.append(p)
+    for other in finals[1:]:
+        for a, b in zip(jax.tree.leaves(finals[0]), jax.tree.leaves(other)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=2e-5, rtol=2e-5)
+
+
+def test_zero1_matches_plain_adamw(setup, smoke_mesh):
+    """At dp=1 ZeRO-1 must be numerically equivalent to the inner opt."""
+    cfg, pipe, params, opt, _ = setup
+    sync = GradSyncConfig(strategy="concom")
+    ts_a = make_train_step(cfg, smoke_mesh, sync, adamw(1e-3),
+                           batch_like=pipe.batch_at(0), params_like=params,
+                           clip_norm=0)
+    optz = zero1(adamw(1e-3), ("data",), 1)
+    ts_z = make_train_step(
+        cfg, smoke_mesh,
+        GradSyncConfig(strategy="concom", exclude_axes=("data",)),
+        optz, batch_like=pipe.batch_at(0), params_like=params,
+        zero1_mode=True, clip_norm=0)
+    oa = adamw(1e-3).init(params)
+    oz = ts_z.init_opt()
+    b = pipe.batch_at(0)
+    pa, _, ma = ts_a.fn(params, oa, b, jnp.int32(0))
+    pz, _, mz = ts_z.fn(params, oz, b, jnp.int32(0))
+    assert abs(float(ma["loss"]) - float(mz["loss"])) < 1e-6
+    for a, z in zip(jax.tree.leaves(pa), jax.tree.leaves(pz)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(z, np.float32), atol=1e-5)
+
+
+def test_server_generate(setup, smoke_mesh):
+    cfg, pipe, params, opt, _ = setup
+    srv = Server(cfg, smoke_mesh, params, max_len=32)
+    out = srv.generate(np.ones((4, 8), np.int32), 5)
+    assert out.shape == (4, 5)
+    assert out.dtype == np.int32
+    assert np.all((out >= 0) & (out < cfg.vocab_padded))
+
+
+def test_server_decode_consistent_with_prefill(setup, smoke_mesh):
+    """Greedy token from incremental decode == token from re-prefilling
+    the extended prompt (KV-cache correctness end-to-end)."""
+    cfg, pipe, params, opt, _ = setup
+    srv = Server(cfg, smoke_mesh, params, max_len=32)
+    prompt = np.arange(1, 9, dtype=np.int32)[None].repeat(2, 0)  # (2, 8)
+    out = srv.generate(prompt, 3)
+    # re-run: prompt + first generated token → next greedy must equal out[:,1]
+    ext = np.concatenate([prompt, out[:, :1]], axis=1)
+    out2 = srv.generate(ext, 2)
+    np.testing.assert_array_equal(out[:, 1], out2[:, 0])
+
+
+def test_request_queue_batching(setup, smoke_mesh):
+    from repro.runtime.serve_loop import RequestQueue
+
+    cfg, pipe, params, opt, _ = setup
+    srv = Server(cfg, smoke_mesh, params, max_len=32)
+    q = RequestQueue(srv, batch=4)
+    handles = [q.submit(np.arange(1, 6, dtype=np.int32), 3)
+               for _ in range(3)]
+    served = q.serve_once()
+    assert served == 3
+    for h in handles:
+        out = h.get(timeout=5)
+        assert out.shape == (3,)
+
+
+def test_prefetcher_preserves_order():
+    it = iter(range(10))
+    out = list(Prefetcher(it, depth=3))
+    assert out == list(range(10))
+
+
+def test_pipeline_determinism(smoke_mesh):
+    p1 = TokenPipeline(100, 8, 4, seed=3, mesh=smoke_mesh)
+    p2 = TokenPipeline(100, 8, 4, seed=3, mesh=smoke_mesh)
+    b1, b2 = p1.batch_at(17), p2.batch_at(17)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = p1.batch_at(18)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
