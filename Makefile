@@ -1,0 +1,21 @@
+# Convenience targets; `make test` is the tier-1 gate (ROADMAP.md).
+PY ?= python
+
+.PHONY: test test-dev bench schedule dryrun
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# with hypothesis installed (requirements-dev.txt) the property tests run
+# instead of skipping
+test-dev:
+	PYTHONPATH=src $(PY) -m pytest -q
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+schedule:
+	PYTHONPATH=src $(PY) -m benchmarks.schedule_analysis
+
+dryrun:
+	PYTHONPATH=src $(PY) -m repro.launch.dryrun --all --mesh both

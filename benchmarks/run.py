@@ -60,7 +60,7 @@ def bench_strategy_steps(emit):
     import jax
     import jax.numpy as jnp
 
-    from repro.core import GradSyncConfig
+    from repro.core import GradSyncConfig, strategy_names
     from repro.data import TokenPipeline
     from repro.launch.mesh import make_smoke_mesh
     from repro.models import transformer as tf
@@ -75,7 +75,7 @@ def bench_strategy_steps(emit):
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     batch = pipe.batch_at(0)
     opt = adamw(1e-3)
-    for strat in ("funnel", "concom", "depcha"):
+    for strat in strategy_names():
         ts = make_train_step(
             cfg, mesh,
             GradSyncConfig(strategy=strat, num_channels=4,

@@ -1,13 +1,16 @@
 """HLO schedule evidence: how each strategy's dependency structure lands
 in the compiled program (EXPERIMENTS §Paper-validation point 3).
 
-Compiles one small train step per strategy (8 fake devices — run
-standalone) and reports, per strategy:
-  - number of collective ops and how many sit inside the while-loop body
-    (depcha: per-layer in-scan psums → pipelinable by XLA),
-  - the longest chain of collectives connected through
-    opt-barrier/dataflow tokens (funnel: one chain through ALL buckets;
-    concom: ~num_channels shorter chains).
+Compiles one small train step per REGISTERED strategy (8 fake devices —
+run standalone) and reports, per strategy:
+  - the CommSchedule IR statistics (op count, chain count, longest
+    chain) — the planned dependency structure, asserted in microseconds,
+  - number of HLO collective ops (all-reduce + reduce-scatter +
+    all-gather) and how many sit inside the while-loop body (depcha:
+    per-layer in-scan psums → pipelinable by XLA).
+
+Expected IR shapes: funnel = 1 chain through every bucket; concom and
+priority ≈ num_channels chains; rsag = 2 ops (RS+AG) per bucket.
 
     PYTHONPATH=src python -m benchmarks.schedule_analysis
 """
@@ -21,13 +24,16 @@ import warnings
 
 warnings.filterwarnings("ignore")
 
+_COLL = r"(?:all-reduce|reduce-scatter|all-gather)"
+
 
 def analyze(strategy: str) -> dict:
+    import repro  # noqa: F401  (jaxcompat before jax.sharding imports)
     import jax
     import jax.numpy as jnp
     from jax.sharding import AxisType
 
-    from repro.core import GradSyncConfig
+    from repro.core import GradSyncConfig, get_strategy
     from repro.data import TokenPipeline
     from repro.models import transformer as tf
     from repro.optim import adamw
@@ -38,7 +44,7 @@ def analyze(strategy: str) -> dict:
     cfg = tf.TransformerConfig(
         name="sched", n_layers=4, d_model=64, n_heads=8, kv_heads=4,
         d_ff=128, vocab=128, tp=4, attn_chunk=32, dtype=jnp.float32,
-        depcha_in_scan=(strategy == "depcha"))
+        depcha_in_scan=get_strategy(strategy).uses_in_scan)
     pipe = TokenPipeline(cfg.vocab, 32, 8, mesh=mesh)
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     batch = pipe.batch_at(0)
@@ -46,11 +52,12 @@ def analyze(strategy: str) -> dict:
         cfg, mesh,
         GradSyncConfig(strategy=strategy, num_channels=4, bucket_bytes=0),
         adamw(1e-3), batch_like=batch, params_like=params)
+    ir = ts.gradsync.schedule.stats()
     opt_state = adamw(1e-3).init(params)
     lowered = ts.fn.lower(params, opt_state, batch, jnp.int32(0))
     hlo = lowered.compile().as_text()
 
-    total = len(re.findall(r"= [^=\n]*all-reduce\(", hlo))
+    total = len(re.findall(rf"= [^=\n]*{_COLL}\(", hlo))
     # collectives inside while-loop bodies (depcha: per-layer in-scan psums)
     body_names = set(re.findall(r"body=%([\w.-]+)", hlo))
     in_loop = 0
@@ -60,20 +67,27 @@ def analyze(strategy: str) -> dict:
             continue
         end = hlo.find("\n}", idx)
         seg = hlo[idx:end if end > 0 else idx + 200000]
-        in_loop += len(re.findall(r"= [^=\n]*all-reduce\(", seg))
-    return {"strategy": strategy, "all_reduce_ops": total,
+        in_loop += len(re.findall(rf"= [^=\n]*{_COLL}\(", seg))
+    return {"strategy": strategy,
+            "ir_ops": ir["num_ops"],
+            "ir_chains": ir["num_chains"],
+            "ir_max_chain": ir["max_chain_len"],
+            "collective_ops": total,
             "in_loop_body": in_loop,
             "loop_trip_multiplied": in_loop * 4}   # n_layers=4
 
 
 def main():
-    print("strategy,all_reduce_ops_static,in_loop_body,"
-          "runtime_collectives(~)")
-    for s in ("funnel", "concom", "depcha"):
+    from repro.core import strategy_names
+
+    print("strategy,ir_ops,ir_chains,ir_max_chain,"
+          "collective_ops_static,in_loop_body,runtime_collectives(~)")
+    for s in strategy_names():
         r = analyze(s)
-        runtime = (r["all_reduce_ops"] - r["in_loop_body"]
+        runtime = (r["collective_ops"] - r["in_loop_body"]
                    + r["loop_trip_multiplied"])
-        print(f"{r['strategy']},{r['all_reduce_ops']},"
+        print(f"{r['strategy']},{r['ir_ops']},{r['ir_chains']},"
+              f"{r['ir_max_chain']},{r['collective_ops']},"
               f"{r['in_loop_body']},{runtime}")
 
 

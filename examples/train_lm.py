@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
-from repro.core import GradSyncConfig
+from repro.core import GradSyncConfig, get_strategy, strategy_names
 from repro.data import Prefetcher, TokenPipeline
 from repro.launch.mesh import make_smoke_mesh
 from repro.models import transformer as tf
@@ -32,7 +32,7 @@ def main():
     ap.add_argument("--scale", default="10m", choices=sorted(SCALES))
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--strategy", default="depcha",
-                    choices=["funnel", "concom", "depcha"])
+                    choices=strategy_names())
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     args = ap.parse_args()
@@ -43,7 +43,7 @@ def main():
         name=f"lm-{args.scale}", n_layers=L, d_model=d, n_heads=h,
         kv_heads=kv, d_ff=ff, vocab=vocab, qk_norm=True, tp=1,
         attn_chunk=min(args.seq, 512), dtype=jnp.float32,
-        depcha_in_scan=(args.strategy == "depcha"))
+        depcha_in_scan=get_strategy(args.strategy).uses_in_scan)
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "

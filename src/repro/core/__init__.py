@@ -1,27 +1,65 @@
 """Core: the paper's contribution — collective embedding in training DAGs.
 
-See DESIGN.md §2-3 for the MXNET/MPI → JAX/XLA mapping.
+See DESIGN.md §2-3 for the MXNET/MPI → JAX/XLA mapping and §4 for the
+CommSchedule IR + strategy/reducer registry.
 """
 from repro.core.buckets import Bucket, BucketPlan, make_bucket_plan
 from repro.core.dependency import chain, gate, new_token, update
 from repro.core.kvstore import GradSync, GradSyncConfig, KVStore
 from repro.core.overlap import scan_layers, sync_in_backward
-from repro.core.strategies import REDUCERS, STRATEGIES, make_reducer, sync_grads
+from repro.core.registry import (
+    StrategyInfo,
+    get_reducer,
+    get_strategy,
+    reducer_names,
+    register_reducer,
+    register_strategy,
+    strategy_names,
+)
+from repro.core.schedule import (
+    CollectiveOp,
+    CommSchedule,
+    emit_gated,
+    execute,
+)
+from repro.core.strategies import make_reducer, sync_grads
+
+
+def __getattr__(name: str):
+    # live registry views — a strategy registered after this package was
+    # imported still shows up (a plain `from ... import STRATEGIES` here
+    # would freeze the tuple at import time)
+    if name == "STRATEGIES":
+        return strategy_names()
+    if name == "REDUCERS":
+        return reducer_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "Bucket",
     "BucketPlan",
+    "CollectiveOp",
+    "CommSchedule",
     "GradSync",
     "GradSyncConfig",
     "KVStore",
     "REDUCERS",
     "STRATEGIES",
+    "StrategyInfo",
     "chain",
+    "emit_gated",
+    "execute",
     "gate",
+    "get_reducer",
+    "get_strategy",
     "make_bucket_plan",
     "make_reducer",
     "new_token",
+    "reducer_names",
+    "register_reducer",
+    "register_strategy",
     "scan_layers",
+    "strategy_names",
     "sync_grads",
     "sync_in_backward",
     "update",

@@ -1,14 +1,19 @@
-"""GradSync facade + a paper-faithful KVStore API.
+"""GradSync facade + a paper-faithful KVStore API, both on the
+CommSchedule IR (DESIGN.md §4).
 
 ``GradSync`` is the production entry point: built once per train setup from
-the gradient pytree structure and param PartitionSpecs, it applies the
-configured embedding strategy inside the (shard_map'd, jitted) train step.
+the gradient pytree structure and param PartitionSpecs, it plans the
+configured strategy's ``CommSchedule`` ONCE (inspectable as ``.schedule``)
+and emits it inside the (shard_map'd, jitted) train step via
+``repro.core.schedule.execute``.
 
 ``KVStore`` reproduces the paper's python API (Figs 3, 5, 8, 10) so the
-paper's training loops port nearly line-for-line — used by
-``examples/paper_api.py`` and the paper-figure benchmarks.  It is traced
-code: "push" records the staged collective, "pull" materializes it with the
-strategy's dependency structure.
+paper's training loops port nearly line-for-line — used by the
+paper-figure benchmarks and tests.  It is traced code: "push" records the
+staged collective, "pull" materializes it with the strategy's dependency
+structure.  Both paths flow through the same ``emit_gated`` emitter, and
+KVStore records the ops it emits as the same ``CollectiveOp`` IR
+(``.schedule()``), so paper-API and production paths cannot drift.
 """
 from __future__ import annotations
 
@@ -19,14 +24,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dependency as dep
-from repro.core.buckets import BucketPlan, make_bucket_plan
-from repro.core.strategies import make_reducer, sync_grads
+from repro.core.buckets import Bucket, BucketPlan, LeafInfo, make_bucket_plan
+from repro.core.registry import StrategyInfo, get_strategy
+from repro.core.schedule import (
+    ALL_GATHER,
+    ALLREDUCE,
+    REDUCE_SCATTER,
+    CollectiveOp,
+    CommSchedule,
+    emit_gated,
+    execute,
+    group_size,
+)
+from repro.core.strategies import make_reducer
 
 
 @dataclasses.dataclass(frozen=True)
 class GradSyncConfig:
-    strategy: str = "depcha"         # funnel | concom | depcha
-    reducer: str = "flat"            # flat | hierarchical | compressed
+    strategy: str = "depcha"         # any registered strategy name
+    reducer: str = "flat"            # any registered reducer name
     bucket_bytes: int = 4 * 1024 * 1024
     num_channels: int = 4            # ConCom communicator count
     comm_dtype: Any = jnp.float32
@@ -47,6 +63,13 @@ class GradSync:
         in_scan_names: frozenset[str] = frozenset(),
     ):
         self.cfg = cfg
+        self.info: StrategyInfo = get_strategy(cfg.strategy)  # fail fast
+        if self.info.two_phase and cfg.reducer != "flat":
+            raise ValueError(
+                f"strategy {cfg.strategy!r} emits raw reduce-scatter/"
+                f"all-gather ops and would silently ignore "
+                f"reducer={cfg.reducer!r}; use reducer='flat' or a "
+                f"non-two-phase strategy")
         self.mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape)) \
             if hasattr(mesh, "devices") else dict(mesh.shape)
         self.plan: BucketPlan = make_bucket_plan(
@@ -54,88 +77,189 @@ class GradSync:
             param_specs,
             mesh,
             bucket_bytes=cfg.bucket_bytes,
-            num_channels=cfg.num_channels if cfg.strategy != "funnel" else 1,
+            num_channels=1 if self.info.single_chain else cfg.num_channels,
             comm_dtype=cfg.comm_dtype,
             exclude_axes=cfg.exclude_axes,
         )
         self.reducer = make_reducer(
             cfg.reducer, self.mesh_shape, mean_axes=cfg.mean_axes
         )
-        # depcha: leaves whose psum already happened inside the backward scan
-        self.skip_names = in_scan_names if cfg.strategy == "depcha" else frozenset()
+        # leaves whose psum already happened inside the backward scan
+        self.skip_names = (
+            in_scan_names if self.info.uses_in_scan else frozenset())
+        # the strategy's dependency structure, planned once, inspectable
+        self.schedule: CommSchedule = self.info.plan(
+            self.plan, skip_names=self.skip_names)
 
     def __call__(self, grads: Any) -> Any:
-        return sync_grads(
+        return execute(
+            self.schedule,
             grads,
             self.plan,
-            strategy=self.cfg.strategy,
             reducer=self.reducer,
-            skip_names=self.skip_names,
+            mesh_shape=self.mesh_shape,
+            mean_axes=self.cfg.mean_axes,
         )
 
 
 class KVStore:
     """Paper API: create / init / push / pull / barrier  (Figs 3, 5, 8, 10).
 
-    Use inside a shard_map'd function.  Ordering semantics per strategy:
-      funnel: pushes reduce immediately on ONE token chain (main thread).
-      concom: key hashed to ``num_channels`` chains (communicators).
-      depcha: push only stages the buffer; pull performs the chained
-              allreduce — the paper's decoupled push/pull batches.
+    Use inside a shard_map'd function.  Any registered strategy name is a
+    valid ``kind``; semantics derive from the strategy's registry
+    metadata, not name strings:
+      funnel   (single_chain)  — pushes reduce immediately on ONE chain.
+      concom / priority        — key hashed to ``num_channels`` chains.
+      depcha   (deferred_pull) — push only stages the buffer; pull
+               performs the chained allreduce (decoupled push/pull
+               batches, paper Fig 10).
+      rsag     (two_phase)     — push emits the reduce-scatter, pull the
+               all-gather (needs ``mesh_shape`` for group sizes).
+
+    Every op emitted is recorded as CommSchedule IR — ``.schedule()``
+    returns the trace for inspection, built from the same CollectiveOp
+    nodes GradSync plans ahead of time.
     """
 
     def __init__(self, kind: str, *, reduce_axes: tuple[str, ...],
-                 num_channels: int = 4, mesh_shape: dict[str, int] | None = None):
-        assert kind in ("funnel", "concom", "depcha"), kind
+                 num_channels: int = 4,
+                 mesh_shape: dict[str, int] | None = None):
+        self.info = get_strategy(kind)
         self.kind = kind
-        self.reduce_axes = reduce_axes
-        self.num_channels = num_channels if kind != "funnel" else 1
+        self.reduce_axes = tuple(reduce_axes)
+        self.num_channels = 1 if self.info.single_chain else num_channels
+        self.mesh_shape = mesh_shape
+        if self.info.two_phase:
+            self._group = self._group_size()
         self._tokens = [dep.new_token() for _ in range(self.num_channels)]
         self._staged: dict[int, jax.Array] = {}
         self._reduced: dict[int, jax.Array] = {}
+        self._shards: dict[int, tuple[jax.Array, int]] = {}
         self._shapes: dict[int, tuple[int, ...]] = {}
+        self._ops: list[CollectiveOp] = []
+        self._last_op: dict[int, int] = {}   # channel -> last op_id
+        self._rs_ops: dict[int, int] = {}    # key -> its RS op_id
+        self._barrier_join: tuple[int, ...] = ()  # chain tails at barrier()
 
     @classmethod
     def create(cls, kind: str, **kw) -> "KVStore":
         return cls(kind, **kw)
 
+    def _group_size(self) -> int:
+        if self.mesh_shape is None:
+            raise ValueError(
+                f"kind={self.kind!r} emits reduce-scatter/all-gather and "
+                f"needs mesh_shape= for group sizes")
+        return group_size(self.reduce_axes, self.mesh_shape)
+
     def init(self, key: int, value: jax.Array) -> jax.Array:
-        """Paper Fig 4: broadcast initial value from rank 0.  Under SPMD all
-        ranks hold identical initial values by construction; we emit a
-        psum/size for bit-identical semantics when values could diverge."""
-        n = 1
-        # keep semantics: average across the group (== bcast of identical vals)
-        for _ in self.reduce_axes:
-            pass
-        return value  # SPMD: already replicated; kept for API fidelity
+        """Paper Fig 4: broadcast initial value from rank 0.
+
+        Real broadcast semantics: non-root ranks contribute zeros to a
+        psum, so every rank receives rank 0's value BIT-EXACTLY (adding
+        zeros is exact in floating point — no psum/size rounding) and
+        ranks that somehow diverged are repaired.  Under SPMD all ranks
+        already hold identical values, making this the identity.  The
+        collective rides the key's channel chain and is recorded in the
+        IR like any other op.
+        """
+        if not self.reduce_axes:
+            return value
+        root = jnp.bool_(True)
+        for a in self.reduce_axes:
+            root = jnp.logical_and(root, jax.lax.axis_index(a) == 0)
+        self._shapes[key] = value.shape
+        masked = jnp.where(root, jnp.ravel(value), 0)
+        bcast = self._emit(key, masked, ALLREDUCE)
+        return bcast.reshape(value.shape)
 
     def _chan(self, key: int) -> int:
         return key % self.num_channels
 
+    def _bucket(self, key: int, buf: jax.Array) -> Bucket:
+        leaf = LeafInfo(name=str(key), index=key,
+                        shape=self._shapes[key], dtype=buf.dtype,
+                        size=buf.shape[0])
+        return Bucket(leaves=(leaf,), reduce_axes=self.reduce_axes,
+                      channel=self._chan(key), bucket_id=key)
+
+    def _record(self, key: int, buf: jax.Array, kind: str,
+                extra_deps: tuple[int, ...] = ()) -> CollectiveOp:
+        c = self._chan(key)
+        deps = tuple(extra_deps)
+        if c in self._last_op:
+            if self._last_op[c] not in deps:
+                deps = (self._last_op[c],) + deps
+        elif self._barrier_join:
+            # first op on this channel after a barrier(): really gated on
+            # every pre-barrier chain tail (the joined token)
+            deps = tuple(d for d in self._barrier_join
+                         if d not in deps) + deps
+        op = CollectiveOp(op_id=len(self._ops), bucket=self._bucket(key, buf),
+                          chain=c, depends_on=deps, kind=kind)
+        self._ops.append(op)
+        self._last_op[c] = op.op_id
+        return op
+
+    def _emit(self, key: int, buf: jax.Array, kind: str,
+              extra_deps: tuple[int, ...] = ()) -> jax.Array:
+        """Record the op in the IR and emit it through THE emitter."""
+        op = self._record(key, buf, kind, extra_deps)
+        if kind == REDUCE_SCATTER:
+            self._rs_ops[key] = op.op_id
+        c = self._chan(key)
+        if kind == ALLREDUCE:
+            fn = lambda b: jax.lax.psum(b, self.reduce_axes)  # MPI_Allreduce
+        elif kind == REDUCE_SCATTER:
+            fn = (lambda b: b) if self._group == 1 else (
+                lambda b: jax.lax.psum_scatter(
+                    b, self.reduce_axes, scatter_dimension=0, tiled=True))
+        elif kind == ALL_GATHER:
+            fn = (lambda b: b) if self._group == 1 else (
+                lambda b: jax.lax.all_gather(
+                    b, self.reduce_axes, axis=0, tiled=True))
+        else:
+            raise ValueError(kind)
+        out, self._tokens[c] = emit_gated(buf, self._tokens[c], fn)
+        return out
+
     def push(self, key: int, grad: jax.Array) -> None:
         self._shapes[key] = grad.shape
-        send_buf = jnp.ravel(grad)                       # CopyFromTo → comm_buf
-        if self.kind == "depcha":
-            self._staged[key] = send_buf                 # decoupled: reduce at pull
+        send_buf = jnp.ravel(grad)                   # CopyFromTo → comm_buf
+        if self.info.deferred_pull:
+            self._staged[key] = send_buf             # decoupled: reduce at pull
             return
-        c = self._chan(key)
-        send_buf = dep.gate(send_buf, self._tokens[c])   # WaitToRead / read-dep
-        red = jax.lax.psum(send_buf, self.reduce_axes)   # MPI_Allreduce
-        self._tokens[c] = dep.update(self._tokens[c], red)
-        self._reduced[key] = red
+        if self.info.two_phase:
+            n = send_buf.shape[0]
+            if (-n) % self._group:
+                send_buf = jnp.pad(send_buf, (0, (-n) % self._group))
+            shard = self._emit(key, send_buf, REDUCE_SCATTER)
+            self._shards[key] = (shard, n)
+            return
+        self._reduced[key] = self._emit(key, send_buf, ALLREDUCE)
 
     def pull(self, key: int, like: jax.Array | None = None) -> jax.Array:
-        if self.kind == "depcha" and key in self._staged:
-            c = self._chan(key)
-            buf = dep.gate(self._staged.pop(key), self._tokens[c])
-            red = jax.lax.psum(buf, self.reduce_axes)    # stage 2: network reduce
-            self._tokens[c] = dep.update(self._tokens[c], red)  # dummy mutate
-            self._reduced[key] = red
+        if self.info.deferred_pull and key in self._staged:
+            self._reduced[key] = self._emit(
+                key, self._staged.pop(key), ALLREDUCE)
+        if self.info.two_phase and key in self._shards:
+            shard, n = self._shards.pop(key)
+            full = self._emit(key, shard, ALL_GATHER,
+                              extra_deps=(self._rs_ops[key],))
+            self._reduced[key] = full[:n] if full.shape[0] != n else full
         out = self._reduced[key]
-        return out.reshape(self._shapes[key])            # CopyFromTo(recv_buf, g)
+        return out.reshape(self._shapes[key])        # CopyFromTo(recv_buf, g)
 
     def barrier(self) -> None:
-        """Paper Fig 8 line 13: join all outstanding chains."""
+        """Paper Fig 8 line 13: join all outstanding chains.  Recorded in
+        the IR by making every subsequent op's first emission on a channel
+        depend on all pre-barrier chain tails."""
         joined = dep.new_token()
         joined = dep.update(joined, *self._tokens)
         self._tokens = [joined for _ in self._tokens]
+        self._barrier_join = tuple(sorted(self._last_op.values()))
+        self._last_op = {}
+
+    def schedule(self) -> CommSchedule:
+        """The IR of every collective this store has emitted so far."""
+        return CommSchedule(tuple(self._ops)).validate()

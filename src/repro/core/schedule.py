@@ -1,0 +1,291 @@
+"""CommSchedule IR: the dependency structure handed to the scheduler,
+as inspectable data (DESIGN.md §4).
+
+The paper's three designs (Funneled / Concurrent / Dependency-chained)
+differ ONLY in which collective waits on which — previously that
+structure existed implicitly as Python control flow inside ``sync_grads``.
+Here it is a first-class value:
+
+  ``CollectiveOp``  — one collective: a bucket, the chain it rides, the
+                      ops it depends on, its kind (allreduce or one half
+                      of a reduce-scatter→all-gather pair) and an
+                      optional reducer tag.
+  ``CommSchedule``  — a topologically-ordered tuple of ops, with chain /
+                      ordering accessors so schedule properties (chain
+                      count, chain length, bucket order) are assertable
+                      in microseconds without compiling HLO.
+  ``execute``       — the ONE emitter: walks the ops and turns each into
+                      a gated collective via ``emit_gated``.  All token
+                      gating / psum emission in the repo flows through
+                      here — strategies are pure planners and never
+                      touch tokens.
+
+The MXNET analogy (DESIGN.md §2): an op's ``depends_on`` edges are the
+engine's read-tags, the token update after each collective is the write
+to the dummy variable, and a *chain* is the paper's per-communicator
+serialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dependency as dep
+from repro.core.buckets import Bucket, BucketPlan, pack, unpack
+
+Reducer = Callable[[jax.Array, Bucket], jax.Array]
+
+# op kinds
+ALLREDUCE = "allreduce"
+REDUCE_SCATTER = "reduce_scatter"
+ALL_GATHER = "all_gather"
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One staged collective in the schedule."""
+
+    op_id: int
+    bucket: Bucket
+    chain: int                          # which dependency chain it rides
+    depends_on: tuple[int, ...] = ()    # op_ids that must complete first
+    kind: str = ALLREDUCE
+    reducer: str = ""                   # registered reducer tag; "" = default
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSchedule:
+    """Topologically ordered collective ops (op i may only depend on j<i)."""
+
+    ops: tuple[CollectiveOp, ...]
+
+    def chains(self) -> dict[int, list[CollectiveOp]]:
+        out: dict[int, list[CollectiveOp]] = {}
+        for op in self.ops:
+            out.setdefault(op.chain, []).append(op)
+        return out
+
+    @property
+    def num_chains(self) -> int:
+        return len({op.chain for op in self.ops})
+
+    def chain_lengths(self) -> dict[int, int]:
+        return {ch: len(ops) for ch, ops in self.chains().items()}
+
+    def bucket_order(self, chain: int | None = None) -> tuple[int, ...]:
+        """bucket_ids in emission order (optionally for one chain),
+        counting each reduce-scatter/all-gather pair once (at the RS)."""
+        return tuple(
+            op.bucket.bucket_id for op in self.ops
+            if op.kind != ALL_GATHER
+            and (chain is None or op.chain == chain))
+
+    def leaf_names(self) -> frozenset[str]:
+        return frozenset(
+            l.name for op in self.ops for l in op.bucket.leaves)
+
+    def stats(self) -> dict[str, Any]:
+        lengths = self.chain_lengths()
+        kinds: dict[str, int] = {}
+        for op in self.ops:
+            kinds[op.kind] = kinds.get(op.kind, 0) + 1
+        return {
+            "num_ops": len(self.ops),
+            "num_chains": self.num_chains,
+            "max_chain_len": max(lengths.values()) if lengths else 0,
+            "kinds": kinds,
+        }
+
+    def validate(self) -> "CommSchedule":
+        """Check op_id uniqueness and topological order; returns self so
+        planners can end with ``return CommSchedule(ops).validate()``."""
+        seen: set[int] = set()
+        for op in self.ops:
+            if op.op_id in seen:
+                raise ValueError(f"duplicate op_id {op.op_id}")
+            for d in op.depends_on:
+                if d not in seen:
+                    raise ValueError(
+                        f"op {op.op_id} depends on {d}, which does not "
+                        f"precede it (schedule must be topologically "
+                        f"ordered)")
+            if op.kind not in (ALLREDUCE, REDUCE_SCATTER, ALL_GATHER):
+                raise ValueError(f"op {op.op_id}: unknown kind {op.kind!r}")
+            seen.add(op.op_id)
+        return self
+
+
+def group_size(axes: tuple[str, ...], mesh_shape: Mapping[str, int]) -> int:
+    """Devices participating in a collective over ``axes`` (the MPI
+    communicator size).  Shared by every emitter path — GradSync's
+    executor and KVStore alike — so group semantics cannot drift."""
+    g = 1
+    for a in axes:
+        g *= mesh_shape[a]
+    return g
+
+
+def mean_scale(axes: tuple[str, ...], mesh_shape: Mapping[str, int],
+               mean_axes: tuple[str, ...]) -> float:
+    """1/size over the ``mean_axes`` subset of ``axes`` (data-parallel
+    mean; the paper's rescale=1/mini_batch_size lives in the loss when
+    ``mean_axes`` is empty)."""
+    n = 1
+    for a in axes:
+        if a in mean_axes:
+            n *= mesh_shape[a]
+    return 1.0 / n
+
+
+def live_buckets(
+    plan: BucketPlan, skip_names: frozenset[str] = frozenset()
+) -> list[Bucket]:
+    """Buckets in creation order with ``skip_names`` leaves dropped
+    (depcha's in-scan leaves were already reduced inside the backward);
+    buckets left empty disappear entirely."""
+    out: list[Bucket] = []
+    for bucket in plan.buckets:
+        keep = [l for l in bucket.leaves if l.name not in skip_names]
+        if not keep:
+            continue
+        if len(keep) != len(bucket.leaves):
+            bucket = dataclasses.replace(bucket, leaves=tuple(keep))
+        out.append(bucket)
+    return out
+
+
+def live_channels(
+    plan: BucketPlan, skip_names: frozenset[str] = frozenset()
+) -> dict[int, list[Bucket]]:
+    """``live_buckets`` grouped by channel (the ConCom communicator)."""
+    out: dict[int, list[Bucket]] = {}
+    for bucket in live_buckets(plan, skip_names):
+        out.setdefault(bucket.channel, []).append(bucket)
+    return out
+
+
+def emit_gated(
+    buf: jax.Array, token: jax.Array, reduce_fn: Callable[[jax.Array], Any]
+) -> tuple[Any, jax.Array]:
+    """THE collective emitter (MXNET engine-thread analogue, DESIGN.md §2).
+
+    Gate ``buf`` on ``token`` (read-dep), run the collective, and return
+    (result, next_token) where next_token waits on the result (the write
+    to the dummy variable).  Every collective emitted by this repo — the
+    strategy executor below and ``KVStore.push/pull`` alike — goes
+    through this one function, so the token discipline cannot drift
+    between the paper-API and production paths.
+    """
+    buf = dep.gate(buf, token)
+    red = reduce_fn(buf)
+    return red, dep.update(token, red)
+
+
+def _join(tokens: list[jax.Array]) -> jax.Array:
+    if not tokens:
+        return dep.new_token()
+    if len(tokens) == 1:
+        return tokens[0]
+    return dep.update(dep.new_token(), *tokens)
+
+
+def execute(
+    schedule: CommSchedule,
+    grads: Any,
+    plan: BucketPlan,
+    *,
+    reducer: Reducer,
+    reducers: Mapping[str, Reducer] | None = None,
+    mesh_shape: Mapping[str, int] | None = None,
+    mean_axes: tuple[str, ...] = (),
+) -> Any:
+    """Materialize a CommSchedule over a gradient pytree.
+
+    ``reducer`` handles untagged allreduce ops; ``reducers`` maps reducer
+    tags to alternates.  ``mesh_shape`` is required only when the
+    schedule contains reduce-scatter/all-gather ops (group sizes);
+    ``mean_axes`` applies the data-parallel mean on that path (allreduce
+    reducers carry their own scaling).
+    """
+    flat_grads = jax.tree_util.tree_leaves(grads)
+    assert len(flat_grads) == plan.num_leaves, (
+        f"plan built for {plan.num_leaves} leaves, got {len(flat_grads)}")
+    flat_out: list[jax.Array | None] = list(flat_grads)
+    reducers = dict(reducers or {})
+    by_id = {op.op_id: op for op in schedule.ops}
+
+    def group_of(bucket: Bucket) -> int:
+        if mesh_shape is None:
+            raise ValueError(
+                "mesh_shape is required to execute reduce_scatter/"
+                "all_gather ops (group size)")
+        return group_size(bucket.reduce_axes, mesh_shape)
+
+    def scale_of(bucket: Bucket) -> float:
+        if mesh_shape is None:
+            return 1.0
+        return mean_scale(bucket.reduce_axes, mesh_shape, mean_axes)
+
+    tokens: dict[int, jax.Array] = {}       # op_id -> token after that op
+    shards: dict[int, tuple[jax.Array, int]] = {}   # RS op -> (shard, size)
+
+    for op in schedule.ops:
+        token = _join([tokens[d] for d in op.depends_on])
+        bucket = op.bucket
+
+        if op.kind == ALLREDUCE:
+            red = reducers.get(op.reducer, reducer) if op.reducer else reducer
+            send_buf = pack(bucket, flat_grads, plan.comm_dtype)
+            recv_buf, tokens[op.op_id] = emit_gated(
+                send_buf, token, lambda b, _r=red, _bk=bucket: _r(b, _bk))
+            unpack(bucket, recv_buf, flat_out)
+
+        elif op.kind == REDUCE_SCATTER:
+            group = group_of(bucket)
+            send_buf = pack(bucket, flat_grads, plan.comm_dtype)
+            n = send_buf.shape[0]
+            if (-n) % group:
+                send_buf = jnp.pad(send_buf, (0, (-n) % group))
+
+            def rs(b, _bk=bucket, _g=group):
+                if _g == 1:
+                    return b
+                return jax.lax.psum_scatter(
+                    b, _bk.reduce_axes, scatter_dimension=0, tiled=True)
+
+            shard, tokens[op.op_id] = emit_gated(send_buf, token, rs)
+            shards[op.op_id] = (shard, n)
+
+        elif op.kind == ALL_GATHER:
+            # the producing RS is the dep with the SAME bucket — deps may
+            # also carry chain-ordering edges to other buckets' ops
+            srcs = [d for d in op.depends_on if d in shards
+                    and by_id[d].bucket.bucket_id == op.bucket.bucket_id]
+            if not srcs:
+                raise ValueError(
+                    f"all_gather op {op.op_id} has no reduce_scatter dep "
+                    f"for bucket {op.bucket.bucket_id}")
+            shard, n = shards[srcs[0]]
+            group = group_of(bucket)
+
+            def ag(b, _bk=bucket, _g=group):
+                if _g == 1:
+                    return b
+                return jax.lax.all_gather(
+                    b, _bk.reduce_axes, axis=0, tiled=True)
+
+            full, tokens[op.op_id] = emit_gated(shard, token, ag)
+            if full.shape[0] != n:
+                full = full[:n]
+            s = scale_of(bucket)
+            if s != 1.0:
+                full = full * s
+            unpack(bucket, full, flat_out)
+
+        else:
+            raise ValueError(f"unknown op kind {op.kind!r}")
+
+    return jax.tree_util.tree_unflatten(plan.treedef, flat_out)

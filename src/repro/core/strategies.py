@@ -1,129 +1,226 @@
-"""The paper's three collective-embedding designs, as HLO schedules.
+"""Collective-embedding strategies as pure CommSchedule planners.
 
 Every strategy computes the identical reduction (psum of each bucket over
 its reduction axes); they differ ONLY in the dependency structure handed to
 the XLA scheduler — the direct analogue of which MXNET thread issues the
-MPI call (DESIGN.md §2, §3):
+MPI call (DESIGN.md §2, §3).  A strategy is a pure
 
+    plan(bucket_plan, *, skip_names=frozenset()) -> CommSchedule
+
+function registered in ``repro.core.registry``; token gating and psum
+emission live exclusively in ``repro.core.schedule.execute``.
+
+Paper strategies (§4):
   funnel  — ONE token chain through every collective: collective i+1 cannot
             start before collective i's result exists.  At most one in
             flight; zero comm/comm overlap.  Paper §4.1.
-  concom  — buckets hashed to `num_channels` chains; chains are mutually
-            independent, so up to `num_channels` collectives fly at once
+  concom  — buckets hashed to ``num_channels`` chains; chains are mutually
+            independent, so up to ``num_channels`` collectives fly at once
             (the OUTSTANDING window of paper Fig 8).  Paper §4.2.
   depcha  — no post-backward chain at all for scan-resident params (their
             psums were already emitted inside the backward scan by
             ``repro.core.overlap``); the leftover (non-scan) buckets are
-            reduced on independent chains like concom.  A dummy-token write
-            chain orders the in-scan collectives.  Paper §4.3.
+            reduced on independent chains like concom.  Paper §4.3.
 
-Beyond-paper reducers (selected via ``reducer=``):
+Beyond-paper strategies the IR makes nearly free (DESIGN.md §4):
+  priority — concom's chains, but each chain reduces its buckets in
+             REVERSE creation order.  Buckets are created in gradient-
+             ready order (back-to-front of the model), so reversing a
+             chain reduces the *front* layers first — the gradients the
+             next forward pass needs earliest (ByteScheduler-style
+             priority ordering).
+  rsag     — each bucket's allreduce is split into reduce-scatter →
+             all-gather ops pipelined per channel: RS ops chain serially,
+             each AG waits only on its own RS, so bucket i's AG overlaps
+             bucket i+1's RS (half the bytes in flight per step).
+
+Reducers (selected via ``reducer=``):
   flat          — plain psum over all reduction axes (paper's primitive).
-  hierarchical  — 3-stage RS→pod-AR→AG (DESIGN.md: TPU analogue of the
+  hierarchical  — 3-stage RS→pod-AR→AG (DESIGN.md §3: TPU analogue of the
                   paper's intra-node/inter-node/broadcast split).
   compressed    — int8 block-quantized wire format (~4x fewer bytes).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import dependency as dep
-from repro.core.buckets import Bucket, BucketPlan, pack, unpack
+from repro.core import registry
+from repro.core.buckets import Bucket, BucketPlan
 from repro.core.compression import compressed_allreduce
 from repro.core.hierarchical import flat_allreduce, hierarchical_allreduce
+from repro.core.registry import (
+    get_strategy,
+    register_reducer,
+    register_strategy,
+)
+from repro.core.schedule import (
+    ALL_GATHER,
+    ALLREDUCE,
+    REDUCE_SCATTER,
+    CollectiveOp,
+    CommSchedule,
+    execute,
+    group_size,
+    live_buckets,
+    live_channels,
+    mean_scale,
+)
 
 Reducer = Callable[[jax.Array, Bucket], jax.Array]
 
-STRATEGIES = ("funnel", "concom", "depcha")
-REDUCERS = ("flat", "hierarchical", "compressed")
+
+# ---------------------------------------------------------------- reducers
+
+def _scale_of(bucket: Bucket, mesh_shape, mean_axes) -> float:
+    return mean_scale(bucket.reduce_axes, mesh_shape, mean_axes)
+
+
+@register_reducer("flat")
+def _flat_factory(mesh_shape: dict[str, int], *,
+                  mean_axes: tuple[str, ...] = ()) -> Reducer:
+    """Plain psum over all reduction axes (the paper's primitive)."""
+
+    def reduce_flat(buf: jax.Array, bucket: Bucket) -> jax.Array:
+        out = flat_allreduce(buf, bucket.reduce_axes)
+        s = _scale_of(bucket, mesh_shape, mean_axes)
+        return out * s if s != 1.0 else out
+
+    return reduce_flat
+
+
+@register_reducer("hierarchical")
+def _hier_factory(mesh_shape: dict[str, int], *,
+                  mean_axes: tuple[str, ...] = ()) -> Reducer:
+    """3-stage RS(data) → AR(pod) → AG(data) when both axes are present."""
+
+    def reduce_hier(buf: jax.Array, bucket: Bucket) -> jax.Array:
+        axes = bucket.reduce_axes
+        if "pod" in axes and "data" in axes:
+            out = hierarchical_allreduce(
+                buf,
+                intra_axis="data",
+                inter_axis="pod",
+                intra_size=mesh_shape["data"],
+            )
+            rest = tuple(a for a in axes if a not in ("pod", "data"))
+            if rest:
+                out = jax.lax.psum(out, rest)
+        else:
+            out = flat_allreduce(buf, axes)
+        s = _scale_of(bucket, mesh_shape, mean_axes)
+        return out * s if s != 1.0 else out
+
+    return reduce_hier
+
+
+@register_reducer("compressed")
+def _comp_factory(mesh_shape: dict[str, int], *,
+                  mean_axes: tuple[str, ...] = ()) -> Reducer:
+    """int8 block-quantized wire format for large buffers."""
+
+    def reduce_comp(buf: jax.Array, bucket: Bucket) -> jax.Array:
+        group = group_size(bucket.reduce_axes, mesh_shape)
+        if group == 1 or buf.shape[0] < 256 * group:
+            out = flat_allreduce(buf, bucket.reduce_axes)
+        else:
+            out = compressed_allreduce(
+                buf, bucket.reduce_axes, group_size=group
+            )
+        s = _scale_of(bucket, mesh_shape, mean_axes)
+        return out * s if s != 1.0 else out
+
+    return reduce_comp
 
 
 def make_reducer(
     name: str, mesh_shape: dict[str, int], *, mean_axes: tuple[str, ...] = ()
 ) -> Reducer:
-    """Build the per-bucket collective. ``mean_axes``: divide by their size
-    (data-parallel mean; the paper's rescale=1/mini_batch_size is applied in
-    the loss instead when ``mean_axes`` is empty)."""
-
-    def scale_of(bucket: Bucket) -> float:
-        n = 1
-        for a in bucket.reduce_axes:
-            if a in mean_axes:
-                n *= mesh_shape[a]
-        return 1.0 / n
-
-    if name == "flat":
-
-        def reduce_flat(buf: jax.Array, bucket: Bucket) -> jax.Array:
-            out = flat_allreduce(buf, bucket.reduce_axes)
-            s = scale_of(bucket)
-            return out * s if s != 1.0 else out
-
-        return reduce_flat
-
-    if name == "hierarchical":
-
-        def reduce_hier(buf: jax.Array, bucket: Bucket) -> jax.Array:
-            axes = bucket.reduce_axes
-            if "pod" in axes and "data" in axes:
-                out = hierarchical_allreduce(
-                    buf,
-                    intra_axis="data",
-                    inter_axis="pod",
-                    intra_size=mesh_shape["data"],
-                )
-                rest = tuple(a for a in axes if a not in ("pod", "data"))
-                if rest:
-                    out = jax.lax.psum(out, rest)
-            else:
-                out = flat_allreduce(buf, axes)
-            s = scale_of(bucket)
-            return out * s if s != 1.0 else out
-
-        return reduce_hier
-
-    if name == "compressed":
-
-        def reduce_comp(buf: jax.Array, bucket: Bucket) -> jax.Array:
-            group = 1
-            for a in bucket.reduce_axes:
-                group *= mesh_shape[a]
-            if group == 1 or buf.shape[0] < 256 * group:
-                out = flat_allreduce(buf, bucket.reduce_axes)
-            else:
-                out = compressed_allreduce(
-                    buf, bucket.reduce_axes, group_size=group
-                )
-            s = scale_of(bucket)
-            return out * s if s != 1.0 else out
-
-        return reduce_comp
-
-    raise ValueError(f"unknown reducer {name!r}, want one of {REDUCERS}")
+    """Build the per-bucket collective from the registered factory."""
+    return registry.get_reducer(name)(mesh_shape, mean_axes=mean_axes)
 
 
-def _sync_chain(
-    buckets: list[Bucket],
-    flat_grads: list[jax.Array],
-    flat_out: list[jax.Array | None],
-    reducer: Reducer,
-    comm_dtype,
-    token: jax.Array,
-) -> jax.Array:
-    """One serialized chain: bucket i+1's collective waits on bucket i's."""
+# --------------------------------------------------------------- planners
+
+def _chain(buckets: list[Bucket], chain_id: int, start_id: int,
+           ops: list[CollectiveOp]) -> int:
+    """Append one serialized chain (op i+1 waits on op i); returns next id."""
+    prev: int | None = None
+    oid = start_id
     for bucket in buckets:
-        send_buf = pack(bucket, flat_grads, comm_dtype)     # CopyFromTo(g, send_buf)
-        send_buf = dep.gate(send_buf, token)                # WaitToRead / read-dep
-        recv_buf = reducer(send_buf, bucket)                # MPI_Allreduce
-        token = dep.update(token, recv_buf)                 # write the dummy var
-        unpack(bucket, recv_buf, flat_out)                  # CopyFromTo(recv, g)
-    return token
+        ops.append(CollectiveOp(
+            op_id=oid, bucket=bucket, chain=chain_id,
+            depends_on=(prev,) if prev is not None else ()))
+        prev = oid
+        oid += 1
+    return oid
 
+
+@register_strategy("funnel", single_chain=True)
+def plan_funnel(plan: BucketPlan, *,
+                skip_names: frozenset[str] = frozenset()) -> CommSchedule:
+    """One chain through ALL buckets in creation order (paper §4.1)."""
+    ops: list[CollectiveOp] = []
+    _chain(live_buckets(plan, skip_names), 0, 0, ops)
+    return CommSchedule(tuple(ops)).validate()
+
+
+@register_strategy("concom")
+def plan_concom(plan: BucketPlan, *,
+                skip_names: frozenset[str] = frozenset()) -> CommSchedule:
+    """Independent chain per channel → up to num_channels in flight (§4.2)."""
+    ops: list[CollectiveOp] = []
+    oid = 0
+    for ch, buckets in sorted(live_channels(plan, skip_names).items()):
+        oid = _chain(buckets, ch, oid, ops)
+    return CommSchedule(tuple(ops)).validate()
+
+
+@register_strategy("depcha", uses_in_scan=True, deferred_pull=True)
+def plan_depcha(plan: BucketPlan, *,
+                skip_names: frozenset[str] = frozenset()) -> CommSchedule:
+    """In-scan leaves (``skip_names``) were reduced inside the backward
+    scan; leftover buckets ride independent chains like concom (§4.3)."""
+    return plan_concom(plan, skip_names=skip_names)
+
+
+@register_strategy("priority")
+def plan_priority(plan: BucketPlan, *,
+                  skip_names: frozenset[str] = frozenset()) -> CommSchedule:
+    """concom chains with each chain's buckets in REVERSE creation order:
+    front-of-model gradients (needed first next step) finish first."""
+    ops: list[CollectiveOp] = []
+    oid = 0
+    for ch, buckets in sorted(live_channels(plan, skip_names).items()):
+        oid = _chain(list(reversed(buckets)), ch, oid, ops)
+    return CommSchedule(tuple(ops)).validate()
+
+
+@register_strategy("rsag", two_phase=True)
+def plan_rsag(plan: BucketPlan, *,
+              skip_names: frozenset[str] = frozenset()) -> CommSchedule:
+    """Per-bucket reduce-scatter→all-gather pipelined over channels: RS
+    ops chain serially per channel; each AG depends only on its own RS,
+    so bucket i's AG overlaps bucket i+1's RS."""
+    ops: list[CollectiveOp] = []
+    oid = 0
+    for ch, buckets in sorted(live_channels(plan, skip_names).items()):
+        prev_rs: int | None = None
+        for bucket in buckets:
+            rs_id, ag_id = oid, oid + 1
+            ops.append(CollectiveOp(
+                op_id=rs_id, bucket=bucket, chain=ch, kind=REDUCE_SCATTER,
+                depends_on=(prev_rs,) if prev_rs is not None else ()))
+            ops.append(CollectiveOp(
+                op_id=ag_id, bucket=bucket, chain=ch, kind=ALL_GATHER,
+                depends_on=(rs_id,)))
+            prev_rs = rs_id
+            oid += 2
+    return CommSchedule(tuple(ops)).validate()
+
+
+# --------------------------------------------------------------- executor
 
 def sync_grads(
     grads: Any,
@@ -132,39 +229,27 @@ def sync_grads(
     strategy: str,
     reducer: Reducer,
     skip_names: frozenset[str] = frozenset(),
+    mesh_shape: dict[str, int] | None = None,
+    mean_axes: tuple[str, ...] = (),
 ) -> Any:
-    """Apply a collective-embedding strategy to a gradient pytree.
+    """Apply a registered collective-embedding strategy to a gradient
+    pytree: plan the CommSchedule, then emit it.
 
     ``skip_names``: leaves already reduced inside the backward (depcha's
-    in-scan psums) — they pass through untouched.
+    in-scan psums) — they pass through untouched.  ``mesh_shape`` is
+    needed only for strategies emitting reduce-scatter/all-gather ops
+    (rsag) or when ``mean_axes`` scaling applies on that path.
     """
-    flat_grads = jax.tree_util.tree_leaves(grads)
-    assert len(flat_grads) == plan.num_leaves, (
-        f"plan built for {plan.num_leaves} leaves, got {len(flat_grads)}"
-    )
-    flat_out: list[jax.Array | None] = list(flat_grads)
+    schedule = get_strategy(strategy).plan(plan, skip_names=skip_names)
+    return execute(schedule, grads, plan, reducer=reducer,
+                   mesh_shape=mesh_shape, mean_axes=mean_axes)
 
-    live: dict[int, list[Bucket]] = {}
-    for bucket in plan.buckets:
-        keep = [l for l in bucket.leaves if l.name not in skip_names]
-        if not keep:
-            continue
-        b = dataclasses.replace(bucket, leaves=tuple(keep))
-        live.setdefault(bucket.channel, []).append(b)
 
-    if strategy == "funnel":
-        # single chain through ALL buckets regardless of channel
-        token = dep.new_token()
-        all_buckets = [b for ch in sorted(live) for b in live[ch]]
-        _sync_chain(all_buckets, flat_grads, flat_out, reducer,
-                    plan.comm_dtype, token)
-    elif strategy in ("concom", "depcha"):
-        # independent chain per channel → up to num_channels in flight
-        for ch in sorted(live):
-            token = dep.new_token()
-            _sync_chain(live[ch], flat_grads, flat_out, reducer,
-                        plan.comm_dtype, token)
-    else:
-        raise ValueError(f"unknown strategy {strategy!r}, want {STRATEGIES}")
-
-    return jax.tree_util.tree_unflatten(plan.treedef, flat_out)
+def __getattr__(name: str):
+    # STRATEGIES/REDUCERS are derived from the registry (live views), so
+    # late-registered strategies appear without editing this module.
+    if name == "STRATEGIES":
+        return registry.strategy_names()
+    if name == "REDUCERS":
+        return registry.reducer_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -38,7 +38,12 @@ from repro.configs import (
     train_input_specs,
     ARCHS,
 )
-from repro.core import GradSyncConfig
+from repro.core import (
+    GradSyncConfig,
+    get_strategy,
+    reducer_names,
+    strategy_names,
+)
 from repro.launch.mesh import make_production_mesh, mesh_shape_dict
 from repro.models.registry import family_of
 from repro.optim import adamw, sgd
@@ -224,7 +229,7 @@ def lower_cell(arch_id: str, shape_name: str, mesh, *,
         if k in over:
             step_kw[k] = over.pop(k)
     base_cfg_probe = arch.make_config(tp=tp, dp_axes=dp)
-    if shape.kind == "train" and sync.strategy == "depcha" \
+    if shape.kind == "train" and get_strategy(sync.strategy).uses_in_scan \
             and hasattr(base_cfg_probe, "depcha_in_scan"):
         over.setdefault("depcha_in_scan", True)
     cfg = arch.make_config(tp=tp, dp_axes=dp, **over)
@@ -318,8 +323,10 @@ def main():
     ap.add_argument("--mesh", default="single",
                     help="single | multi | both | DxM (e.g. 64x4)")
     ap.add_argument("--all", action="store_true")
-    ap.add_argument("--strategy", default="depcha")
-    ap.add_argument("--reducer", default="flat")
+    ap.add_argument("--strategy", default="depcha",
+                    choices=strategy_names())
+    ap.add_argument("--reducer", default="flat",
+                    choices=reducer_names())
     ap.add_argument("--bucket-mb", type=float, default=4.0)
     ap.add_argument("--comm-dtype", default="f32", choices=["f32", "bf16"])
     ap.add_argument("--channels", type=int, default=4)

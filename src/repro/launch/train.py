@@ -17,7 +17,12 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_arch
-from repro.core import GradSyncConfig
+from repro.core import (
+    GradSyncConfig,
+    get_strategy,
+    reducer_names,
+    strategy_names,
+)
 from repro.data import ImagePipeline, TokenPipeline
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
 from repro.models.registry import family_of
@@ -31,9 +36,9 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--strategy", default="depcha",
-                    choices=["funnel", "concom", "depcha"])
+                    choices=strategy_names())
     ap.add_argument("--reducer", default="flat",
-                    choices=["flat", "hierarchical", "compressed"])
+                    choices=reducer_names())
     ap.add_argument("--channels", type=int, default=4)
     ap.add_argument("--bucket-mb", type=float, default=4.0)
     ap.add_argument("--zero1", action="store_true")
@@ -57,7 +62,7 @@ def main():
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         cfg = arch.make_config(
             tp=mesh.shape["model"], dp_axes=dp_axes_of(mesh),
-            depcha_in_scan=(args.strategy == "depcha"))
+            depcha_in_scan=get_strategy(args.strategy).uses_in_scan)
         shape = arch.shapes[0]
         seq, batch = shape.seq_len, shape.global_batch
 

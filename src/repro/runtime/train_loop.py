@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import GradSync, GradSyncConfig
+from repro.core import GradSync, GradSyncConfig, get_strategy
 from repro.models.registry import family_of
 from repro.optim.optimizers import (
     Optimizer,
@@ -134,7 +134,7 @@ def make_train_step(
     ospecs = _opt_state_specs(opt_state_like, params_like, pspecs, mesh)
 
     in_scan = (api.in_scan_names(params_like)
-               if sync.strategy == "depcha" else frozenset())
+               if get_strategy(sync.strategy).uses_in_scan else frozenset())
     # bucket plan must see LOCAL shard shapes (it runs inside shard_map)
     from repro.parallel.sharding import localize_structs
     grads_local = localize_structs(

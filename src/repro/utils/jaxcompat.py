@@ -1,0 +1,67 @@
+"""Compatibility shim: run the new-style jax API this repo targets on the
+older jax pinned in the container (0.4.x).
+
+The codebase is written against three post-0.4.37 surface changes:
+
+  - ``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)``
+    (explicit/auto axis types; we only ever pass ``Auto``, which is the
+    implicit behavior of older meshes),
+  - ``jax.shard_map`` as a top-level export (was
+    ``jax.experimental.shard_map.shard_map``),
+  - the ``check_vma=`` keyword (renamed from ``check_rep=``).
+
+``apply()`` installs thin adapters for whichever of these are missing and
+is a no-op on jax versions that already provide them.  It is called once
+from ``repro/__init__.py`` so every entry point (tests, launchers,
+benchmarks) sees a uniform API.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+_APPLIED = False
+
+
+def apply() -> None:
+    global _APPLIED
+    if _APPLIED:
+        return
+    _APPLIED = True
+
+    import jax
+    import jax.sharding as jsharding
+
+    if not hasattr(jsharding, "AxisType"):
+
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jsharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            # old make_mesh has no axis_types; Auto is its only behavior
+            return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @functools.wraps(_shard_map)
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                      check_rep=None, **kw):
+            if check_rep is None:
+                check_rep = True if check_vma is None else check_vma
+            return _shard_map(f, mesh, in_specs, out_specs,
+                              check_rep=check_rep, **kw)
+
+        jax.shard_map = shard_map

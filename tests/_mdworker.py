@@ -10,6 +10,7 @@ import warnings
 warnings.filterwarnings("ignore")
 import dataclasses
 
+import repro  # noqa: F401  (applies the jaxcompat shim before jax imports)
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -99,13 +100,17 @@ mk_dense = lambda tp: tf.TransformerConfig(
     name="dense", n_layers=2, d_model=64, n_heads=8, kv_heads=2, d_ff=128,
     vocab=96, tp=tp, attn_chunk=16, dtype=jnp.float32)
 
-# 1. TP=4 x DP=2 == TP=1 for each strategy (the paper's correctness claim
-#    across real process groups)
-for strat in ("funnel", "concom", "depcha"):
+# 1. TP=4 x DP=2 == TP=1 for each registered strategy (the paper's
+#    correctness claim across real process groups; priority/rsag ride
+#    the same check for free via the registry)
+from repro.core import get_strategy, strategy_names
+
+for strat in strategy_names():
     compare_tp(f"tp-equiv[{strat}]",
                lambda tp: dataclasses.replace(
                    mk_dense(tp),
-                   depcha_in_scan=(strat == "depcha" and tp > 1)),
+                   depcha_in_scan=(get_strategy(strat).uses_in_scan
+                                   and tp > 1)),
                strategy=strat)
 
 # 2. hierarchical + compressed reducers on real groups
@@ -116,13 +121,13 @@ compare_tp("tp-equiv[compressed]", mk_dense, reducer="compressed",
 # 3. cross-strategy equality on the multi-device mesh
 outs = {}
 params8 = family_of(mk_dense(4)).init(jax.random.PRNGKey(1), mk_dense(1))
-for strat in ("funnel", "concom", "depcha"):
-    cfg = dataclasses.replace(mk_dense(4),
-                              depcha_in_scan=(strat == "depcha"))
+for strat in strategy_names():
+    cfg = dataclasses.replace(
+        mk_dense(4), depcha_in_scan=get_strategy(strat).uses_in_scan)
     _, g = loss_and_grads(cfg, mesh8, params8, strat)
     outs[strat] = g
 ok = True
-for strat in ("concom", "depcha"):
+for strat in [s for s in strategy_names() if s != "funnel"]:
     for a, b in zip(jax.tree.leaves(outs["funnel"]),
                     jax.tree.leaves(outs[strat])):
         if np.max(np.abs(np.asarray(a, np.float32)

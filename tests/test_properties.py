@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (requirements-dev.txt)")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,197 @@
+"""Schedule-IR properties: chain count, chain length, op ordering —
+pure-Python assertions on CommSchedule, no device mesh or HLO compile.
+
+Plans are built from hand-constructed BucketPlans so each test runs in
+microseconds; the numeric equivalence of the strategies is covered by
+tests/test_strategies.py and tests/_mdworker.py.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.buckets import Bucket, BucketPlan, LeafInfo
+from repro.core.registry import (
+    get_strategy,
+    register_strategy,
+    strategy_names,
+)
+from repro.core.schedule import (
+    ALL_GATHER,
+    ALLREDUCE,
+    REDUCE_SCATTER,
+    CollectiveOp,
+    CommSchedule,
+)
+
+
+def _plan(n_buckets=6, num_channels=3, leaves_per_bucket=2):
+    """A synthetic BucketPlan: round-robin channels like make_bucket_plan."""
+    buckets = []
+    idx = 0
+    for bid in range(n_buckets):
+        leaves = tuple(
+            LeafInfo(name=f"g{idx + j}", index=idx + j, shape=(4,),
+                     dtype=jnp.float32, size=4)
+            for j in range(leaves_per_bucket))
+        idx += leaves_per_bucket
+        buckets.append(Bucket(leaves=leaves, reduce_axes=("data",),
+                              channel=bid % num_channels, bucket_id=bid))
+    return BucketPlan(buckets=tuple(buckets), treedef=None,
+                      num_leaves=idx, comm_dtype=jnp.float32)
+
+
+def _bucket_ids(ops):
+    return [op.bucket.bucket_id for op in ops]
+
+
+def test_funnel_single_chain_through_all_buckets():
+    plan = _plan(n_buckets=6, num_channels=3)
+    s = get_strategy("funnel").plan(plan)
+    assert s.num_chains == 1
+    assert s.chain_lengths() == {0: 6}
+    # creation order, each op waits on the previous (fully serialized)
+    assert s.bucket_order() == (0, 1, 2, 3, 4, 5)
+    for prev, op in zip(s.ops, s.ops[1:]):
+        assert op.depends_on == (prev.op_id,)
+
+
+def test_concom_chain_per_channel():
+    for n_buckets, channels in [(6, 3), (2, 4), (8, 4), (5, 2)]:
+        plan = _plan(n_buckets=n_buckets, num_channels=channels)
+        s = get_strategy("concom").plan(plan)
+        assert s.num_chains == min(channels, n_buckets)
+        # chains are mutually independent: deps never cross chains
+        by_id = {op.op_id: op for op in s.ops}
+        for op in s.ops:
+            assert all(by_id[d].chain == op.chain for d in op.depends_on)
+        # union covers every bucket exactly once
+        assert sorted(_bucket_ids(s.ops)) == list(range(n_buckets))
+
+
+def test_depcha_drops_in_scan_leaves():
+    plan = _plan(n_buckets=4, num_channels=2, leaves_per_bucket=2)
+    # skip one leaf of bucket 0 and BOTH leaves of bucket 2
+    skip = frozenset({"g0", "g4", "g5"})
+    s = get_strategy("depcha").plan(plan, skip_names=skip)
+    assert s.leaf_names() == {"g1", "g2", "g3", "g6", "g7"}
+    # bucket 2 vanished entirely; bucket 0 survives with one leaf
+    assert sorted(set(_bucket_ids(s.ops))) == [0, 1, 3]
+    b0 = next(op.bucket for op in s.ops if op.bucket.bucket_id == 0)
+    assert [l.name for l in b0.leaves] == ["g1"]
+
+
+def test_depcha_without_skips_matches_concom():
+    plan = _plan(n_buckets=6, num_channels=3)
+    d = get_strategy("depcha").plan(plan)
+    c = get_strategy("concom").plan(plan)
+    assert d == c
+
+
+def test_priority_reverses_bucket_order():
+    plan = _plan(n_buckets=8, num_channels=3)
+    s = get_strategy("priority").plan(plan)
+    c = get_strategy("concom").plan(plan)
+    assert s.num_chains == c.num_chains == 3
+    for ch in range(3):
+        assert s.bucket_order(ch) == tuple(reversed(c.bucket_order(ch)))
+        ids = s.bucket_order(ch)
+        assert list(ids) == sorted(ids, reverse=True)
+    # single channel → globally exact reverse of funnel
+    plan1 = _plan(n_buckets=5, num_channels=1)
+    s1 = get_strategy("priority").plan(plan1)
+    assert s1.bucket_order() == (4, 3, 2, 1, 0)
+
+
+def test_rsag_two_phase_structure():
+    plan = _plan(n_buckets=6, num_channels=3)
+    s = get_strategy("rsag").plan(plan)
+    assert s.stats()["kinds"] == {REDUCE_SCATTER: 6, ALL_GATHER: 6}
+    by_id = {op.op_id: op for op in s.ops}
+    rs = [op for op in s.ops if op.kind == REDUCE_SCATTER]
+    ag = [op for op in s.ops if op.kind == ALL_GATHER]
+    # each AG waits ONLY on its own RS (so AG_i overlaps RS_{i+1})
+    for op in ag:
+        assert len(op.depends_on) == 1
+        dep = by_id[op.depends_on[0]]
+        assert dep.kind == REDUCE_SCATTER
+        assert dep.bucket.bucket_id == op.bucket.bucket_id
+    # RS stream is serialized per channel
+    for ch in range(3):
+        chain_rs = [op for op in rs if op.chain == ch]
+        for prev, op in zip(chain_rs, chain_rs[1:]):
+            assert op.depends_on == (prev.op_id,)
+    # bucket_order counts each RS/AG pair once
+    assert sorted(s.bucket_order()) == list(range(6))
+
+
+def test_validate_rejects_forward_and_duplicate_deps():
+    b = _plan(n_buckets=2, num_channels=1).buckets
+    with pytest.raises(ValueError, match="does not[\\s\\S]*precede"):
+        CommSchedule((
+            CollectiveOp(op_id=0, bucket=b[0], chain=0, depends_on=(1,)),
+            CollectiveOp(op_id=1, bucket=b[1], chain=0),
+        )).validate()
+    with pytest.raises(ValueError, match="duplicate"):
+        CommSchedule((
+            CollectiveOp(op_id=0, bucket=b[0], chain=0),
+            CollectiveOp(op_id=0, bucket=b[1], chain=0),
+        )).validate()
+    with pytest.raises(ValueError, match="unknown kind"):
+        CommSchedule((
+            CollectiveOp(op_id=0, bucket=b[0], chain=0, kind="bogus"),
+        )).validate()
+
+
+def test_registry_is_the_single_source_of_truth():
+    from repro.core import strategies
+
+    import repro.core
+
+    names = strategy_names()
+    assert {"funnel", "concom", "depcha", "priority", "rsag"} <= set(names)
+    # STRATEGIES/REDUCERS are registry-derived LIVE views, not snapshots
+    assert strategies.STRATEGIES == names
+    assert repro.core.STRATEGIES == names
+    assert set(strategies.REDUCERS) >= {"flat", "hierarchical", "compressed"}
+    assert repro.core.REDUCERS == strategies.REDUCERS
+    # metadata replaces name-string special cases
+    assert get_strategy("depcha").uses_in_scan
+    assert get_strategy("funnel").single_chain
+    assert get_strategy("rsag").two_phase
+    assert not get_strategy("concom").uses_in_scan
+    with pytest.raises(ValueError, match="unknown strategy"):
+        get_strategy("nope")
+    # duplicate registration is an error
+    with pytest.raises(ValueError, match="already registered"):
+        register_strategy("funnel")(lambda plan, **kw: None)
+
+
+def test_kvstore_records_same_ir(smoke_mesh):
+    """KVStore traces the ops it emits as CommSchedule IR."""
+    import jax
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import KVStore
+
+    recorded = {}
+
+    def step(a, b):
+        kv = KVStore.create("concom", reduce_axes=("data",), num_channels=2)
+        kv.push(0, a)
+        kv.push(1, b)
+        o0, o1 = kv.pull(0), kv.pull(1)
+        s = kv.schedule()
+        recorded["stats"] = s.stats()
+        recorded["chains"] = s.chain_lengths()
+        return o0, o1
+
+    g1 = jnp.arange(6.0).reshape(2, 3)
+    g2 = jnp.ones((5,))
+    o0, o1 = jax.jit(lambda a, b: jax.shard_map(
+        step, mesh=smoke_mesh, in_specs=(P(), P()),
+        out_specs=(P(), P()), check_vma=False)(a, b))(g1, g2)
+    np.testing.assert_allclose(np.asarray(o0), np.asarray(g1))
+    assert recorded["stats"] == {
+        "num_ops": 2, "num_chains": 2, "max_chain_len": 1,
+        "kinds": {ALLREDUCE: 2}}
+    assert recorded["chains"] == {0: 1, 1: 1}

@@ -10,7 +10,10 @@ from repro.core import (
     GradSync,
     GradSyncConfig,
     KVStore,
+    get_strategy,
     make_bucket_plan,
+    reducer_names,
+    strategy_names,
 )
 from repro.core.buckets import pack, unpack
 from repro.parallel.sharding import ShardingRules
@@ -30,8 +33,8 @@ def _grads_and_specs():
     return params, rules.tree_specs(params)
 
 
-@pytest.mark.parametrize("strategy", ["funnel", "concom", "depcha"])
-@pytest.mark.parametrize("reducer", ["flat", "hierarchical", "compressed"])
+@pytest.mark.parametrize("strategy", strategy_names())
+@pytest.mark.parametrize("reducer", reducer_names())
 def test_strategy_identity_on_unit_mesh(smoke_mesh, strategy, reducer):
     """On a size-1 mesh every psum is the identity → sync must return the
     input grads bit-exactly (modulo comm dtype round-trip)."""
@@ -39,6 +42,12 @@ def test_strategy_identity_on_unit_mesh(smoke_mesh, strategy, reducer):
     cfg = GradSyncConfig(strategy=strategy, reducer=reducer,
                          bucket_bytes=64, num_channels=3)
     gspecs = jax.tree.map(lambda _: P(), grads)
+    if get_strategy(strategy).two_phase and reducer != "flat":
+        # two-phase schedules emit raw RS/AG and would ignore the reducer
+        with pytest.raises(ValueError, match="reduce-scatter"):
+            GradSync(cfg, smoke_mesh, specs, jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), grads))
+        return
 
     def run(g):
         gs = GradSync(cfg, smoke_mesh, specs, jax.tree.map(
@@ -97,10 +106,12 @@ def test_kvstore_api(smoke_mesh):
     """Paper Figs 5/8/10 port: push/pull/barrier with all three kinds."""
     g1 = jnp.arange(6.0).reshape(2, 3)
     g2 = jnp.ones((5,))
+    mesh_shape = {"data": 1, "model": 1}
 
-    for kind in ("funnel", "concom", "depcha"):
+    for kind in strategy_names():
         def step(a, b):
-            kv = KVStore.create(kind, reduce_axes=("data",), num_channels=2)
+            kv = KVStore.create(kind, reduce_axes=("data",), num_channels=2,
+                                mesh_shape=mesh_shape)
             kv.push(0, a)
             kv.push(1, b)
             out0 = kv.pull(0)
@@ -113,6 +124,45 @@ def test_kvstore_api(smoke_mesh):
             out_specs=(P(), P()), check_vma=False)(a, b))(g1, g2)
         np.testing.assert_allclose(np.asarray(o0), np.asarray(g1))
         np.testing.assert_allclose(np.asarray(o1), np.asarray(g2))
+
+
+def test_kvstore_init_is_bitexact_broadcast(smoke_mesh):
+    """init = psum of rank-0's value with zeros elsewhere: bit-exact."""
+    v = jnp.asarray(np.random.default_rng(0).standard_normal(33),
+                    jnp.float32) * 1e-3
+
+    def step(x):
+        kv = KVStore.create("concom", reduce_axes=("data",))
+        out = kv.init(0, x)
+        assert kv.schedule().stats()["num_ops"] == 1  # recorded in the IR
+        return out
+
+    out = jax.jit(lambda x: jax.shard_map(
+        step, mesh=smoke_mesh, in_specs=(P(),), out_specs=P(),
+        check_vma=False)(x))(v)
+    assert np.array_equal(np.asarray(out), np.asarray(v))  # no rounding
+
+
+def test_kvstore_barrier_recorded_in_ir(smoke_mesh):
+    """Ops emitted after barrier() depend on all pre-barrier chain tails."""
+    recorded = {}
+
+    def step(a, b, c):
+        kv = KVStore.create("concom", reduce_axes=("data",), num_channels=2)
+        kv.push(0, a)
+        kv.push(1, b)
+        kv.barrier()
+        kv.push(2, c)
+        out = kv.pull(0) + kv.pull(2)
+        s = kv.schedule()
+        recorded["post_deps"] = s.ops[2].depends_on
+        return out
+
+    g = jnp.ones((3,))
+    jax.jit(lambda a, b, c: jax.shard_map(
+        step, mesh=smoke_mesh, in_specs=(P(), P(), P()), out_specs=P(),
+        check_vma=False)(a, b, c))(g, g, g)
+    assert set(recorded["post_deps"]) == {0, 1}
 
 
 def test_dependency_tokens_preserve_values():
