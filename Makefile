@@ -1,7 +1,7 @@
 # Convenience targets; `make test` is the tier-1 gate (ROADMAP.md).
 PY ?= python
 
-.PHONY: test test-dev bench schedule dryrun
+.PHONY: test test-dev bench schedule dryrun sim-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -19,3 +19,9 @@ schedule:
 
 dryrun:
 	PYTHONPATH=src $(PY) -m repro.launch.dryrun --all --mesh both
+
+# seconds-long CPU sanity of the discrete-event simulator + autotuner
+sim-smoke:
+	PYTHONPATH=src $(PY) -m repro.sim --arch resnet50-cifar --ascii
+	PYTHONPATH=src $(PY) -m repro.sim --arch qwen3-1.7b --shape train_4k \
+		--mesh multi --autotune

@@ -1,5 +1,10 @@
 """Benchmark harness — one function per paper table/figure.
 
+Each section also lands in a machine-readable ``BENCH_<section>.json``
+(rows + metadata) so the perf trajectory is tracked across PRs; the
+``strategy_step`` section records the repro.sim predicted step time next
+to the measured one (simulated vs measured, per strategy × reducer).
+
 Prints ``name,us_per_call,derived`` CSV rows:
   - fig13/14/15/16: strategy epoch times from the calibrated DAG cost
     model (benchmarks/paper_figures.py), validated against the paper's
@@ -60,12 +65,14 @@ def bench_strategy_steps(emit):
     import jax
     import jax.numpy as jnp
 
+    import repro.sim  # noqa: F401  (registers the "auto" strategy)
     from repro.core import GradSyncConfig, strategy_names
     from repro.data import TokenPipeline
     from repro.launch.mesh import make_smoke_mesh
     from repro.models import transformer as tf
     from repro.optim import adamw
     from repro.runtime import make_train_step
+    from repro.sim import compute_model_for, sim_config_for, simulate
 
     mesh = make_smoke_mesh(1, 1)
     cfg = tf.TransformerConfig(
@@ -75,6 +82,8 @@ def bench_strategy_steps(emit):
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     batch = pipe.batch_at(0)
     opt = adamw(1e-3)
+    compute = compute_model_for(cfg, global_batch=8, seq_len=128,
+                                n_devices=8)
     for strat in strategy_names():
         ts = make_train_step(
             cfg, mesh,
@@ -83,7 +92,18 @@ def bench_strategy_steps(emit):
             opt, batch_like=batch, params_like=params)
         state = opt.init(params)
         us = _t(lambda: ts.fn(params, state, batch, jnp.int32(0)))
-        emit(f"strategy_step_{strat}", us, "1cpu_4L_128d")
+        # predicted step for the SAME planned schedule on a 2×4 mesh —
+        # simulated (network model) next to measured (1-CPU overhead).
+        # The bench config never emits in-scan psums (depcha_in_scan is
+        # False), so depcha is predicted as the plain chains it runs as.
+        tl = simulate(ts.gradsync.schedule, {"data": 2, "model": 4},
+                      compute=compute,
+                      sim=sim_config_for(
+                          strat, in_scan_active=cfg.depcha_in_scan))
+        emit(f"strategy_step_{strat}", us, "1cpu_4L_128d",
+             strategy=strat, reducer="flat", measured_us=us,
+             simulated_8dev_us=tl.step_time * 1e6,
+             simulated_overlap=tl.overlap_fraction)
 
 
 def bench_kernels(emit):
@@ -143,14 +163,28 @@ def bench_roofline_summary(emit):
 
 def main() -> None:
     print("name,us_per_call,derived")
+    sections: dict[str, list] = {}
 
-    def emit(name, us, derived):
-        print(f"{name},{us:.1f},{derived}")
+    def make_emit(section):
+        rows = sections.setdefault(section, [])
 
-    bench_paper_figures(emit)
-    bench_strategy_steps(emit)
-    bench_kernels(emit)
-    bench_roofline_summary(emit)
+        def emit(name, us, derived, **extra):
+            print(f"{name},{us:.1f},{derived}")
+            rows.append({"name": name, "us_per_call": round(us, 1),
+                         "derived": derived, **extra})
+
+        return emit
+
+    bench_paper_figures(make_emit("paper_figures"))
+    bench_strategy_steps(make_emit("strategy_step"))
+    bench_kernels(make_emit("kernels"))
+    bench_roofline_summary(make_emit("roofline"))
+
+    for section, rows in sections.items():
+        path = f"BENCH_{section}.json"
+        with open(path, "w") as f:
+            json.dump({"bench": section, "rows": rows}, f, indent=1)
+        print(f"[bench] wrote {path} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

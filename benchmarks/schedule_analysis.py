@@ -7,10 +7,14 @@ run standalone) and reports, per strategy:
     chain) — the planned dependency structure, asserted in microseconds,
   - number of HLO collective ops (all-reduce + reduce-scatter +
     all-gather) and how many sit inside the while-loop body (depcha:
-    per-layer in-scan psums → pipelinable by XLA).
+    per-layer in-scan psums → pipelinable by XLA),
+  - the repro.sim discrete-event prediction for the SAME planned
+    schedule on the same 2×4 mesh (step time, exposed comm, overlap) —
+    the simulated timeline printed next to the chain stats it explains.
 
 Expected IR shapes: funnel = 1 chain through every bucket; concom and
-priority ≈ num_channels chains; rsag = 2 ops (RS+AG) per bucket.
+priority ≈ num_channels chains; rsag = 2 ops (RS+AG) per bucket; auto
+delegates to the simulator's predicted winner.
 
     PYTHONPATH=src python -m benchmarks.schedule_analysis
 """
@@ -38,6 +42,7 @@ def analyze(strategy: str) -> dict:
     from repro.models import transformer as tf
     from repro.optim import adamw
     from repro.runtime import make_train_step
+    from repro.sim import compute_model_for, sim_config_for, simulate
 
     mesh = jax.make_mesh((2, 4), ("data", "model"),
                          axis_types=(AxisType.Auto,) * 2)
@@ -53,6 +58,13 @@ def analyze(strategy: str) -> dict:
         GradSyncConfig(strategy=strategy, num_channels=4, bucket_bytes=0),
         adamw(1e-3), batch_like=batch, params_like=params)
     ir = ts.gradsync.schedule.stats()
+    # simulated timeline of the SAME planned schedule on this 2×4 mesh
+    mesh_shape = {"data": 2, "model": 4}
+    tl = simulate(
+        ts.gradsync.schedule, mesh_shape,
+        compute=compute_model_for(cfg, global_batch=8, seq_len=32,
+                                  n_devices=8),
+        sim=sim_config_for(strategy))
     opt_state = adamw(1e-3).init(params)
     lowered = ts.fn.lower(params, opt_state, batch, jnp.int32(0))
     hlo = lowered.compile().as_text()
@@ -74,21 +86,29 @@ def analyze(strategy: str) -> dict:
             "ir_max_chain": ir["max_chain_len"],
             "collective_ops": total,
             "in_loop_body": in_loop,
-            "loop_trip_multiplied": in_loop * 4}   # n_layers=4
+            "loop_trip_multiplied": in_loop * 4,   # n_layers=4
+            "sim_step_us": tl.step_time * 1e6,
+            "sim_exposed_us": tl.exposed_comm * 1e6,
+            "sim_overlap": tl.overlap_fraction}
 
 
 def main():
+    import repro.sim  # noqa: F401  (registers the "auto" strategy)
+
     from repro.core import strategy_names
 
     print("strategy,ir_ops,ir_chains,ir_max_chain,"
-          "collective_ops_static,in_loop_body,runtime_collectives(~)")
+          "collective_ops_static,in_loop_body,runtime_collectives(~),"
+          "sim_step_us,sim_exposed_us,sim_overlap")
     for s in strategy_names():
         r = analyze(s)
         runtime = (r["collective_ops"] - r["in_loop_body"]
                    + r["loop_trip_multiplied"])
         print(f"{r['strategy']},{r['ir_ops']},{r['ir_chains']},"
               f"{r['ir_max_chain']},{r['collective_ops']},"
-              f"{r['in_loop_body']},{runtime}")
+              f"{r['in_loop_body']},{runtime},"
+              f"{r['sim_step_us']:.1f},{r['sim_exposed_us']:.1f},"
+              f"{r['sim_overlap']:.2f}")
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ from repro.core.kvstore import GradSync, GradSyncConfig, KVStore
 from repro.core.overlap import scan_layers, sync_in_backward
 from repro.core.registry import (
     StrategyInfo,
+    fixed_strategy_names,
     get_reducer,
     get_strategy,
     reducer_names,
@@ -25,6 +26,23 @@ from repro.core.schedule import (
 from repro.core.strategies import make_reducer, sync_grads
 
 
+# simulator entry points (repro.sim) re-exported lazily: repro.sim imports
+# repro.core submodules, so an eager import here would be circular.  Going
+# through this package also registers the "auto" strategy as a side effect.
+_SIM_EXPORTS = (
+    "ComputeModel",
+    "NetworkModel",
+    "SimConfig",
+    "Timeline",
+    "compute_model_for",
+    "default_network",
+    "grid_search",
+    "rank_strategies",
+    "simulate",
+    "simulate_strategy",
+)
+
+
 def __getattr__(name: str):
     # live registry views — a strategy registered after this package was
     # imported still shows up (a plain `from ... import STRATEGIES` here
@@ -33,6 +51,10 @@ def __getattr__(name: str):
         return strategy_names()
     if name == "REDUCERS":
         return reducer_names()
+    if name in _SIM_EXPORTS:
+        import repro.sim as _sim
+
+        return getattr(_sim, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
@@ -40,25 +62,36 @@ __all__ = [
     "BucketPlan",
     "CollectiveOp",
     "CommSchedule",
+    "ComputeModel",
     "GradSync",
     "GradSyncConfig",
     "KVStore",
+    "NetworkModel",
     "REDUCERS",
     "STRATEGIES",
+    "SimConfig",
     "StrategyInfo",
+    "Timeline",
     "chain",
+    "compute_model_for",
+    "default_network",
     "emit_gated",
     "execute",
+    "fixed_strategy_names",
     "gate",
     "get_reducer",
     "get_strategy",
+    "grid_search",
     "make_bucket_plan",
     "make_reducer",
     "new_token",
+    "rank_strategies",
     "reducer_names",
     "register_reducer",
     "register_strategy",
     "scan_layers",
+    "simulate",
+    "simulate_strategy",
     "strategy_names",
     "sync_grads",
     "sync_in_backward",

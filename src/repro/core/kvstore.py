@@ -22,6 +22,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dependency as dep
 from repro.core.buckets import Bucket, BucketPlan, LeafInfo, make_bucket_plan
@@ -87,9 +88,18 @@ class GradSync:
         # leaves whose psum already happened inside the backward scan
         self.skip_names = (
             in_scan_names if self.info.uses_in_scan else frozenset())
+        # meta strategies (auto) plan by simulating candidates — hand them
+        # the real topology so the cost model is calibrated
+        plan_kw = {}
+        if self.info.meta:
+            plan_kw["context"] = {
+                "mesh_shape": self.mesh_shape,
+                "reducer": cfg.reducer,
+                "itemsize": np.dtype(cfg.comm_dtype).itemsize,
+            }
         # the strategy's dependency structure, planned once, inspectable
         self.schedule: CommSchedule = self.info.plan(
-            self.plan, skip_names=self.skip_names)
+            self.plan, skip_names=self.skip_names, **plan_kw)
 
     def __call__(self, grads: Any) -> Any:
         return execute(

@@ -28,6 +28,12 @@ declared as metadata on registration:
   two_phase     — KVStore semantics: ``push`` emits the reduce-scatter,
                   ``pull`` the all-gather (rsag).
   single_chain  — all keys share ONE dependency chain (funnel).
+  meta          — the plan delegates to other registered strategies
+                  (``auto``: picks by simulation).  Meta plans accept an
+                  extra ``context`` mapping (mesh_shape / reducer / …)
+                  that GradSync supplies, and are excluded from candidate
+                  enumeration (``fixed_strategy_names``) so they can
+                  never delegate to themselves.
 """
 from __future__ import annotations
 
@@ -43,6 +49,7 @@ class StrategyInfo:
     deferred_pull: bool = False
     two_phase: bool = False
     single_chain: bool = False
+    meta: bool = False
     doc: str = ""
 
 
@@ -57,6 +64,7 @@ def register_strategy(
     deferred_pull: bool = False,
     two_phase: bool = False,
     single_chain: bool = False,
+    meta: bool = False,
     doc: str = "",
     override: bool = False,
 ) -> Callable:
@@ -68,7 +76,7 @@ def register_strategy(
         _STRATEGIES[name] = StrategyInfo(
             name=name, plan=plan, uses_in_scan=uses_in_scan,
             deferred_pull=deferred_pull, two_phase=two_phase,
-            single_chain=single_chain,
+            single_chain=single_chain, meta=meta,
             doc=doc or (plan.__doc__ or "").strip().split("\n")[0])
         return plan
 
@@ -108,6 +116,12 @@ def get_reducer(name: str) -> Callable[..., Any]:
 def strategy_names() -> tuple[str, ...]:
     """Registered strategy names, in registration order (builtins first)."""
     return tuple(_STRATEGIES)
+
+
+def fixed_strategy_names() -> tuple[str, ...]:
+    """Strategies that plan a concrete schedule themselves — the candidate
+    set meta strategies (``auto``) choose from."""
+    return tuple(n for n, s in _STRATEGIES.items() if not s.meta)
 
 
 def reducer_names() -> tuple[str, ...]:

@@ -87,6 +87,26 @@ class CommSchedule:
         return frozenset(
             l.name for op in self.ops for l in op.bucket.leaves)
 
+    def comm_bytes(self, itemsize: int = 4) -> int:
+        """Total payload bytes moved (RS/AG pairs counted once — they move
+        one bucket between them)."""
+        return sum(op.bucket.size * itemsize for op in self.ops
+                   if op.kind != ALL_GATHER)
+
+    def chain_bytes(self, itemsize: int = 4) -> dict[int, int]:
+        """Payload bytes per dependency chain (the simulator's unit of
+        serialization; also what a per-channel bandwidth budget sees)."""
+        out: dict[int, int] = {}
+        for op in self.ops:
+            if op.kind == ALL_GATHER:
+                continue
+            out[op.chain] = out.get(op.chain, 0) + op.bucket.size * itemsize
+        return out
+
+    def axes_used(self) -> frozenset[tuple[str, ...]]:
+        """Distinct reduction-axis groups (the communicators involved)."""
+        return frozenset(op.bucket.reduce_axes for op in self.ops)
+
     def stats(self) -> dict[str, Any]:
         lengths = self.chain_lengths()
         kinds: dict[str, int] = {}

@@ -240,7 +240,11 @@ def sync_grads(
     needed only for strategies emitting reduce-scatter/all-gather ops
     (rsag) or when ``mean_axes`` scaling applies on that path.
     """
-    schedule = get_strategy(strategy).plan(plan, skip_names=skip_names)
+    info = get_strategy(strategy)
+    plan_kw = {}
+    if info.meta and mesh_shape is not None:
+        plan_kw["context"] = {"mesh_shape": mesh_shape}
+    schedule = info.plan(plan, skip_names=skip_names, **plan_kw)
     return execute(schedule, grads, plan, reducer=reducer,
                    mesh_shape=mesh_shape, mean_axes=mean_axes)
 

@@ -44,6 +44,7 @@ from repro.core import (
     reducer_names,
     strategy_names,
 )
+import repro.sim  # noqa: F401  (registers "auto" → --strategy auto)
 from repro.launch.mesh import make_production_mesh, mesh_shape_dict
 from repro.models.registry import family_of
 from repro.optim import adamw, sgd

@@ -23,6 +23,7 @@ from repro.core import (
     reducer_names,
     strategy_names,
 )
+import repro.sim  # noqa: F401  (registers "auto" → --strategy auto)
 from repro.data import ImagePipeline, TokenPipeline
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
 from repro.models.registry import family_of

@@ -133,8 +133,12 @@ def make_train_step(
         opt_state_like = jax.eval_shape(optimizer.init, params_like)
     ospecs = _opt_state_specs(opt_state_like, params_like, pspecs, mesh)
 
+    # skip leaves from the post-backward schedule ONLY when the model is
+    # actually emitting their psums inside the backward scan — otherwise
+    # a depcha config without depcha_in_scan would leave them unreduced
     in_scan = (api.in_scan_names(params_like)
-               if get_strategy(sync.strategy).uses_in_scan else frozenset())
+               if get_strategy(sync.strategy).uses_in_scan
+               and getattr(cfg, "depcha_in_scan", False) else frozenset())
     # bucket plan must see LOCAL shard shapes (it runs inside shard_map)
     from repro.parallel.sharding import localize_structs
     grads_local = localize_structs(

@@ -1,0 +1,68 @@
+"""repro.sim: discrete-event CommSchedule simulator + cost-model autotuner
+(DESIGN.md §7).
+
+Predicts, without hardware, how each collective-embedding strategy's
+dependency structure lands on a timeline: per-op start/end, exposed
+communication, overlap fraction, and step time — from an alpha-beta
+network model (``netmodel``), a FLOP-derived compute model (``compute``)
+and an event-driven executor over the CommSchedule IR (``engine``).
+
+Importing this package registers the ``auto`` strategy (``autotune``):
+``--strategy auto`` plans by simulating every fixed strategy and
+delegating to the predicted winner.
+
+    PYTHONPATH=src python -m repro.sim --arch resnet50-cifar
+    PYTHONPATH=src python -m repro.sim --arch qwen3-1.7b --autotune
+"""
+from repro.sim.autotune import (
+    Prediction,
+    grid_search,
+    last_auto_report,
+    plan_auto,
+    rank_strategies,
+    sim_config_for,
+    simulate_strategy,
+)
+from repro.sim.compute import (
+    ComputeModel,
+    HardwareModel,
+    compute_model_for,
+    count_params,
+    fwd_flops,
+)
+from repro.sim.engine import OpEvent, SimConfig, Timeline, simulate
+from repro.sim.netmodel import DCN, ICI, LinkModel, NetworkModel, default_network
+from repro.sim.trace import (
+    ascii_timeline,
+    chrome_trace,
+    chrome_trace_events,
+    write_chrome_trace,
+)
+
+__all__ = [
+    "ComputeModel",
+    "DCN",
+    "HardwareModel",
+    "ICI",
+    "LinkModel",
+    "NetworkModel",
+    "OpEvent",
+    "Prediction",
+    "SimConfig",
+    "Timeline",
+    "ascii_timeline",
+    "chrome_trace",
+    "chrome_trace_events",
+    "compute_model_for",
+    "count_params",
+    "default_network",
+    "fwd_flops",
+    "grid_search",
+    "last_auto_report",
+    "plan_auto",
+    "rank_strategies",
+    "sim_config_for",
+    "simulate",
+    "simulate_strategy",
+    "write_chrome_trace",
+]

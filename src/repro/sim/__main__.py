@@ -1,0 +1,162 @@
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+DOC = """Simulate every collective-embedding strategy for one (arch ×
+shape × mesh) cell — predicted timelines, exposed communication and the
+auto-tuned winner, all on CPU in seconds (no compile, no hardware).
+
+  PYTHONPATH=src python -m repro.sim --arch resnet50-cifar
+  PYTHONPATH=src python -m repro.sim --arch qwen3-1.7b --shape train_4k \
+      --mesh multi --autotune --trace results/sim_trace.json
+"""
+
+import argparse
+import json
+
+import repro  # noqa: F401  (jaxcompat shim before jax.sharding imports)
+import jax  # noqa: F401
+
+from repro.configs import get_arch
+from repro.configs.base import param_structs
+from repro.core.registry import fixed_strategy_names, get_strategy
+from repro.core.buckets import make_bucket_plan
+from repro.launch.mesh import make_production_mesh, mesh_shape_dict
+from repro.models.registry import family_of
+from repro.parallel.sharding import dp_axes_of, localize_structs
+from repro.sim import (
+    SimConfig,
+    ascii_timeline,
+    compute_model_for,
+    grid_search,
+    last_auto_report,
+    plan_auto,
+    simulate,
+    simulate_strategy,
+    write_chrome_trace,
+)
+
+
+def _make_mesh(spec: str):
+    import jax
+    from jax.sharding import AxisType
+
+    if spec == "single":
+        return make_production_mesh(multi_pod=False)
+    if spec == "multi":
+        return make_production_mesh(multi_pod=True)
+    dims = tuple(int(v) for v in spec.split("x"))
+    axes = {2: ("data", "model"), 3: ("pod", "data", "model")}[len(dims)]
+    return jax.make_mesh(dims, axes,
+                         axis_types=(AxisType.Auto,) * len(dims))
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=DOC, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None,
+                    help="shape name (default: the arch's train shape)")
+    ap.add_argument("--mesh", default="single",
+                    help="single | multi | DxM | PxDxM")
+    ap.add_argument("--channels", type=int, default=4)
+    ap.add_argument("--bucket-mb", type=float, default=4.0)
+    ap.add_argument("--reducer", default="flat")
+    ap.add_argument("--comm-dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--autotune", action="store_true",
+                    help="grid-search strategy × channels × bucket size")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace JSON of all timelines")
+    ap.add_argument("--ascii", action="store_true",
+                    help="render the best strategy's timeline")
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+
+    arch = get_arch(args.arch)
+    shape = arch.shape(args.shape) if args.shape else next(
+        (s for s in arch.shapes if s.kind == "train"), arch.shapes[0])
+    mesh = _make_mesh(args.mesh)
+    mesh_shape = mesh_shape_dict(mesh)
+    n_devices = 1
+    for s in mesh_shape.values():
+        n_devices *= s
+
+    cfg = arch.make_config(tp=mesh_shape.get("model", 1),
+                           dp_axes=dp_axes_of(mesh))
+    params_sds = param_structs(cfg)
+    pspecs = family_of(cfg).param_rules(cfg).tree_specs(params_sds)
+    # GradSync runs inside shard_map: the comm payload is the LOCAL shard
+    params_sds = localize_structs(params_sds, pspecs, mesh)
+    compute = compute_model_for(
+        cfg, global_batch=shape.global_batch, seq_len=shape.seq_len,
+        n_devices=n_devices)
+    itemsize = 2 if args.comm_dtype == "bf16" else 4
+    comm_dtype = jnp.bfloat16 if args.comm_dtype == "bf16" else jnp.float32
+    sim = SimConfig(window=args.window, itemsize=itemsize,
+                    reducer=args.reducer)
+    plan = make_bucket_plan(
+        params_sds, pspecs, mesh,
+        bucket_bytes=int(args.bucket_mb * 1024 * 1024),
+        num_channels=args.channels, comm_dtype=comm_dtype)
+
+    print(f"[sim] {args.arch} × {shape.name} × {args.mesh} "
+          f"({'x'.join(f'{k}={v}' for k, v in mesh_shape.items())}), "
+          f"{plan.total_bytes / 1e6:.1f} MB grads in "
+          f"{len(plan.buckets)} buckets, "
+          f"t_fwd={compute.t_fwd * 1e3:.2f} ms "
+          f"t_bwd={compute.t_bwd * 1e3:.2f} ms")
+
+    print("strategy,ops,chains,step_ms,comm_ms,exposed_ms,overlap_pct")
+    timelines = {}
+    for name in fixed_strategy_names():
+        schedule, tl = simulate_strategy(
+            name, plan, mesh_shape, compute=compute, sim=sim)
+        timelines[name] = tl
+        print(f"{name},{len(schedule.ops)},{schedule.num_chains},"
+              f"{tl.step_time * 1e3:.3f},{tl.total_comm * 1e3:.3f},"
+              f"{tl.exposed_comm * 1e3:.3f},"
+              f"{tl.overlap_fraction * 100:.1f}")
+
+    auto_schedule = plan_auto(plan, context={
+        "mesh_shape": mesh_shape, "reducer": args.reducer,
+        "itemsize": itemsize, "compute": compute})
+    report = last_auto_report()
+    auto_tl = simulate(auto_schedule, mesh_shape, compute=compute, sim=sim)
+    timelines["auto"] = auto_tl
+    print(f"[sim] auto → {report['winner']} "
+          f"(predicted {report['ranking'][0][1] * 1e3:.3f} ms/step)")
+
+    if args.ascii:
+        best = report["winner"]
+        print(f"[sim] timeline: {best}")
+        print(ascii_timeline(timelines[best]))
+
+    if args.autotune:
+        preds = grid_search(
+            params_sds, pspecs, mesh, mesh_shape=mesh_shape,
+            compute=compute, sim=sim, comm_dtype=comm_dtype)
+        print("tuned: strategy,channels,bucket_mb,step_ms,overlap_pct")
+        for p in preds[:10]:
+            print(f"tuned: {p.strategy},{p.num_channels},"
+                  f"{p.bucket_bytes / (1 << 20):.0f},"
+                  f"{p.step_time * 1e3:.3f},"
+                  f"{p.overlap_fraction * 100:.1f}")
+        best = preds[0]
+        print(f"[sim] best config: --strategy {best.strategy} "
+              f"--channels {best.num_channels} "
+              f"--bucket-mb {best.bucket_bytes / (1 << 20):.0f}")
+
+    if args.trace:
+        os.makedirs(os.path.dirname(args.trace) or ".", exist_ok=True)
+        write_chrome_trace(args.trace, timelines)
+        n_events = sum(len(t.events) for t in timelines.values())
+        print(f"[sim] wrote {args.trace} ({n_events} op events, "
+              f"open in chrome://tracing or Perfetto)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

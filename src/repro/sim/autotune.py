@@ -1,0 +1,222 @@
+"""Cost-model autotuning: simulate every candidate embedding, pick the
+winner (DESIGN.md §7).
+
+Two entry points:
+
+  ``rank_strategies``  — simulate every *fixed* registered strategy on one
+      BucketPlan and return (name, Timeline) sorted by predicted step
+      time.  Strategy semantics come from registry metadata: in-scan
+      strategies simulate with per-scan-step releases and no cross-bucket
+      chain edges.
+
+  ``grid_search``      — the full strategy × num_channels × bucket_bytes
+      sweep over freshly built BucketPlans; returns ranked
+      ``Prediction`` rows whose best row is directly a GradSyncConfig
+      choice.
+
+Importing this module registers the ``auto`` strategy: a *meta* planner
+that simulates all fixed candidates on the plan it is handed and
+delegates to the winner's schedule.  ``GradSync`` passes meta strategies
+a ``context`` mapping (mesh_shape / reducer / itemsize / compute) so the
+simulation sees the real topology; without context the planner falls
+back to an 8-way group per axis — still a valid schedule, just a less
+calibrated choice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+from repro.core.buckets import BucketPlan, make_bucket_plan
+from repro.core.registry import (
+    fixed_strategy_names,
+    get_strategy,
+    register_strategy,
+)
+from repro.core.schedule import CommSchedule
+
+from repro.sim.compute import ComputeModel
+from repro.sim.engine import SimConfig, Timeline, simulate
+from repro.sim.netmodel import NetworkModel, default_network
+
+
+def sim_config_for(name: str, base: SimConfig | None = None, *,
+                   in_scan_active: bool = True) -> SimConfig:
+    """Map a strategy's registry metadata onto simulator semantics.
+
+    ``in_scan_active=False`` disables the in-scan advantage (per-stage
+    releases, no chain edges) even for ``uses_in_scan`` strategies — used
+    when the execution being predicted will NOT emit in-scan psums (e.g.
+    ``auto`` delegating: the model's ``depcha_in_scan`` keys off the
+    configured strategy, so a delegated depcha runs as plain chains)."""
+    info = get_strategy(name)
+    base = base or SimConfig()
+    flag = info.uses_in_scan and in_scan_active
+    return dataclasses.replace(
+        base, drop_chain_deps=flag, per_stage_release=flag)
+
+
+def simulate_strategy(
+    name: str,
+    plan: BucketPlan,
+    mesh_shape: Mapping[str, int],
+    *,
+    compute: ComputeModel | None = None,
+    net: NetworkModel | None = None,
+    sim: SimConfig | None = None,
+    skip_names: frozenset[str] = frozenset(),
+    in_scan_active: bool = True,
+) -> tuple[CommSchedule, Timeline]:
+    """Plan ``name`` on ``plan`` and execute it in the simulator."""
+    schedule = get_strategy(name).plan(plan, skip_names=skip_names)
+    timeline = simulate(
+        schedule, mesh_shape, compute=compute, net=net,
+        sim=sim_config_for(name, sim, in_scan_active=in_scan_active))
+    return schedule, timeline
+
+
+def rank_strategies(
+    plan: BucketPlan,
+    mesh_shape: Mapping[str, int],
+    *,
+    compute: ComputeModel | None = None,
+    net: NetworkModel | None = None,
+    sim: SimConfig | None = None,
+    skip_names: frozenset[str] = frozenset(),
+    strategies: Sequence[str] | None = None,
+    in_scan_active: bool = True,
+) -> list[tuple[str, Timeline]]:
+    """Every fixed strategy's predicted timeline, best first."""
+    names = tuple(strategies) if strategies else fixed_strategy_names()
+    out = []
+    for name in names:
+        _, tl = simulate_strategy(
+            name, plan, mesh_shape, compute=compute, net=net, sim=sim,
+            skip_names=skip_names, in_scan_active=in_scan_active)
+        out.append((name, tl))
+    out.sort(key=lambda p: (p[1].step_time, p[0]))
+    return out
+
+
+# ------------------------------------------------------------------ auto
+
+# the last auto decision, for introspection (CLI/benchmarks/tests)
+_LAST_AUTO: dict[str, Any] = {}
+
+
+def last_auto_report() -> dict[str, Any]:
+    """{"winner": name, "ranking": [(name, step_time), ...]} of the most
+    recent ``auto`` plan; empty before the first plan."""
+    return dict(_LAST_AUTO)
+
+
+def _candidates(reducer: str) -> tuple[str, ...]:
+    # two-phase strategies emit raw RS/AG ops that would silently ignore
+    # a non-flat reducer (same rule GradSync enforces) — not candidates
+    return tuple(
+        n for n in fixed_strategy_names()
+        if reducer == "flat" or not get_strategy(n).two_phase)
+
+
+@register_strategy(
+    "auto", meta=True,
+    doc="simulate every fixed strategy, delegate to the predicted winner")
+def plan_auto(
+    plan: BucketPlan,
+    *,
+    skip_names: frozenset[str] = frozenset(),
+    context: Mapping[str, Any] | None = None,
+) -> CommSchedule:
+    """Plan by simulation: run every fixed candidate through the
+    discrete-event engine on this exact BucketPlan, return the winner's
+    schedule.  ``context`` (supplied by GradSync for meta strategies)
+    carries mesh_shape / reducer / itemsize / an optional ComputeModel."""
+    ctx = dict(context or {})
+    mesh_shape = ctx.get("mesh_shape") or {
+        a: 8 for b in plan.buckets for a in b.reduce_axes}
+    reducer = ctx.get("reducer", "flat")
+    sim = SimConfig(itemsize=int(ctx.get("itemsize", 4)), reducer=reducer)
+    # in-scan psums are keyed on the CONFIGURED strategy, so a delegated
+    # depcha runs as plain chains — rank it with the semantics the
+    # delegated execution can actually realize (in-scan only counts when
+    # the caller really dropped in-scan leaves from this plan)
+    ranked = rank_strategies(
+        plan, mesh_shape,
+        compute=ctx.get("compute"), net=ctx.get("net"), sim=sim,
+        skip_names=skip_names, strategies=_candidates(reducer),
+        in_scan_active=bool(skip_names))
+    winner = ranked[0][0]
+    _LAST_AUTO.clear()
+    _LAST_AUTO.update({
+        "winner": winner,
+        "ranking": [(n, tl.step_time) for n, tl in ranked],
+    })
+    return get_strategy(winner).plan(plan, skip_names=skip_names)
+
+
+# ----------------------------------------------------------- grid search
+
+@dataclasses.dataclass(frozen=True)
+class Prediction:
+    """One grid cell: a (strategy, channels, bucket size) candidate and
+    its simulated outcome."""
+
+    strategy: str
+    num_channels: int
+    bucket_bytes: int
+    step_time: float
+    exposed_comm: float
+    overlap_fraction: float
+    num_ops: int
+
+    def as_row(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def grid_search(
+    grads_like: Any,
+    param_specs: Any,
+    mesh,
+    *,
+    mesh_shape: Mapping[str, int],
+    compute: ComputeModel | None = None,
+    net: NetworkModel | None = None,
+    sim: SimConfig | None = None,
+    strategies: Sequence[str] | None = None,
+    channels: Sequence[int] = (1, 2, 4, 8),
+    bucket_bytes: Sequence[int] = (1 << 20, 4 << 20, 16 << 20),
+    comm_dtype=None,
+    skip_names: frozenset[str] = frozenset(),
+) -> list[Prediction]:
+    """Simulate the full strategy × num_channels × bucket_bytes grid.
+
+    Returns predictions sorted best-first; ``[0]`` is the tuned choice
+    (its fields map 1:1 onto GradSyncConfig).  Single-chain strategies
+    collapse the channel dimension (their plan ignores channels).
+    """
+    import jax.numpy as jnp
+
+    net = net or default_network()
+    names = tuple(strategies) if strategies else fixed_strategy_names()
+    out: list[Prediction] = []
+    for bb in bucket_bytes:
+        for ch in channels:
+            plan = make_bucket_plan(
+                grads_like, param_specs, mesh,
+                bucket_bytes=bb, num_channels=ch,
+                comm_dtype=comm_dtype if comm_dtype is not None
+                else jnp.float32)
+            for name in names:
+                if get_strategy(name).single_chain and ch != channels[0]:
+                    continue        # funnel ignores channels: sim once
+                _, tl = simulate_strategy(
+                    name, plan, mesh_shape, compute=compute, net=net,
+                    sim=sim, skip_names=skip_names)
+                out.append(Prediction(
+                    strategy=name, num_channels=ch, bucket_bytes=bb,
+                    step_time=tl.step_time, exposed_comm=tl.exposed_comm,
+                    overlap_fraction=tl.overlap_fraction,
+                    num_ops=len(tl.events)))
+    out.sort(key=lambda p: (p.step_time, p.strategy,
+                            p.num_channels, p.bucket_bytes))
+    return out

@@ -1,0 +1,123 @@
+"""Per-bucket compute timing: when does each gradient bucket become
+ready during the backward pass? (DESIGN.md §7)
+
+The simulator needs two things from the compute side:
+  - ``t_fwd`` / ``t_bwd`` — step-level forward/backward durations, derived
+    from model FLOPs (``repro.configs``/``repro.models``) and a hardware
+    model (same v5e numbers as benchmarks/roofline.py);
+  - per-bucket *release times* — buckets are created in gradient-ready
+    order (``make_bucket_plan(reverse=True)``), so bucket ``i`` is
+    released once its cumulative share of the backward has run.  For
+    in-scan strategies (depcha) releases snap to scan-step boundaries:
+    the psum is emitted at the END of its layer's backward step.
+
+FLOP models (forward, whole step):
+  LM families      2 · params · tokens           (dense matmul bound)
+  conv families    params · img² / 256 · images  (calibrated on the
+                   paper's models: ResNet-50/CIFAR → ~1.0e8 flops/image,
+                   ResNet-50/ImageNet → ~5e9, cf. benchmarks/
+                   paper_figures.py measured 1.0e8 / 4.1e9)
+Backward ≈ 2 × forward throughout (the standard 1:2 fwd:bwd split).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Per-chip compute throughput (v5e, same source as roofline.py)."""
+
+    peak_flops: float = 197e12
+    mfu: float = 0.4             # realistic matmul utilization
+
+    @property
+    def flops(self) -> float:
+        return self.peak_flops * self.mfu
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeModel:
+    """Step-level compute durations + bucket release-time policy."""
+
+    t_fwd: float
+    t_bwd: float
+    n_stages: int = 1        # backward scan steps (layers); release grain
+
+    def bucket_release_times(
+        self,
+        bucket_sizes: Sequence[tuple[int, int]],
+        *,
+        per_stage: bool = False,
+    ) -> dict[int, float]:
+        """bucket_id → time its gradients exist.
+
+        ``bucket_sizes`` is (bucket_id, elems); bucket_ids ascend in
+        gradient-ready order (the bucketer's creation order).  With
+        ``per_stage`` the release snaps up to the owning scan step's end
+        (in-scan psums are emitted per layer, not per element).
+        """
+        total = sum(s for _, s in bucket_sizes)
+        if total <= 0:
+            return {bid: self.t_fwd for bid, _ in bucket_sizes}
+        out: dict[int, float] = {}
+        cum = 0
+        for bid, size in sorted(bucket_sizes):
+            cum += size
+            frac = cum / total
+            if per_stage and self.n_stages > 1:
+                frac = math.ceil(frac * self.n_stages) / self.n_stages
+            out[bid] = self.t_fwd + self.t_bwd * frac
+        return out
+
+    @property
+    def end(self) -> float:
+        return self.t_fwd + self.t_bwd
+
+
+def count_params(cfg) -> int:
+    """Total parameter elements via eval_shape (no device allocation)."""
+    import jax
+
+    from repro.configs.base import param_structs
+
+    return sum(
+        int(math.prod(l.shape)) if l.shape else 1
+        for l in jax.tree_util.tree_leaves(param_structs(cfg)))
+
+
+def fwd_flops(cfg, *, global_batch: int, seq_len: int,
+              params: int | None = None) -> float:
+    """Whole-step forward FLOPs for any registered model family."""
+    from repro.models.registry import family_of
+
+    p = params if params is not None else count_params(cfg)
+    family = family_of(cfg).family
+    if family in ("resnet", "inception"):
+        return p * (cfg.img_size ** 2) / 256.0 * global_batch
+    return 2.0 * p * global_batch * max(seq_len, 1)
+
+
+def n_stages_of(cfg) -> int:
+    """Backward scan steps: layers for scanned families, stages for convnets."""
+    n = getattr(cfg, "n_layers", None)
+    if n:
+        return int(n)
+    stages = getattr(cfg, "stages", None)
+    if stages:
+        return int(sum(stages))
+    return 1
+
+
+def compute_model_for(cfg, *, global_batch: int, seq_len: int,
+                      n_devices: int,
+                      hw: HardwareModel | None = None) -> ComputeModel:
+    """Derive the step's compute timeline from model FLOPs and the mesh
+    size (compute is data-parallel: per-device share of the step)."""
+    hw = hw or HardwareModel()
+    f = fwd_flops(cfg, global_batch=global_batch, seq_len=seq_len)
+    t_fwd = f / (max(n_devices, 1) * hw.flops)
+    return ComputeModel(t_fwd=t_fwd, t_bwd=2.0 * t_fwd,
+                        n_stages=n_stages_of(cfg))

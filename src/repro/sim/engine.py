@@ -1,0 +1,197 @@
+"""Discrete-event executor for CommSchedule IR (DESIGN.md §7).
+
+Walks the schedule's token chains exactly as the runtime emitter would —
+an op may start once (a) every ``depends_on`` op finished (chain
+serialization: funnel = 1 chain, concom/priority = ``num_channels``
+concurrent chains, rsag = RS chain + free-flying AGs), (b) its bucket's
+gradients exist (``ComputeModel`` release times), and (c) an in-flight
+slot is free (the bounded OUTSTANDING window of paper Fig 8).  Op
+durations come from the alpha-beta ``NetworkModel``.
+
+For in-scan strategies (depcha) the chain edges are dropped and releases
+snap to scan-step boundaries: each layer's psum is emitted inside the
+backward scan, gated only by the scan itself — ``drop_chain_deps`` +
+``per_stage_release`` in ``SimConfig`` (cross-bucket edges vanish;
+same-bucket RS→AG edges always survive, they are data deps).
+
+The run is fully deterministic: ties break on op_id, no wall-clock, no
+randomness — the same schedule always yields the same timeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Mapping
+
+from repro.core.schedule import ALL_GATHER, CommSchedule
+
+from repro.sim.compute import ComputeModel
+from repro.sim.netmodel import NetworkModel, default_network
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Knobs of one simulation run (strategy semantics + wire format)."""
+
+    window: int = 8              # max collectives in flight (Fig 8 window)
+    itemsize: int = 4            # comm dtype bytes (f32=4, bf16=2)
+    reducer: str = "flat"        # default reducer for untagged ops
+    drop_chain_deps: bool = False    # in-scan: no cross-bucket chains
+    per_stage_release: bool = False  # in-scan: release at scan-step ends
+
+
+@dataclasses.dataclass(frozen=True)
+class OpEvent:
+    """One simulated collective: the timeline row for a CollectiveOp."""
+
+    op_id: int
+    bucket_id: int
+    chain: int
+    kind: str
+    nbytes: int
+    release: float      # bucket gradients ready
+    start: float        # deps + release + window slot satisfied
+    end: float
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
+@dataclasses.dataclass(frozen=True)
+class Timeline:
+    """The simulated step: per-op events + step-level metrics."""
+
+    events: tuple[OpEvent, ...]
+    t_fwd: float
+    t_bwd: float
+
+    @property
+    def compute_end(self) -> float:
+        return self.t_fwd + self.t_bwd
+
+    @property
+    def comm_end(self) -> float:
+        return max((e.end for e in self.events), default=0.0)
+
+    @property
+    def step_time(self) -> float:
+        return max(self.compute_end, self.comm_end)
+
+    @property
+    def total_comm(self) -> float:
+        return sum(e.duration for e in self.events)
+
+    @property
+    def exposed_comm(self) -> float:
+        """Communication the step waits on after compute finishes."""
+        return max(0.0, self.comm_end - self.compute_end)
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Share of communication hidden behind compute."""
+        if self.total_comm <= 0.0:
+            return 1.0
+        return max(0.0, 1.0 - self.exposed_comm / self.total_comm)
+
+    def stats(self) -> dict:
+        return {
+            "num_ops": len(self.events),
+            "step_time": self.step_time,
+            "compute_time": self.compute_end,
+            "comm_time": self.total_comm,
+            "exposed_comm": self.exposed_comm,
+            "overlap_fraction": self.overlap_fraction,
+        }
+
+
+def simulate(
+    schedule: CommSchedule,
+    mesh_shape: Mapping[str, int],
+    *,
+    compute: ComputeModel | None = None,
+    net: NetworkModel | None = None,
+    sim: SimConfig | None = None,
+) -> Timeline:
+    """Execute ``schedule`` as a discrete-event timeline.
+
+    Emits exactly one ``OpEvent`` per CollectiveOp; events are returned
+    in start-time order (ties by op_id).
+    """
+    net = net or default_network()
+    sim = sim or SimConfig()
+    compute = compute or ComputeModel(t_fwd=0.0, t_bwd=0.0)
+
+    releases = compute.bucket_release_times(
+        sorted({op.bucket.bucket_id: op.bucket.size
+                for op in schedule.ops}.items()),
+        per_stage=sim.per_stage_release)
+
+    by_id = {op.op_id: op for op in schedule.ops}
+
+    def deps_of(op) -> tuple[int, ...]:
+        if not sim.drop_chain_deps:
+            return op.depends_on
+        # in-scan semantics: only the data dep (same bucket's RS) survives
+        return tuple(d for d in op.depends_on
+                     if op.kind == ALL_GATHER
+                     and by_id[d].bucket.bucket_id == op.bucket.bucket_id)
+
+    def duration(op) -> float:
+        nbytes = op.bucket.size * sim.itemsize
+        return net.collective_time(
+            op.kind, nbytes, op.bucket.reduce_axes, mesh_shape,
+            reducer=op.reducer or sim.reducer)
+
+    pending = {op.op_id: len(deps_of(op)) for op in schedule.ops}
+    children: dict[int, list[int]] = {}
+    dep_ready = {op.op_id: releases[op.bucket.bucket_id]
+                 for op in schedule.ops}
+    for op in schedule.ops:
+        for d in deps_of(op):
+            children.setdefault(d, []).append(op.op_id)
+
+    avail: list[tuple[float, int]] = []       # (ready_time, op_id)
+    running: list[tuple[float, int]] = []     # (end_time, op_id)
+    events: list[OpEvent] = []
+    now = 0.0
+
+    for op in schedule.ops:
+        if pending[op.op_id] == 0:
+            heapq.heappush(avail, (dep_ready[op.op_id], op.op_id))
+
+    def finish_one() -> float:
+        nonlocal now
+        end, oid = heapq.heappop(running)
+        now = max(now, end)
+        for child in children.get(oid, ()):
+            dep_ready[child] = max(dep_ready[child], end)
+            pending[child] -= 1
+            if pending[child] == 0:
+                heapq.heappush(avail, (dep_ready[child], child))
+        return end
+
+    while avail or running:
+        if avail and len(running) < sim.window:
+            ready_time, oid = avail[0]
+            start = max(ready_time, now)
+            # a completion before `start` may unlock an earlier-ready op
+            if running and running[0][0] <= start:
+                finish_one()
+                continue
+            heapq.heappop(avail)
+            now = start
+            op = by_id[oid]
+            end = start + duration(op)
+            heapq.heappush(running, (end, oid))
+            events.append(OpEvent(
+                op_id=oid, bucket_id=op.bucket.bucket_id, chain=op.chain,
+                kind=op.kind, nbytes=op.bucket.size * sim.itemsize,
+                release=releases[op.bucket.bucket_id],
+                start=start, end=end))
+        else:
+            finish_one()
+
+    events.sort(key=lambda e: (e.start, e.op_id))
+    return Timeline(events=tuple(events),
+                    t_fwd=compute.t_fwd, t_bwd=compute.t_bwd)

@@ -1,0 +1,175 @@
+"""Alpha-beta collective cost models over the mesh topology (DESIGN.md §7).
+
+Shi et al.'s DAG model of S-SGD (arXiv 1805.03812) predicts collective
+timelines from ``t = steps · (alpha + shard_bytes / beta)`` per ring step;
+we instantiate that per mesh axis so a collective over ("pod", "data")
+pays DCN latency/bandwidth on the "pod" hops and ICI on the "data" hops.
+
+Everything here is pure Python over numbers — no jax, no devices — so a
+full strategy × channels × bucket-size sweep simulates in milliseconds.
+
+Cost conventions (ring algorithm over group ``g`` with ``n`` bytes):
+  allreduce       2(g-1) steps, shard n/g          (reduce-scatter + all-gather)
+  reduce_scatter   (g-1) steps, shard n/g
+  all_gather       (g-1) steps, shard n/g
+  all_to_all       (g-1) steps, shard n/g
+Multi-axis groups decompose axis-by-axis (fastest link first), the exact
+lowering of a flat psum over a product group: full payload rides every
+tier.  The *hierarchical* reducer instead reduce-scatters over the fast
+tier first, so only 1/g_fast of the payload crosses the slow tier; the
+*compressed* reducer moves ~n/4 wire bytes (int8 + block scales) plus two
+HBM-bound quantize passes — both reproduce the cost structure of the real
+reducers in ``repro.core``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+# compression wire format (mirrors repro.core.compression)
+_COMP_BLOCK = 256          # elements per scale block
+_COMP_RATIO = 0.25 + 4.0 / (4 * _COMP_BLOCK)   # int8 + f32 scale per block
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """One interconnect tier: per-hop latency (alpha) + bandwidth (beta)."""
+
+    name: str
+    bandwidth: float     # bytes/s per device per direction
+    latency: float       # seconds per ring step
+
+
+# TPU-flavoured defaults (v5e-era numbers, same source as benchmarks/
+# roofline.py): ICI within a pod, DCN between pods.
+ICI = LinkModel("ici", bandwidth=4.5e10, latency=1e-6)
+DCN = LinkModel("dcn", bandwidth=2.5e9, latency=25e-6)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    """Mesh-axis → link-tier map plus reducer-specific cost overheads."""
+
+    links: tuple[tuple[str, LinkModel], ...] = (("pod", DCN),)
+    default_link: LinkModel = ICI
+    quantize_bw: float = 819e9   # bytes/s; HBM-bound quantize/dequant pass
+
+    def link(self, axis: str) -> LinkModel:
+        for name, lk in self.links:
+            if name == axis:
+                return lk
+        return self.default_link
+
+    # ------------------------------------------------------------ rings
+    def _ring(self, nbytes: float, group: int, link: LinkModel,
+              steps_factor: float) -> float:
+        if group <= 1:
+            return 0.0
+        steps = steps_factor * (group - 1)
+        return steps * (link.latency + (nbytes / group) / link.bandwidth)
+
+    def _axis_groups(self, axes: tuple[str, ...],
+                     mesh_shape: Mapping[str, int]) -> list[tuple[str, int]]:
+        """(axis, size) with size>1, fastest link first (per-axis rings
+        run back-to-back; order only matters for shrinking payloads)."""
+        out = [(a, int(mesh_shape.get(a, 1))) for a in axes
+               if int(mesh_shape.get(a, 1)) > 1]
+        return sorted(out, key=lambda p: -self.link(p[0]).bandwidth)
+
+    # ------------------------------------------------------ collectives
+    def allreduce_time(self, nbytes: float, axes: tuple[str, ...],
+                       mesh_shape: Mapping[str, int], *,
+                       reducer: str = "flat") -> float:
+        groups = self._axis_groups(axes, mesh_shape)
+        if not groups:
+            return 0.0
+        if reducer == "hierarchical":
+            t = self._hierarchical_time(nbytes, groups)
+            if t is not None:
+                return t
+        if reducer == "compressed":
+            t = self._compressed_time(nbytes, groups)
+            if t is not None:
+                return t
+        # flat psum over the product group: full payload on every tier
+        return sum(self._ring(nbytes, g, self.link(a), 2.0)
+                   for a, g in groups)
+
+    def reduce_scatter_time(self, nbytes: float, axes: tuple[str, ...],
+                            mesh_shape: Mapping[str, int]) -> float:
+        t, n = 0.0, float(nbytes)
+        for a, g in self._axis_groups(axes, mesh_shape):
+            t += self._ring(n, g, self.link(a), 1.0)
+            n /= g                      # each tier shrinks the shard
+        return t
+
+    def all_gather_time(self, nbytes: float, axes: tuple[str, ...],
+                        mesh_shape: Mapping[str, int]) -> float:
+        # mirror image of reduce_scatter: payload grows tier by tier, so
+        # the total is identical — computed the same way for clarity
+        return self.reduce_scatter_time(nbytes, axes, mesh_shape)
+
+    def all_to_all_time(self, nbytes: float, axes: tuple[str, ...],
+                        mesh_shape: Mapping[str, int]) -> float:
+        return sum(self._ring(nbytes, g, self.link(a), 1.0)
+                   for a, g in self._axis_groups(axes, mesh_shape))
+
+    # ------------------------------------------------- reducer variants
+    def _hierarchical_time(self, nbytes: float,
+                           groups: list[tuple[str, int]]) -> float | None:
+        """RS(fast tiers) → AR(slow tiers, 1/g_fast payload) → AG(fast)."""
+        fast_bw = max(self.link(a).bandwidth for a, _ in groups)
+        fast = [(a, g) for a, g in groups
+                if self.link(a).bandwidth >= fast_bw]
+        slow = [(a, g) for a, g in groups
+                if self.link(a).bandwidth < fast_bw]
+        if not slow:
+            return None                 # single tier: same as flat
+        g_fast = 1
+        t, n = 0.0, float(nbytes)
+        for a, g in fast:
+            t += self._ring(n, g, self.link(a), 1.0)   # reduce-scatter
+            n /= g
+            g_fast *= g
+        for a, g in slow:
+            t += self._ring(n, g, self.link(a), 2.0)   # allreduce shard
+        for a, g in reversed(fast):
+            n *= g
+            t += self._ring(n, g, self.link(a), 1.0)   # all-gather
+        return t
+
+    def _compressed_time(self, nbytes: float,
+                         groups: list[tuple[str, int]]) -> float | None:
+        """quantize → all-to-all int8 → local reduce → requantize →
+        all-gather int8 (repro.core.compression's two-phase scheme)."""
+        g = 1
+        for _, s in groups:
+            g *= s
+        # the real reducer falls back to flat psum for small buffers
+        if nbytes < 4 * _COMP_BLOCK * g:
+            return None
+        wire = nbytes * _COMP_RATIO
+        t = sum(self._ring(wire, gg, self.link(a), 1.0) for a, gg in groups)
+        t += sum(self._ring(wire, gg, self.link(a), 1.0)
+                 for a, gg in groups)   # all-gather phase, same volume
+        t += 3.0 * nbytes / self.quantize_bw   # 2×quantize + 1×dequant
+        return t
+
+    def collective_time(self, kind: str, nbytes: float,
+                        axes: tuple[str, ...],
+                        mesh_shape: Mapping[str, int], *,
+                        reducer: str = "flat") -> float:
+        """Dispatch on the CommSchedule op kind (schedule.py constants)."""
+        if kind == "allreduce":
+            return self.allreduce_time(nbytes, axes, mesh_shape,
+                                       reducer=reducer)
+        if kind == "reduce_scatter":
+            return self.reduce_scatter_time(nbytes, axes, mesh_shape)
+        if kind == "all_gather":
+            return self.all_gather_time(nbytes, axes, mesh_shape)
+        raise ValueError(f"unknown collective kind {kind!r}")
+
+
+def default_network() -> NetworkModel:
+    """The standard topology: "pod" rides DCN, every other axis ICI."""
+    return NetworkModel()

@@ -196,4 +196,43 @@ for (n, a), (_, b) in zip(named_leaves(p_ref), named_leaves(p_f)):
 check("fsdp-onestep-loss", abs(l_ref - l_f) < 3e-4)
 check("fsdp-onestep-params", worst < 5e-4)
 
+# 6. hierarchical ≡ flat over REAL process groups: the 3-stage
+#    RS(data)→AR(pod)→AG(data) path needs a pod axis, so re-mesh the 8
+#    fake devices as 2×2×2 (pod, data, model) and compare both reducers
+#    on rank-varying data (every rank contributes a different value).
+from repro.core.buckets import Bucket, LeafInfo
+from repro.core.strategies import make_reducer
+
+mesh_pod = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+pod_shape = {"pod": 2, "data": 2, "model": 2}
+N = 1024
+base = jax.random.normal(jax.random.PRNGKey(7), (N,), jnp.float32)
+bucket_pd = Bucket(
+    leaves=(LeafInfo(name="x", index=0, shape=(N,), dtype=jnp.float32,
+                     size=N),),
+    reduce_axes=("pod", "data"), channel=0, bucket_id=0)
+
+
+def _reduce_with(reducer_name):
+    red = make_reducer(reducer_name, pod_shape, mean_axes=("pod", "data"))
+
+    def body(x):
+        rank = (jax.lax.axis_index("pod") * 2
+                + jax.lax.axis_index("data")).astype(jnp.float32)
+        return red(x * (1.0 + rank), bucket_pd)
+
+    return jax.jit(lambda x: jax.shard_map(
+        body, mesh=mesh_pod, in_specs=(P(),), out_specs=P(),
+        check_vma=False)(x))(base)
+
+
+flat_out = np.asarray(_reduce_with("flat"))
+hier_out = np.asarray(_reduce_with("hierarchical"))
+# mean over 4 DP ranks of (1+rank)·x = 2.5·x / ... both paths must agree
+check("hier-matches-analytic",
+      float(np.max(np.abs(flat_out - np.asarray(base) * 2.5))) < 1e-5)
+check("hier-equals-flat-podmesh",
+      float(np.max(np.abs(flat_out - hier_out))) < 1e-5)
+
 print("DONE", flush=True)
