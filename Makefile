@@ -1,7 +1,7 @@
 # Convenience targets; `make test` is the tier-1 gate (ROADMAP.md).
 PY ?= python
 
-.PHONY: test test-dev bench schedule dryrun sim-smoke
+.PHONY: test test-dev bench bench-smoke schedule dryrun sim-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -13,6 +13,11 @@ test-dev:
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
+
+# minutes-long CPU staging/collective microbenchmark → BENCH_pack.json
+# (fused-vs-leafwise CopyFromTo + ring-vs-psum rows; CI artifact)
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --sections pack
 
 schedule:
 	PYTHONPATH=src $(PY) -m benchmarks.schedule_analysis

@@ -139,6 +139,145 @@ def bench_kernels(emit):
     emit("kernel_rwkv6_chunk_interp", us, f"C{C}_N{N}")
 
 
+def bench_pack(emit):
+    """§8 staging/collective microbenchmark → BENCH_pack.json.
+
+    fused-vs-leafwise CopyFromTo staging through the REAL emitter
+    (GradSync inside shard_map) on the resnet50 bucket plan — wall time
+    AND post-optimization HLO copy/fusion-class op counts — plus
+    measured ring-vs-psum allreduce rows from an 8-fake-device
+    subprocess and the simulator's predicted staging delta.
+    """
+    import re
+    import subprocess
+    import sys
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_arch
+    from repro.configs.base import param_structs
+    from repro.core import GradSync, GradSyncConfig
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models.registry import family_of
+
+    arch = get_arch("resnet50-cifar")
+    cfg = arch.make_config(tp=1, dp_axes=("data",))
+    mesh = make_smoke_mesh(1, 1)
+    params_sds = param_structs(cfg)
+    pspecs = family_of(cfg).param_rules(cfg).tree_specs(params_sds)
+    grads = jax.tree.map(
+        lambda l: jax.random.normal(jax.random.PRNGKey(0), l.shape,
+                                    jnp.float32), params_sds)
+    gspecs = jax.tree.map(lambda _: P(), grads)
+    n_leaves = len(jax.tree.leaves(grads))
+
+    def _best(fn, reps=8, trials=3):
+        """best-of-trials mean: the wall rows must survive a noisy CI
+        host (the deterministic emitted-op counts are the stable
+        metric; this keeps the time metric honest too)."""
+        import time as _time
+
+        fn()   # warmup/compile
+        best = float("inf")
+        for _ in range(trials):
+            t0 = _time.perf_counter()
+            for _ in range(reps):
+                r = fn()
+            jax.block_until_ready(r)
+            best = min(best, (_time.perf_counter() - t0) / reps)
+        return best * 1e6
+
+    copy_re = re.compile(
+        r"= [a-z0-9\[\],{} ]*\b(fusion|copy|concatenate"
+        r"|dynamic-update-slice)\(")
+    results = {}
+    for mode, fused in (("leafwise", False), ("fused", True)):
+        sync = GradSyncConfig(strategy="concom", bucket_bytes=4 << 20,
+                              comm_dtype=jnp.bfloat16,
+                              use_fused_staging=fused)
+
+        def run(g, _sync=sync):
+            gs = GradSync(_sync, mesh, pspecs, jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), g))
+            return gs(g)
+
+        f = jax.jit(lambda g, _r=run: jax.shard_map(
+            _r, mesh=mesh, in_specs=(gspecs,), out_specs=gspecs,
+            check_vma=False)(g))
+        n_ops = len(copy_re.findall(f.lower(grads).compile().as_text()))
+        us = _best(lambda _f=f: _f(grads))
+        results[mode] = (us, n_ops)
+        emit(f"staging_{mode}_resnet50", us,
+             f"{n_leaves}leaves_bf16wire_hlo{n_ops}",
+             staging=mode, hlo_copy_fusion_ops=n_ops)
+    lw_us, lw_ops = results["leafwise"]
+    fu_us, fu_ops = results["fused"]
+    emit("staging_fused_speedup_resnet50", 0,
+         f"wall{lw_us / fu_us:.2f}x_hloops{lw_ops / max(fu_ops, 1):.2f}x",
+         wall_speedup=round(lw_us / fu_us, 3),
+         hlo_op_ratio=round(lw_ops / max(fu_ops, 1), 3))
+
+    # pack-side emission counts (lowered, pre-fusion): how many copy-class
+    # staging ops each path ASKS the compiler for — per-leaf cast+concat
+    # vs one concat + one whole-buffer cast per bucket.  (Post-fusion CPU
+    # HLO merges both; on TPU the fused path is one Mosaic call/bucket.)
+    from repro.core.buckets import make_bucket_plan, pack
+    from repro.kernels.collectives.ops import fused_pack
+
+    plan = make_bucket_plan(params_sds, pspecs, mesh,
+                            bucket_bytes=4 << 20, comm_dtype=jnp.bfloat16)
+    flat = jax.tree.leaves(grads)
+    emit_re = re.compile(r"stablehlo\.(convert|concatenate|copy)")
+
+    def pack_all_leafwise(g):
+        return [pack(b, g, jnp.bfloat16) for b in plan.buckets]
+
+    def pack_all_fused(g):
+        return [fused_pack(b, g, jnp.bfloat16) for b in plan.buckets]
+
+    for mode, fn in (("leafwise", pack_all_leafwise),
+                     ("fused", pack_all_fused)):
+        n_ops = len(emit_re.findall(jax.jit(fn).lower(flat).as_text()))
+        jitted = jax.jit(fn)
+        us = _best(lambda _f=jitted: _f(flat))
+        emit(f"pack_only_{mode}_resnet50", us,
+             f"{len(plan.buckets)}buckets_emitted_copy_ops{n_ops}",
+             staging=mode, emitted_copy_ops=n_ops)
+
+    # simulator's view of the same choice (what `auto` sees)
+    from repro.sim import SimConfig, simulate_strategy
+
+    plan = make_bucket_plan(params_sds, pspecs, mesh,
+                            bucket_bytes=4 << 20, comm_dtype=jnp.bfloat16)
+    mesh16 = {"data": 16, "model": 16}
+    for mode, fused in (("leafwise", False), ("fused", True)):
+        _, tl = simulate_strategy(
+            "concom", plan, mesh16,
+            sim=SimConfig(itemsize=2, fused_staging=fused))
+        emit(f"staging_sim_{mode}_resnet50", tl.step_time * 1e6,
+             "simulated_16x16", staging=mode,
+             simulated_comm_us=tl.total_comm * 1e6)
+
+    # measured ring-vs-psum allreduce (8 fake devices, subprocess)
+    worker = os.path.join(os.path.dirname(__file__), "ring_bench_worker.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    proc = subprocess.run([sys.executable, worker], env=env,
+                          capture_output=True, text=True, timeout=600)
+    if proc.returncode != 0:
+        emit("ring_vs_psum_failed", 0, proc.stderr[-120:].replace(",", ";"))
+        return
+    for line in proc.stdout.splitlines():
+        if "," not in line:
+            continue
+        name, us = line.rsplit(",", 1)
+        emit(f"ring_{name}_8dev", float(us), "8_fake_devices")
+
+
 def bench_roofline_summary(emit):
     path = "results/dryrun.json"
     if not os.path.exists(path):
@@ -161,7 +300,28 @@ def bench_roofline_summary(emit):
              f"{worst['arch']}_{worst['shape']}")
 
 
-def main() -> None:
+SECTIONS = {
+    "paper_figures": bench_paper_figures,
+    "strategy_step": bench_strategy_steps,
+    "kernels": bench_kernels,
+    "pack": bench_pack,
+    "roofline": bench_roofline_summary,
+}
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sections", default="",
+                    help="comma-separated subset of "
+                         f"{','.join(SECTIONS)} (default: all)")
+    args = ap.parse_args(argv)
+    wanted = [s for s in args.sections.split(",") if s] or list(SECTIONS)
+    unknown = set(wanted) - set(SECTIONS)
+    if unknown:
+        raise SystemExit(f"unknown sections: {sorted(unknown)}")
+
     print("name,us_per_call,derived")
     sections: dict[str, list] = {}
 
@@ -175,10 +335,8 @@ def main() -> None:
 
         return emit
 
-    bench_paper_figures(make_emit("paper_figures"))
-    bench_strategy_steps(make_emit("strategy_step"))
-    bench_kernels(make_emit("kernels"))
-    bench_roofline_summary(make_emit("roofline"))
+    for name in wanted:
+        SECTIONS[name](make_emit(name))
 
     for section, rows in sections.items():
         path = f"BENCH_{section}.json"

@@ -70,6 +70,40 @@ class BucketPlan:
         return out
 
 
+# plans are pure functions of shapes/specs/mesh-topology + knobs, and
+# launchers/benchmarks/sim rebuild identical plans every call — memoize.
+# FIFO-bounded so long sweeps (grid_search over bucket sizes) can't grow
+# the cache without bound.
+_PLAN_CACHE: dict[tuple, BucketPlan] = {}
+_PLAN_CACHE_MAX = 256
+
+
+def clear_bucket_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+def _plan_cache_key(grads_like, param_specs, mesh, bucket_bytes,
+                    num_channels, comm_dtype, reverse, exclude_axes):
+    """Everything the plan depends on: leaf shapes/dtypes + tree
+    structure, the param specs, the mesh topology, and the knobs.
+    Returns None (uncacheable) for leaves without shape/dtype."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads_like)
+    sig = []
+    for leaf in leaves:
+        if not (hasattr(leaf, "shape") and hasattr(leaf, "dtype")):
+            return None
+        # .name, not .str: custom ml_dtypes (float8 variants, bfloat16)
+        # all stringify to '<V1'/'<V2' under .str and would collide
+        sig.append((tuple(leaf.shape), np.dtype(leaf.dtype).name))
+    spec_leaves = tuple(jax.tree_util.tree_leaves(
+        param_specs, is_leaf=lambda x: x is None))
+    mesh_key = (tuple(mesh.axis_names), tuple(mesh.devices.shape)) \
+        if hasattr(mesh, "devices") else tuple(sorted(dict(mesh.shape).items()))
+    return (treedef, tuple(sig), spec_leaves, mesh_key, int(bucket_bytes),
+            int(num_channels), np.dtype(comm_dtype).name, bool(reverse),
+            tuple(exclude_axes))
+
+
 def make_bucket_plan(
     grads_like: Any,
     param_specs: Any,
@@ -97,7 +131,19 @@ def make_bucket_plan(
         because MXNET orders keys input→output, ready order is reversed).
       exclude_axes: mesh axes some other mechanism reduces (e.g. ZeRO-1's
         reduce-scatter covers the DP axes) — dropped from reduce sets.
+
+    Memoized on (treedef, leaf shapes/dtypes, specs, mesh topology,
+    bucket_bytes, num_channels, comm_dtype, reverse, exclude_axes):
+    repeated calls return the SAME BucketPlan object.
     """
+    key = _plan_cache_key(grads_like, param_specs, mesh, bucket_bytes,
+                          num_channels, comm_dtype, reverse, exclude_axes)
+    if key is not None:
+        try:
+            return _PLAN_CACHE[key]
+        except (KeyError, TypeError):
+            pass
+
     named, treedef = flatten_with_names(grads_like)
     specs_named, _ = flatten_with_names(param_specs)
     itemsize = np.dtype(comm_dtype).itemsize
@@ -155,12 +201,20 @@ def make_bucket_plan(
             buckets.append(Bucket(tuple(cur), axes, bid % num_channels, bid))
             bid += 1
 
-    return BucketPlan(
+    plan = BucketPlan(
         buckets=tuple(buckets),
         treedef=treedef,
         num_leaves=len(named),
         comm_dtype=comm_dtype,
     )
+    if key is not None:
+        try:
+            if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+                _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+            _PLAN_CACHE[key] = plan
+        except TypeError:   # unhashable spec leaf — just don't cache
+            pass
+    return plan
 
 
 def pack(bucket: Bucket, flat_leaves: Sequence[jax.Array], comm_dtype) -> jax.Array:
@@ -174,9 +228,15 @@ def pack(bucket: Bucket, flat_leaves: Sequence[jax.Array], comm_dtype) -> jax.Ar
 def unpack(
     bucket: Bucket, buf: jax.Array, flat_out: list[jax.Array | None]
 ) -> None:
-    """CopyFromTo(recv_buf, g): split the reduced buffer back into leaves."""
+    """CopyFromTo(recv_buf, g): split the reduced buffer back into leaves.
+
+    Offsets are compile-time constants, so these are static ``lax.slice``
+    ops (dynamic slices block XLA fusion of the cast-back into the
+    consumer).  This is the ref path of the fused unpack kernel
+    (``repro.kernels.collectives``).
+    """
     off = 0
     for l in bucket.leaves:
-        piece = jax.lax.dynamic_slice_in_dim(buf, off, l.size, 0)
+        piece = jax.lax.slice(buf, (off,), (off + l.size,))
         flat_out[l.index] = piece.reshape(l.shape).astype(l.dtype)
         off += l.size

@@ -49,7 +49,7 @@ def dequantize_blockwise(q: jax.Array, scale: jax.Array) -> jax.Array:
 
 def compressed_allreduce(
     buf: jax.Array, axes: tuple[str, ...], *, group_size: int,
-    inter_axes: tuple[str, ...] = ()
+    inter_axes: tuple[str, ...] = (), use_ring: bool = False
 ) -> jax.Array:
     """Quantized allreduce over ``axes`` (total group size ``group_size``).
 
@@ -57,6 +57,10 @@ def compressed_allreduce(
       quantize → all-to-all int8 shards → local dequant+reduce →
       requantize shard → all-gather int8 → dequant.
     Falls back to fp psum when the buffer is too small to shard.
+
+    ``use_ring`` routes the phase-3 int8 gather (the bulk wire bytes)
+    through the chunked ring all-gather in ``repro.kernels.collectives``
+    (single-axis groups; multi-axis groups keep ``lax.all_gather``).
     """
     n = buf.shape[0]
     axis = axes if len(axes) > 1 else axes[0]
@@ -83,8 +87,15 @@ def compressed_allreduce(
         red = jax.lax.psum(red, inter_axes)
     # phase 3: requantize the reduced shard, all-gather
     q2, s2 = quantize_blockwise(red)
-    q_all = _all_gather_grouped(q2, axes)          # (m,) int8
-    s_all = _all_gather_grouped(s2, axes)
+    if use_ring and len(axes) == 1:
+        from repro.kernels.collectives.ops import ring_all_gather
+
+        ring_shape = {axes[0]: group_size}
+        q_all = ring_all_gather(q2, axes, ring_shape)   # (m,) int8
+        s_all = ring_all_gather(s2, axes, ring_shape)
+    else:
+        q_all = _all_gather_grouped(q2, axes)          # (m,) int8
+        s_all = _all_gather_grouped(s2, axes)
     out = dequantize_blockwise(q_all, s_all)
     return out[:n] if pad else out
 

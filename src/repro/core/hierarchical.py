@@ -17,6 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.collectives.ops import ring_all_gather, ring_reduce_scatter
+
 
 def hierarchical_allreduce(
     buf: jax.Array,
@@ -24,18 +26,34 @@ def hierarchical_allreduce(
     intra_axis: str = "data",
     inter_axis: str = "pod",
     intra_size: int,
+    use_ring: bool = False,
 ) -> jax.Array:
-    """3-stage allreduce of a 1-D comm buffer over (inter_axis, intra_axis)."""
+    """3-stage allreduce of a 1-D comm buffer over (inter_axis, intra_axis).
+
+    ``use_ring`` routes the fast-tier bulk bytes (stages 1 and 3) through
+    the chunked bidirectional ring kernels in
+    ``repro.kernels.collectives`` instead of the opaque
+    ``psum_scatter``/``all_gather``; the small inter-pod shard stays a
+    plain psum.
+    """
     n = buf.shape[0]
     pad = (-n) % intra_size
     if pad:
         buf = jnp.pad(buf, (0, pad))
+    mesh_shape = {intra_axis: intra_size}
     # (1) intra-pod reduce-scatter: each device owns 1/intra_size of the sum
-    shard = jax.lax.psum_scatter(buf, intra_axis, scatter_dimension=0, tiled=True)
+    if use_ring:
+        shard = ring_reduce_scatter(buf, (intra_axis,), mesh_shape)
+    else:
+        shard = jax.lax.psum_scatter(
+            buf, intra_axis, scatter_dimension=0, tiled=True)
     # (2) inter-pod allreduce of the shard only (1/intra_size of the bytes on DCN)
     shard = jax.lax.psum(shard, inter_axis)
     # (3) intra-pod all-gather to rebuild the full reduced buffer
-    full = jax.lax.all_gather(shard, intra_axis, axis=0, tiled=True)
+    if use_ring:
+        full = ring_all_gather(shard, (intra_axis,), mesh_shape)
+    else:
+        full = jax.lax.all_gather(shard, intra_axis, axis=0, tiled=True)
     return full[:n] if pad else full
 
 

@@ -49,6 +49,8 @@ class GradSyncConfig:
     comm_dtype: Any = jnp.float32
     mean_axes: tuple[str, ...] = ()  # axes whose psum becomes a mean
     exclude_axes: tuple[str, ...] = ()  # reduced elsewhere (ZeRO-1 RS)
+    use_fused_staging: bool = True   # fused pack/unpack kernels (§8)
+    loss_scale: float = 1.0          # folded into pack; unpack divides
 
 
 class GradSync:
@@ -65,12 +67,14 @@ class GradSync:
     ):
         self.cfg = cfg
         self.info: StrategyInfo = get_strategy(cfg.strategy)  # fail fast
-        if self.info.two_phase and cfg.reducer != "flat":
+        if self.info.two_phase and cfg.reducer not in ("flat", "ring"):
+            # "flat" → psum_scatter/all_gather; "ring" → the chunked ring
+            # kernels carry the RS/AG ops themselves (DESIGN.md §8)
             raise ValueError(
                 f"strategy {cfg.strategy!r} emits raw reduce-scatter/"
                 f"all-gather ops and would silently ignore "
-                f"reducer={cfg.reducer!r}; use reducer='flat' or a "
-                f"non-two-phase strategy")
+                f"reducer={cfg.reducer!r}; use reducer='flat'/'ring' or "
+                f"a non-two-phase strategy")
         self.mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape)) \
             if hasattr(mesh, "devices") else dict(mesh.shape)
         self.plan: BucketPlan = make_bucket_plan(
@@ -96,6 +100,7 @@ class GradSync:
                 "mesh_shape": self.mesh_shape,
                 "reducer": cfg.reducer,
                 "itemsize": np.dtype(cfg.comm_dtype).itemsize,
+                "fused_staging": cfg.use_fused_staging,
             }
         # the strategy's dependency structure, planned once, inspectable
         self.schedule: CommSchedule = self.info.plan(
@@ -109,6 +114,11 @@ class GradSync:
             reducer=self.reducer,
             mesh_shape=self.mesh_shape,
             mean_axes=self.cfg.mean_axes,
+            use_fused_staging=self.cfg.use_fused_staging,
+            loss_scale=self.cfg.loss_scale,
+            two_phase_impl="ring" if (self.info.two_phase
+                                      and self.cfg.reducer == "ring")
+            else "psum",
         )
 
 

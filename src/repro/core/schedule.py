@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import dependency as dep
 from repro.core.buckets import Bucket, BucketPlan, pack, unpack
+from repro.kernels.collectives import ops as coll_ops
 
 Reducer = Callable[[jax.Array, Bucket], jax.Array]
 
@@ -221,6 +222,9 @@ def execute(
     reducers: Mapping[str, Reducer] | None = None,
     mesh_shape: Mapping[str, int] | None = None,
     mean_axes: tuple[str, ...] = (),
+    use_fused_staging: bool = True,
+    loss_scale: float = 1.0,
+    two_phase_impl: str = "psum",
 ) -> Any:
     """Materialize a CommSchedule over a gradient pytree.
 
@@ -229,13 +233,55 @@ def execute(
     schedule contains reduce-scatter/all-gather ops (group sizes);
     ``mean_axes`` applies the data-parallel mean on that path (allreduce
     reducers carry their own scaling).
+
+    ``use_fused_staging`` stages each bucket through the fused pack /
+    unpack kernels (``repro.kernels.collectives``): one pass over HBM
+    with the comm-dtype cast and the optional ``loss_scale`` folded in,
+    instead of per-leaf ravel+cast+concatenate.  Buckets with non-float
+    dtypes fall back to the leafwise ref path automatically.
+
+    ``two_phase_impl`` selects the reduce-scatter/all-gather transport:
+    XLA's ``psum_scatter``/``all_gather`` ("psum") or the chunked
+    bidirectional ring collectives ("ring").
     """
+    if two_phase_impl not in ("psum", "ring"):
+        raise ValueError(f"unknown two_phase_impl {two_phase_impl!r}")
     flat_grads = jax.tree_util.tree_leaves(grads)
     assert len(flat_grads) == plan.num_leaves, (
         f"plan built for {plan.num_leaves} leaves, got {len(flat_grads)}")
     flat_out: list[jax.Array | None] = list(flat_grads)
     reducers = dict(reducers or {})
     by_id = {op.op_id: op for op in schedule.ops}
+
+    def fused_ok(bucket: Bucket) -> bool:
+        return use_fused_staging and coll_ops.staging_supported(
+            (l.dtype for l in bucket.leaves), plan.comm_dtype)
+
+    def stage_in(bucket: Bucket) -> jax.Array:
+        """CopyFromTo(g, comm_buf): pack + cast (+ loss-scale), fused."""
+        if fused_ok(bucket):
+            return coll_ops.fused_pack(
+                bucket, flat_grads, plan.comm_dtype, scale=loss_scale)
+        if loss_scale != 1.0:
+            # the ref impl scales in f32 BEFORE the comm-dtype cast —
+            # scaling after would defeat the underflow protection the
+            # loss scale exists for (and diverge from the fused path)
+            return coll_ops.fused_pack(
+                bucket, flat_grads, plan.comm_dtype, scale=loss_scale,
+                impl="leafwise")
+        return pack(bucket, flat_grads, plan.comm_dtype)
+
+    def stage_out(bucket: Bucket, buf: jax.Array) -> None:
+        """CopyFromTo(recv_buf, g): unscale + cast back + scatter, fused."""
+        inv = 1.0 / loss_scale
+        if fused_ok(bucket):
+            coll_ops.fused_unpack(bucket, buf, flat_out, scale=inv)
+            return
+        if loss_scale != 1.0:
+            coll_ops.fused_unpack(bucket, buf, flat_out, scale=inv,
+                                  impl="leafwise")
+            return
+        unpack(bucket, buf, flat_out)
 
     def group_of(bucket: Bucket) -> int:
         if mesh_shape is None:
@@ -258,14 +304,14 @@ def execute(
 
         if op.kind == ALLREDUCE:
             red = reducers.get(op.reducer, reducer) if op.reducer else reducer
-            send_buf = pack(bucket, flat_grads, plan.comm_dtype)
+            send_buf = stage_in(bucket)
             recv_buf, tokens[op.op_id] = emit_gated(
                 send_buf, token, lambda b, _r=red, _bk=bucket: _r(b, _bk))
-            unpack(bucket, recv_buf, flat_out)
+            stage_out(bucket, recv_buf)
 
         elif op.kind == REDUCE_SCATTER:
             group = group_of(bucket)
-            send_buf = pack(bucket, flat_grads, plan.comm_dtype)
+            send_buf = stage_in(bucket)
             n = send_buf.shape[0]
             if (-n) % group:
                 send_buf = jnp.pad(send_buf, (0, (-n) % group))
@@ -273,6 +319,9 @@ def execute(
             def rs(b, _bk=bucket, _g=group):
                 if _g == 1:
                     return b
+                if two_phase_impl == "ring":
+                    return coll_ops.ring_reduce_scatter(
+                        b, _bk.reduce_axes, mesh_shape)
                 return jax.lax.psum_scatter(
                     b, _bk.reduce_axes, scatter_dimension=0, tiled=True)
 
@@ -294,6 +343,9 @@ def execute(
             def ag(b, _bk=bucket, _g=group):
                 if _g == 1:
                     return b
+                if two_phase_impl == "ring":
+                    return coll_ops.ring_all_gather(
+                        b, _bk.reduce_axes, mesh_shape)
                 return jax.lax.all_gather(
                     b, _bk.reduce_axes, axis=0, tiled=True)
 
@@ -303,7 +355,7 @@ def execute(
             s = scale_of(bucket)
             if s != 1.0:
                 full = full * s
-            unpack(bucket, full, flat_out)
+            stage_out(bucket, full)
 
         else:
             raise ValueError(f"unknown op kind {op.kind!r}")

@@ -39,6 +39,13 @@ Reducers (selected via ``reducer=``):
   hierarchical  — 3-stage RS→pod-AR→AG (DESIGN.md §3: TPU analogue of the
                   paper's intra-node/inter-node/broadcast split).
   compressed    — int8 block-quantized wire format (~4x fewer bytes).
+  ring          — chunked bidirectional ring RS→AG owned at the kernel
+                  level (``repro.kernels.collectives``, DESIGN.md §8)
+                  instead of the opaque ``lax.psum``; with two-phase
+                  strategies (rsag) the rings carry the RS/AG ops
+                  themselves.
+  hierarchical_ring / compressed_ring — the same reducers with their
+                  bulk-byte stages routed through the ring kernels.
 """
 from __future__ import annotations
 
@@ -50,6 +57,7 @@ from repro.core import registry
 from repro.core.buckets import Bucket, BucketPlan
 from repro.core.compression import compressed_allreduce
 from repro.core.hierarchical import flat_allreduce, hierarchical_allreduce
+from repro.kernels.collectives import ops as coll_ops
 from repro.core.registry import (
     get_strategy,
     register_reducer,
@@ -90,11 +98,9 @@ def _flat_factory(mesh_shape: dict[str, int], *,
     return reduce_flat
 
 
-@register_reducer("hierarchical")
-def _hier_factory(mesh_shape: dict[str, int], *,
-                  mean_axes: tuple[str, ...] = ()) -> Reducer:
-    """3-stage RS(data) → AR(pod) → AG(data) when both axes are present."""
-
+def _hier_impl(mesh_shape: dict[str, int], *,
+               mean_axes: tuple[str, ...] = (),
+               use_ring: bool = False) -> Reducer:
     def reduce_hier(buf: jax.Array, bucket: Bucket) -> jax.Array:
         axes = bucket.reduce_axes
         if "pod" in axes and "data" in axes:
@@ -103,6 +109,7 @@ def _hier_factory(mesh_shape: dict[str, int], *,
                 intra_axis="data",
                 inter_axis="pod",
                 intra_size=mesh_shape["data"],
+                use_ring=use_ring,
             )
             rest = tuple(a for a in axes if a not in ("pod", "data"))
             if rest:
@@ -115,23 +122,65 @@ def _hier_factory(mesh_shape: dict[str, int], *,
     return reduce_hier
 
 
-@register_reducer("compressed")
-def _comp_factory(mesh_shape: dict[str, int], *,
+@register_reducer("hierarchical")
+def _hier_factory(mesh_shape: dict[str, int], *,
                   mean_axes: tuple[str, ...] = ()) -> Reducer:
-    """int8 block-quantized wire format for large buffers."""
+    """3-stage RS(data) → AR(pod) → AG(data) when both axes are present."""
+    return _hier_impl(mesh_shape, mean_axes=mean_axes)
 
+
+@register_reducer("hierarchical_ring")
+def _hier_ring_factory(mesh_shape: dict[str, int], *,
+                       mean_axes: tuple[str, ...] = ()) -> Reducer:
+    """hierarchical with the fast-tier bulk bytes (stages 1 and 3) on the
+    chunked ring kernels instead of psum_scatter/all_gather (§8)."""
+    return _hier_impl(mesh_shape, mean_axes=mean_axes, use_ring=True)
+
+
+def _comp_impl(mesh_shape: dict[str, int], *,
+               mean_axes: tuple[str, ...] = (),
+               use_ring: bool = False) -> Reducer:
     def reduce_comp(buf: jax.Array, bucket: Bucket) -> jax.Array:
         group = group_size(bucket.reduce_axes, mesh_shape)
         if group == 1 or buf.shape[0] < 256 * group:
             out = flat_allreduce(buf, bucket.reduce_axes)
         else:
             out = compressed_allreduce(
-                buf, bucket.reduce_axes, group_size=group
+                buf, bucket.reduce_axes, group_size=group,
+                use_ring=use_ring,
             )
         s = _scale_of(bucket, mesh_shape, mean_axes)
         return out * s if s != 1.0 else out
 
     return reduce_comp
+
+
+@register_reducer("compressed")
+def _comp_factory(mesh_shape: dict[str, int], *,
+                  mean_axes: tuple[str, ...] = ()) -> Reducer:
+    """int8 block-quantized wire format for large buffers."""
+    return _comp_impl(mesh_shape, mean_axes=mean_axes)
+
+
+@register_reducer("compressed_ring")
+def _comp_ring_factory(mesh_shape: dict[str, int], *,
+                       mean_axes: tuple[str, ...] = ()) -> Reducer:
+    """compressed with the int8 gather phase on the ring all-gather (§8;
+    single-axis groups — multi-axis groups keep lax.all_gather)."""
+    return _comp_impl(mesh_shape, mean_axes=mean_axes, use_ring=True)
+
+
+@register_reducer("ring")
+def _ring_factory(mesh_shape: dict[str, int], *,
+                  mean_axes: tuple[str, ...] = ()) -> Reducer:
+    """Chunked bidirectional ring allreduce (kernel-owned RS→AG path)."""
+
+    def reduce_ring(buf: jax.Array, bucket: Bucket) -> jax.Array:
+        out = coll_ops.ring_allreduce(buf, bucket.reduce_axes, mesh_shape)
+        s = _scale_of(bucket, mesh_shape, mean_axes)
+        return out * s if s != 1.0 else out
+
+    return reduce_ring
 
 
 def make_reducer(

@@ -1,0 +1,18 @@
+"""Fused comm-staging + ring collective kernels (DESIGN.md §8)."""
+from repro.kernels.collectives.ops import (
+    fused_pack,
+    fused_unpack,
+    ring_all_gather,
+    ring_allreduce,
+    ring_reduce_scatter,
+    staging_supported,
+)
+
+__all__ = [
+    "fused_pack",
+    "fused_unpack",
+    "ring_all_gather",
+    "ring_allreduce",
+    "ring_reduce_scatter",
+    "staging_supported",
+]

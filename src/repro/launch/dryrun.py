@@ -119,9 +119,11 @@ def _lower_for(arch, cfg, shape, mesh, sync, api, rules, step_kw=None):
         else:
             batch_sds = train_input_specs(arch, cfg, shape)
             opt = adamw(3e-4)
+        # donate=True matches production: the AOT memory_analysis then
+        # reports the aliased (in-place params/opt_state) footprint
         ts = make_train_step(cfg, mesh, sync, opt,
                              batch_like=batch_sds, params_like=params_sds,
-                             donate=False, **step_kw)
+                             donate=True, **step_kw)
         opt_sds = jax.eval_shape(opt.init, params_sds)
         args = (params_sds, opt_sds, batch_sds,
                 jax.ShapeDtypeStruct((), jnp.int32))

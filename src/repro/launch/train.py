@@ -92,10 +92,14 @@ def main():
         num_channels=args.channels,
         exclude_axes=dp_axes_of(mesh) if args.zero1 else ())
     params = api.init(jax.random.PRNGKey(0), cfg)
+    # donate params/opt_state on the production path: the optimizer
+    # update reuses their buffers in place (halves peak state memory).
+    # Smoke runs keep donation off so the host copies stay comparable.
     ts = make_train_step(cfg, mesh, sync, opt,
                          batch_like=pipe.batch_at(0), params_like=params,
                          zero1_mode=args.zero1,
-                         microbatch=args.microbatch)
+                         microbatch=args.microbatch,
+                         donate=not args.smoke)
     ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) \
         if args.ckpt_dir else None
     trainer = Trainer(ts, pipe, ckpt, log_every=10)

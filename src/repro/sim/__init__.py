@@ -26,6 +26,7 @@ from repro.sim.autotune import (
 from repro.sim.compute import (
     ComputeModel,
     HardwareModel,
+    StagingModel,
     compute_model_for,
     count_params,
     fwd_flops,
@@ -49,6 +50,7 @@ __all__ = [
     "OpEvent",
     "Prediction",
     "SimConfig",
+    "StagingModel",
     "Timeline",
     "ascii_timeline",
     "chrome_trace",

@@ -65,6 +65,10 @@ def main():
     ap.add_argument("--reducer", default="flat")
     ap.add_argument("--comm-dtype", default="f32", choices=["f32", "bf16"])
     ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--staging", default="fused",
+                    choices=["fused", "leafwise"],
+                    help="CopyFromTo cost model: fused kernels vs "
+                         "per-leaf pack/unpack")
     ap.add_argument("--autotune", action="store_true",
                     help="grid-search strategy × channels × bucket size")
     ap.add_argument("--trace", default="",
@@ -96,7 +100,8 @@ def main():
     itemsize = 2 if args.comm_dtype == "bf16" else 4
     comm_dtype = jnp.bfloat16 if args.comm_dtype == "bf16" else jnp.float32
     sim = SimConfig(window=args.window, itemsize=itemsize,
-                    reducer=args.reducer)
+                    reducer=args.reducer,
+                    fused_staging=args.staging == "fused")
     plan = make_bucket_plan(
         params_sds, pspecs, mesh,
         bucket_bytes=int(args.bucket_mb * 1024 * 1024),
@@ -122,12 +127,26 @@ def main():
 
     auto_schedule = plan_auto(plan, context={
         "mesh_shape": mesh_shape, "reducer": args.reducer,
-        "itemsize": itemsize, "compute": compute})
+        "itemsize": itemsize, "compute": compute,
+        "fused_staging": args.staging == "fused"})
     report = last_auto_report()
     auto_tl = simulate(auto_schedule, mesh_shape, compute=compute, sim=sim)
     timelines["auto"] = auto_tl
     print(f"[sim] auto → {report['winner']} "
           f"(predicted {report['ranking'][0][1] * 1e3:.3f} ms/step)")
+
+    # fused vs leafwise CopyFromTo on the winner's schedule — the §8
+    # staging cost the fused kernels remove (import dataclasses locally
+    # to keep the CLI's import cost down)
+    import dataclasses as _dc
+    both = {
+        mode: simulate(auto_schedule, mesh_shape, compute=compute,
+                       sim=_dc.replace(sim, fused_staging=mode == "fused"))
+        for mode in ("fused", "leafwise")}
+    print(f"[sim] staging ({report['winner']}): "
+          f"fused {both['fused'].step_time * 1e3:.3f} ms/step vs "
+          f"leafwise {both['leafwise'].step_time * 1e3:.3f} ms/step "
+          f"(Δ {(both['leafwise'].step_time - both['fused'].step_time) * 1e6:.1f} us)")
 
     if args.ascii:
         best = report["winner"]

@@ -135,7 +135,8 @@ def plan_auto(
     mesh_shape = ctx.get("mesh_shape") or {
         a: 8 for b in plan.buckets for a in b.reduce_axes}
     reducer = ctx.get("reducer", "flat")
-    sim = SimConfig(itemsize=int(ctx.get("itemsize", 4)), reducer=reducer)
+    sim = SimConfig(itemsize=int(ctx.get("itemsize", 4)), reducer=reducer,
+                    fused_staging=bool(ctx.get("fused_staging", True)))
     # in-scan psums are keyed on the CONFIGURED strategy, so a delegated
     # depcha runs as plain chains — rank it with the semantics the
     # delegated execution can actually realize (in-scan only counts when

@@ -39,6 +39,35 @@ class HardwareModel:
 
 
 @dataclasses.dataclass(frozen=True)
+class StagingModel:
+    """HBM cost of CopyFromTo staging (pack/unpack around a collective).
+
+    Staging is compute-side work — a local HBM pass per direction — not
+    network time, so it lives here next to the FLOP model.  Two modes
+    (DESIGN.md §8):
+
+      fused     — ONE kernel per direction reads the leaves and writes
+                  the cast (+loss-scaled) comm buffer: ~2·nbytes of HBM
+                  traffic and a single launch.
+      leafwise  — per-leaf ravel+cast then concatenate (and per-leaf
+                  slice+cast back): two passes over the payload
+                  (~4·nbytes) plus one copy op PER LEAF.
+    """
+
+    hbm_bw: float = 819e9        # bytes/s (same v5e source as quantize_bw)
+    leaf_overhead: float = 0.5e-6  # per copy-op dispatch/launch cost
+    fused_passes: float = 2.0      # read + write, once
+    leafwise_passes: float = 4.0   # cast pass + concatenate pass
+
+    def stage_time(self, nbytes: float, num_leaves: int, *,
+                   fused: bool) -> float:
+        """One direction (pack OR unpack) of one bucket's staging."""
+        passes = self.fused_passes if fused else self.leafwise_passes
+        ops = 1 if fused else max(int(num_leaves), 1)
+        return passes * nbytes / self.hbm_bw + ops * self.leaf_overhead
+
+
+@dataclasses.dataclass(frozen=True)
 class ComputeModel:
     """Step-level compute durations + bucket release-time policy."""
 

@@ -38,6 +38,7 @@ class SimConfig:
     reducer: str = "flat"        # default reducer for untagged ops
     drop_chain_deps: bool = False    # in-scan: no cross-bucket chains
     per_stage_release: bool = False  # in-scan: release at scan-step ends
+    fused_staging: bool = True       # CopyFromTo: fused kernels vs leafwise
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,10 +139,14 @@ def simulate(
                      and by_id[d].bucket.bucket_id == op.bucket.bucket_id)
 
     def duration(op) -> float:
+        # wire time + the op's share of CopyFromTo staging (pack/unpack;
+        # fused vs leafwise is a GradSyncConfig knob the tuner must see)
         nbytes = op.bucket.size * sim.itemsize
         return net.collective_time(
             op.kind, nbytes, op.bucket.reduce_axes, mesh_shape,
-            reducer=op.reducer or sim.reducer)
+            reducer=op.reducer or sim.reducer) + net.staging_time(
+            op.kind, nbytes, len(op.bucket.leaves),
+            fused=sim.fused_staging)
 
     pending = {op.op_id: len(deps_of(op)) for op in schedule.ops}
     children: dict[int, list[int]] = {}

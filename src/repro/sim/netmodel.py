@@ -26,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping
 
+from repro.sim.compute import StagingModel
+
 # compression wire format (mirrors repro.core.compression)
 _COMP_BLOCK = 256          # elements per scale block
 _COMP_RATIO = 0.25 + 4.0 / (4 * _COMP_BLOCK)   # int8 + f32 scale per block
@@ -53,6 +55,7 @@ class NetworkModel:
     links: tuple[tuple[str, LinkModel], ...] = (("pod", DCN),)
     default_link: LinkModel = ICI
     quantize_bw: float = 819e9   # bytes/s; HBM-bound quantize/dequant pass
+    staging: StagingModel = StagingModel()   # CopyFromTo pack/unpack cost
 
     def link(self, axis: str) -> LinkModel:
         for name, lk in self.links:
@@ -83,11 +86,14 @@ class NetworkModel:
         groups = self._axis_groups(axes, mesh_shape)
         if not groups:
             return 0.0
-        if reducer == "hierarchical":
+        # prefix match: the *_ring variants move the same wire bytes on
+        # the same tiers — kernel ownership changes who issues the DMAs,
+        # not the alpha-beta schedule (same rule as the "ring" reducer)
+        if reducer.startswith("hierarchical"):
             t = self._hierarchical_time(nbytes, groups)
             if t is not None:
                 return t
-        if reducer == "compressed":
+        if reducer.startswith("compressed"):
             t = self._compressed_time(nbytes, groups)
             if t is not None:
                 return t
@@ -159,7 +165,11 @@ class NetworkModel:
                         axes: tuple[str, ...],
                         mesh_shape: Mapping[str, int], *,
                         reducer: str = "flat") -> float:
-        """Dispatch on the CommSchedule op kind (schedule.py constants)."""
+        """Dispatch on the CommSchedule op kind (schedule.py constants).
+
+        The ``ring`` reducer costs as flat: the alpha-beta ring IS this
+        model's assumed algorithm — owning it at the kernel level changes
+        who issues the DMAs, not the wire schedule."""
         if kind == "allreduce":
             return self.allreduce_time(nbytes, axes, mesh_shape,
                                        reducer=reducer)
@@ -167,6 +177,18 @@ class NetworkModel:
             return self.reduce_scatter_time(nbytes, axes, mesh_shape)
         if kind == "all_gather":
             return self.all_gather_time(nbytes, axes, mesh_shape)
+        raise ValueError(f"unknown collective kind {kind!r}")
+
+    def staging_time(self, kind: str, nbytes: float, num_leaves: int, *,
+                     fused: bool = True) -> float:
+        """CopyFromTo cost around one CommSchedule op: allreduce pays
+        pack AND unpack; a reduce-scatter only packs, an all-gather only
+        unpacks (the RS/AG pair splits the round trip)."""
+        one = self.staging.stage_time(nbytes, num_leaves, fused=fused)
+        if kind == "allreduce":
+            return 2.0 * one
+        if kind in ("reduce_scatter", "all_gather"):
+            return one
         raise ValueError(f"unknown collective kind {kind!r}")
 
 

@@ -113,10 +113,12 @@ for strat in strategy_names():
                                    and tp > 1)),
                strategy=strat)
 
-# 2. hierarchical + compressed reducers on real groups
+# 2. hierarchical + compressed + ring reducers on real groups
 compare_tp("tp-equiv[hierarchical]", mk_dense, reducer="hierarchical")
 compare_tp("tp-equiv[compressed]", mk_dense, reducer="compressed",
            tol=5e-2, grad_tol=0.35)   # int8 wire: lossy by design
+compare_tp("tp-equiv[ring]", mk_dense, reducer="ring",
+           tol=3e-4, grad_tol=5e-3)   # ring hop order ≠ psum tree order
 
 # 3. cross-strategy equality on the multi-device mesh
 outs = {}
@@ -234,5 +236,112 @@ check("hier-matches-analytic",
       float(np.max(np.abs(flat_out - np.asarray(base) * 2.5))) < 1e-5)
 check("hier-equals-flat-podmesh",
       float(np.max(np.abs(flat_out - hier_out))) < 1e-5)
+
+ring_out = np.asarray(_reduce_with("ring"))
+check("ring-equals-flat-podmesh",
+      float(np.max(np.abs(flat_out - ring_out))) < 1e-5)
+hier_ring_out = np.asarray(_reduce_with("hierarchical_ring"))
+check("hier-ring-reducer-equals-flat-podmesh",
+      float(np.max(np.abs(flat_out - hier_ring_out))) < 1e-5)
+
+# 7. ring collectives ≡ psum_scatter / all_gather over a REAL 8-way ring
+#    (rank-varying data; device r must own chunk r after RS, and the
+#    bidirectional double-buffered variant must match the plain ring)
+from repro.kernels.collectives.ops import (
+    ring_all_gather,
+    ring_allreduce,
+    ring_reduce_scatter,
+)
+
+mesh_ring = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+ring_shape = {"data": 8}
+M = 8 * 192
+base_r = jax.random.normal(jax.random.PRNGKey(11), (M,), jnp.float32)
+
+
+def _ring_vs_psum(bidirectional):
+    def body(x):
+        rank = jax.lax.axis_index("data").astype(jnp.float32)
+        local = x * (1.0 + rank)
+        rs_ring = ring_reduce_scatter(local, ("data",), ring_shape,
+                                      bidirectional=bidirectional)
+        rs_ref = jax.lax.psum_scatter(local, "data",
+                                      scatter_dimension=0, tiled=True)
+        ag_ring = ring_all_gather(rs_ref, ("data",), ring_shape,
+                                  bidirectional=bidirectional)
+        ag_ref = jax.lax.all_gather(rs_ref, "data", axis=0, tiled=True)
+        ar_ring = ring_allreduce(local, ("data",), ring_shape,
+                                 bidirectional=bidirectional)
+        ar_ref = jax.lax.psum(local, ("data",))
+        return rs_ring, rs_ref, ag_ring, ag_ref, ar_ring, ar_ref
+
+    # per-device shard in, per-device shard out: compare on global views
+    return jax.jit(lambda x: jax.shard_map(
+        body, mesh=mesh_ring, in_specs=(P("data"),),
+        out_specs=(P("data"),) * 6, check_vma=False)(x))(base_r)
+
+
+for bidi in (False, True):
+    tag = "bidi" if bidi else "uni"
+    rs_ring, rs_ref, ag_ring, ag_ref, ar_ring, ar_ref = (
+        np.asarray(v) for v in _ring_vs_psum(bidi))
+    scale = float(np.max(np.abs(rs_ref))) + 1e-8
+    check(f"ring-rs-equals-psum-scatter[{tag}]",
+          float(np.max(np.abs(rs_ring - rs_ref))) / scale < 1e-6)
+    check(f"ring-ag-equals-all-gather[{tag}]",
+          float(np.max(np.abs(ag_ring - ag_ref))) < 1e-6 * scale)
+    check(f"ring-allreduce-equals-psum[{tag}]",
+          float(np.max(np.abs(ar_ring - ar_ref))) / scale < 1e-6)
+
+# 8. hierarchical reducer with its fast-tier bulk bytes routed through
+#    the ring kernels (use_ring) ≡ the psum_scatter/all_gather stages
+from repro.core.hierarchical import hierarchical_allreduce
+
+
+def _hier(use_ring):
+    def body(x):
+        rank = (jax.lax.axis_index("pod") * 2
+                + jax.lax.axis_index("data")).astype(jnp.float32)
+        return hierarchical_allreduce(
+            x * (1.0 + rank), intra_axis="data", inter_axis="pod",
+            intra_size=2, use_ring=use_ring)
+
+    return jax.jit(lambda x: jax.shard_map(
+        body, mesh=mesh_pod, in_specs=(P(),), out_specs=P(),
+        check_vma=False)(x))(base)
+
+
+check("hier-ring-equals-psum-stages",
+      float(np.max(np.abs(np.asarray(_hier(True))
+                          - np.asarray(_hier(False))))) < 1e-5)
+
+# 9. compressed_ring ≡ compressed on a single-axis 8-ring: the int8
+#    gather phase rides the ring all-gather — pure transport, so the
+#    (lossy) values must match the lax.all_gather path bit-for-bit
+from repro.core.strategies import make_reducer as _mk_red
+
+big = jax.random.normal(jax.random.PRNGKey(13), (4096,), jnp.float32)
+bucket_d8 = Bucket(
+    leaves=(LeafInfo(name="c", index=0, shape=(4096,), dtype=jnp.float32,
+                     size=4096),),
+    reduce_axes=("data",), channel=0, bucket_id=0)
+
+
+def _comp_with(name):
+    red = _mk_red(name, {"data": 8}, mean_axes=("data",))
+
+    def body(x):
+        rank = jax.lax.axis_index("data").astype(jnp.float32)
+        return red(x * (1.0 + rank), bucket_d8)
+
+    return jax.jit(lambda x: jax.shard_map(
+        body, mesh=mesh_ring, in_specs=(P(),), out_specs=P(),
+        check_vma=False)(x))(big)
+
+
+comp_out = np.asarray(_comp_with("compressed"))
+comp_ring_out = np.asarray(_comp_with("compressed_ring"))
+check("compressed-ring-equals-compressed",
+      float(np.max(np.abs(comp_out - comp_ring_out))) == 0.0)
 
 print("DONE", flush=True)

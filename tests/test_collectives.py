@@ -1,0 +1,221 @@
+"""Fused comm-staging + ring collective kernels (DESIGN.md §8).
+
+Interpret-mode parity against the leafwise/jnp oracles, the staging
+knobs through the real emitter, bucket-plan memoization, and the
+donation regression.  Real-process-group ring equivalence
+(ring RS/AG ≡ psum_scatter/all_gather, ring reducer end-to-end) runs on
+the 8-fake-device mesh in tests/_mdworker.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import GradSync, GradSyncConfig, make_bucket_plan
+from repro.core.buckets import clear_bucket_plan_cache, pack, unpack
+from repro.kernels.collectives.kernel import RING_CHUNK, ring_accum_kernel
+from repro.kernels.collectives.ops import (
+    fused_pack,
+    fused_unpack,
+    ring_allreduce,
+    staging_supported,
+)
+from repro.parallel.sharding import ShardingRules
+
+
+def _grads_and_specs():
+    params = {
+        "a": jnp.linspace(-3.0, 5.0, 12).reshape(3, 4),
+        "b": jnp.ones((7,)) * 0.5,
+        "emb": jnp.linspace(0.0, 31.0, 32).reshape(8, 4),
+        "w": jnp.full((4, 6), 2.0),
+        "tiny": jnp.asarray([1.5]),
+    }
+    rules = ShardingRules(rules=(
+        ("emb", P("model", None)),
+        ("w", P(None, "model")),
+    ))
+    return params, rules.tree_specs(params)
+
+
+# ------------------------------------------------------- staging parity
+
+@pytest.mark.parametrize("impl", ["kernel", "xla"])
+@pytest.mark.parametrize("comm_dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_pack_unpack_bitexact_vs_leafwise(smoke_mesh, impl,
+                                                comm_dtype):
+    """pack→unpack through the fused path must match buckets.pack/unpack
+    BIT-exactly (same casts, same order, no extra rounding)."""
+    grads, specs = _grads_and_specs()
+    plan = make_bucket_plan(grads, specs, smoke_mesh, bucket_bytes=1 << 20,
+                            comm_dtype=comm_dtype)
+    flat = jax.tree.leaves(grads)
+    ref_out = [None] * len(flat)
+    fused_out = [None] * len(flat)
+    for b in plan.buckets:
+        ref_buf = pack(b, flat, comm_dtype)
+        buf = fused_pack(b, flat, comm_dtype, impl=impl, interpret=True)
+        assert buf.dtype == ref_buf.dtype and buf.shape == ref_buf.shape
+        np.testing.assert_array_equal(
+            np.asarray(buf, np.float32), np.asarray(ref_buf, np.float32))
+        unpack(b, ref_buf, ref_out)
+        fused_unpack(b, buf, fused_out, impl=impl, interpret=True)
+    for got, want in zip(fused_out, ref_out):
+        assert got.dtype == want.dtype and got.shape == want.shape
+        np.testing.assert_array_equal(
+            np.asarray(got, np.float32), np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("impl", ["kernel", "xla"])
+def test_fused_staging_loss_scale_roundtrip(smoke_mesh, impl):
+    """Power-of-two loss-scale folded into pack and divided out in unpack
+    is exact in f32."""
+    grads, specs = _grads_and_specs()
+    plan = make_bucket_plan(grads, specs, smoke_mesh, bucket_bytes=1 << 20)
+    flat = jax.tree.leaves(grads)
+    out = [None] * len(flat)
+    for b in plan.buckets:
+        buf = fused_pack(b, flat, jnp.float32, scale=64.0, impl=impl,
+                         interpret=True)
+        fused_unpack(b, buf, out, scale=1.0 / 64.0, impl=impl,
+                     interpret=True)
+    for got, want in zip(out, flat):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_staging_supported_gates_odd_dtypes():
+    assert staging_supported((jnp.float32, jnp.bfloat16), jnp.float32)
+    assert not staging_supported((jnp.int32,), jnp.float32)
+    assert not staging_supported((jnp.float32,), jnp.int8)
+
+
+@pytest.mark.parametrize("use_fused", [True, False])
+@pytest.mark.parametrize("strategy", ["concom", "rsag"])
+def test_execute_fused_vs_leafwise_identical(smoke_mesh, strategy,
+                                             use_fused):
+    """The use_fused_staging knob must not change results: on the unit
+    mesh every strategy returns the input grads bit-exactly."""
+    grads, specs = _grads_and_specs()
+    cfg = GradSyncConfig(strategy=strategy, bucket_bytes=64,
+                         num_channels=2, use_fused_staging=use_fused)
+    gspecs = jax.tree.map(lambda _: P(), grads)
+
+    def run(g):
+        gs = GradSync(cfg, smoke_mesh, specs, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), g))
+        return gs(g)
+
+    out = jax.jit(lambda g: jax.shard_map(
+        run, mesh=smoke_mesh, in_specs=(gspecs,), out_specs=gspecs,
+        check_vma=False)(g))(grads)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(grads)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("use_fused", [True, False])
+def test_gradsync_loss_scale_is_transparent(smoke_mesh, use_fused):
+    """loss_scale rides the comm buffer only: pack scales (in f32,
+    BEFORE the comm cast — on both the fused and the fallback path),
+    unpack unscales — grads come back exactly (power-of-two scale)."""
+    grads, specs = _grads_and_specs()
+    cfg = GradSyncConfig(strategy="concom", bucket_bytes=64,
+                         loss_scale=1024.0, use_fused_staging=use_fused)
+    gspecs = jax.tree.map(lambda _: P(), grads)
+
+    def run(g):
+        gs = GradSync(cfg, smoke_mesh, specs, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), g))
+        return gs(g)
+
+    out = jax.jit(lambda g: jax.shard_map(
+        run, mesh=smoke_mesh, in_specs=(gspecs,), out_specs=gspecs,
+        check_vma=False)(g))(grads)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(grads)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- ring primitives
+
+@pytest.mark.parametrize("n", [100, 4 * RING_CHUNK])
+def test_ring_accum_kernel_matches_add(n):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    a = jax.random.normal(ks[0], (n,), jnp.float32)
+    b = jax.random.normal(ks[1], (n,), jnp.float32)
+    out = ring_accum_kernel(a, b, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(a + b))
+
+
+def test_ring_allreduce_unit_group_is_identity():
+    buf = jnp.linspace(0.0, 1.0, 37)
+    out = ring_allreduce(buf, ("data", "model"), {"data": 1, "model": 1})
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(buf))
+
+
+# ------------------------------------------------- bucket-plan memoization
+
+def test_make_bucket_plan_is_memoized(smoke_mesh):
+    grads, specs = _grads_and_specs()
+    clear_bucket_plan_cache()
+    kw = dict(bucket_bytes=128, num_channels=2)
+    p1 = make_bucket_plan(grads, specs, smoke_mesh, **kw)
+    p2 = make_bucket_plan(grads, specs, smoke_mesh, **kw)
+    assert p1 is p2
+    # ShapeDtypeStructs with the same shapes hit the same entry
+    sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), grads)
+    assert make_bucket_plan(sds, specs, smoke_mesh, **kw) is p1
+    # any knob or shape change misses
+    assert make_bucket_plan(grads, specs, smoke_mesh,
+                            bucket_bytes=256, num_channels=2) is not p1
+    assert make_bucket_plan(grads, specs, smoke_mesh, bucket_bytes=128,
+                            num_channels=3) is not p1
+    bigger = dict(grads, b=jnp.ones((9,)))
+    assert make_bucket_plan(bigger, specs, smoke_mesh, **kw) is not p1
+
+
+def test_bucket_plan_cache_is_bounded(smoke_mesh):
+    from repro.core import buckets as B
+
+    grads, specs = _grads_and_specs()
+    clear_bucket_plan_cache()
+    for bb in range(64, 64 + 2 * B._PLAN_CACHE_MAX):
+        make_bucket_plan(grads, specs, smoke_mesh, bucket_bytes=bb)
+    assert len(B._PLAN_CACHE) <= B._PLAN_CACHE_MAX
+
+
+# ------------------------------------------------------ donation regression
+
+def test_donation_does_not_change_one_train_step(smoke_mesh):
+    """donate_argnums on params/opt_state (the production launcher path)
+    must be a pure memory optimization: one train step's loss and params
+    are identical with and without donation."""
+    from repro.data import TokenPipeline
+    from repro.models import transformer as tf
+    from repro.optim import adamw
+    from repro.runtime import make_train_step
+
+    cfg = tf.TransformerConfig(
+        name="donate", n_layers=2, d_model=32, n_heads=4, kv_heads=2,
+        d_ff=64, vocab=64, tp=1, attn_chunk=16, dtype=jnp.float32)
+    pipe = TokenPipeline(64, 16, 4, mesh=smoke_mesh)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    batch = pipe.batch_at(0)
+    opt = adamw(1e-3)
+    sync = GradSyncConfig(strategy="concom", bucket_bytes=1 << 14)
+
+    results = {}
+    for donate in (False, True):
+        ts = make_train_step(cfg, smoke_mesh, sync, opt, batch_like=batch,
+                             params_like=params, donate=donate)
+        ps = jax.device_put(params, ts.shardings(ts.param_specs))
+        p2, _, m = ts.fn(ps, ts.init_opt(), batch, jnp.int32(0))
+        results[donate] = (float(m["loss"]), jax.device_get(p2))
+
+    l0, p0 = results[False]
+    l1, p1 = results[True]
+    assert l0 == l1
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

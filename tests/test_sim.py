@@ -195,6 +195,41 @@ def test_netmodel_alpha_beta_properties():
         == net.allreduce_time(small, ("data",), ms)
 
 
+def test_staging_cost_fused_vs_leafwise():
+    """The simulator must price CopyFromTo distinctly: leafwise staging
+    (per-leaf copies, two passes) is strictly slower than the fused
+    kernels, and the gap grows with leaves per bucket (DESIGN.md §8)."""
+    net = default_network()
+    n = 4 << 20
+    fused = net.staging_time("allreduce", n, 16, fused=True)
+    leafwise = net.staging_time("allreduce", n, 16, fused=False)
+    assert 0.0 < fused < leafwise
+    # more leaves → more per-copy dispatches, leafwise only
+    assert net.staging_time("allreduce", n, 64, fused=False) > leafwise
+    assert net.staging_time("allreduce", n, 64, fused=True) == fused
+    # the RS/AG pair splits one allreduce's staging round trip
+    rs = net.staging_time("reduce_scatter", n, 16, fused=True)
+    ag = net.staging_time("all_gather", n, 16, fused=True)
+    assert rs + ag == pytest.approx(fused)
+
+    # end-to-end: the same schedule simulates strictly slower leafwise
+    many = BucketPlan(
+        buckets=tuple(
+            Bucket(leaves=tuple(
+                LeafInfo(name=f"g{b}_{i}", index=b * 8 + i, shape=(1 << 16,),
+                         dtype=jnp.float32, size=1 << 16)
+                for i in range(8)),
+                reduce_axes=("data",), channel=b % 4, bucket_id=b)
+            for b in range(8)),
+        treedef=None, num_leaves=64, comm_dtype=jnp.float32)
+    _, tl_f = simulate_strategy("concom", many, MESH, compute=COMPUTE,
+                                sim=SimConfig(fused_staging=True))
+    _, tl_l = simulate_strategy("concom", many, MESH, compute=COMPUTE,
+                                sim=SimConfig(fused_staging=False))
+    assert tl_l.step_time > tl_f.step_time
+    assert tl_l.total_comm > tl_f.total_comm
+
+
 def test_grid_search_orders_candidates(smoke_mesh):
     import jax
 

@@ -42,8 +42,9 @@ def test_strategy_identity_on_unit_mesh(smoke_mesh, strategy, reducer):
     cfg = GradSyncConfig(strategy=strategy, reducer=reducer,
                          bucket_bytes=64, num_channels=3)
     gspecs = jax.tree.map(lambda _: P(), grads)
-    if get_strategy(strategy).two_phase and reducer != "flat":
-        # two-phase schedules emit raw RS/AG and would ignore the reducer
+    if get_strategy(strategy).two_phase and reducer not in ("flat", "ring"):
+        # two-phase schedules emit raw RS/AG and would ignore any reducer
+        # except "ring", which carries the RS/AG ops itself (DESIGN.md §8)
         with pytest.raises(ValueError, match="reduce-scatter"):
             GradSync(cfg, smoke_mesh, specs, jax.tree.map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), grads))
