@@ -15,9 +15,11 @@ bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
 # minutes-long CPU staging/collective microbenchmark → BENCH_pack.json
-# (fused-vs-leafwise CopyFromTo + ring-vs-psum rows; CI artifact)
+# (fused-vs-leafwise CopyFromTo + ring-vs-psum rows) and the StepProgram
+# benchmark → BENCH_step.json (scheduled-zero1 vs monolithic vs flat:
+# wall, peak-memory proxy, simulated exposed comm); both CI artifacts
 bench-smoke:
-	PYTHONPATH=src $(PY) -m benchmarks.run --sections pack
+	PYTHONPATH=src $(PY) -m benchmarks.run --sections pack,step
 
 schedule:
 	PYTHONPATH=src $(PY) -m benchmarks.schedule_analysis

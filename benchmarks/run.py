@@ -278,6 +278,106 @@ def bench_pack(emit):
         emit(f"ring_{name}_8dev", float(us), "8_fake_devices")
 
 
+def bench_step(emit):
+    """§9 StepProgram benchmark → BENCH_step.json.
+
+    Scheduled-zero1 (per-bucket RS→UPDATE→AG + NORM clip) vs monolithic
+    zero1 vs flat allreduce+update on the same small transformer:
+    measured wall time per train step (1 CPU device — orders overhead),
+    an AOT peak-memory proxy (temp + argument bytes from
+    memory_analysis), and the simulator's predicted step time / exposed
+    comm for the SAME planned schedules on a 2×4 mesh.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    import repro.sim  # noqa: F401  (registers the "auto" strategy)
+    from repro.core import GradSyncConfig
+    from repro.data import TokenPipeline
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import transformer as tf
+    from repro.optim import adamw, zero1
+    from repro.runtime import make_train_step
+    from repro.sim import compute_model_for, rank_step_plans, simulate
+
+    mesh = make_smoke_mesh(1, 1)
+    cfg = tf.TransformerConfig(
+        name="step", n_layers=4, d_model=128, n_heads=8, kv_heads=4,
+        d_ff=512, vocab=1024, tp=1, attn_chunk=64, dtype=jnp.float32)
+    pipe = TokenPipeline(1024, 128, 8, mesh=mesh)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    batch = pipe.batch_at(0)
+    mesh_shape = {"data": 2, "model": 4}
+    compute = compute_model_for(cfg, global_batch=8, seq_len=128,
+                                n_devices=8)
+
+    def build(mode):
+        # clip_norm=0 everywhere: the monolithic path cannot clip, so a
+        # clipped scheduled program would pay for (and compute) more —
+        # the wall ratio must compare like for like
+        if mode == "flat":
+            return make_train_step(
+                cfg, mesh, GradSyncConfig(strategy="concom",
+                                          bucket_bytes=1 << 16),
+                adamw(1e-3), batch_like=batch, params_like=params,
+                clip_norm=0.0)
+        opt = zero1(adamw(1e-3), ("data",), 1)
+        return make_train_step(
+            cfg, mesh,
+            GradSyncConfig(strategy="concom", bucket_bytes=1 << 16,
+                           exclude_axes=("data",)),
+            opt, batch_like=batch, params_like=params,
+            zero1_mode=True, zero1_plan=mode, clip_norm=0.0)
+
+    walls = {}
+    for mode in ("flat", "monolithic", "scheduled"):
+        ts = build(mode)
+        state = ts.init_opt()
+        compiled = ts.fn.lower(params, state, batch,
+                               jax.ShapeDtypeStruct((), jnp.int32)
+                               ).compile()
+        m = compiled.memory_analysis()
+        temp = int(getattr(m, "temp_size_in_bytes", 0) or 0)
+        arg = int(getattr(m, "argument_size_in_bytes", 0) or 0)
+        ir = ts.gradsync.schedule.stats()
+        tl = simulate(ts.gradsync.schedule, mesh_shape, compute=compute)
+        # time the AOT executable — going through ts.fn would re-trace
+        # and re-compile the very program we just compiled
+        step0 = jnp.int32(0)
+        us = _t(lambda _f=compiled, _s=state: _f(params, _s, batch,
+                                                 step0))
+        walls[mode] = us
+        emit(f"step_{mode}_wall", us,
+             f"ops{ir['num_ops']}_upd{ir['kinds'].get('update', 0)}",
+             mode=mode, ir_ops=ir["num_ops"],
+             ir_update_ops=ir["kinds"].get("update", 0),
+             temp_bytes=temp, argument_bytes=arg,
+             peak_memory_proxy=temp + arg,
+             simulated_step_us=tl.step_time * 1e6,
+             simulated_exposed_us=tl.exposed_comm * 1e6)
+    emit("step_scheduled_vs_monolithic", 0,
+         f"wall{walls['monolithic'] / walls['scheduled']:.2f}x",
+         wall_ratio=round(walls["monolithic"] / walls["scheduled"], 3))
+
+    # predicted zero1-scheduled vs flat+monolithic-update plans on the
+    # dp bucket plan itself (what `auto` ranks under zero1)
+    from repro.core.stepprogram import zero1_bucket_plan
+    from repro.models.registry import family_of
+
+    pspecs = family_of(cfg).param_rules(cfg).tree_specs(params)
+    dp_plan = zero1_bucket_plan(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                     params),
+        pspecs, mesh, dp_axes=("data",), bucket_bytes=1 << 16)
+    for name, tl in rank_step_plans(dp_plan, mesh_shape,
+                                    dp_axes=("data",), compute=compute):
+        emit(f"step_sim_{name.replace(':', '_')}", tl.step_time * 1e6,
+             f"exposed{tl.exposed_comm * 1e6:.0f}us",
+             plan=name, simulated_step_us=tl.step_time * 1e6,
+             simulated_exposed_us=tl.exposed_comm * 1e6,
+             overlap=round(tl.overlap_fraction, 3))
+
+
 def bench_roofline_summary(emit):
     path = "results/dryrun.json"
     if not os.path.exists(path):
@@ -305,6 +405,7 @@ SECTIONS = {
     "strategy_step": bench_strategy_steps,
     "kernels": bench_kernels,
     "pack": bench_pack,
+    "step": bench_step,
     "roofline": bench_roofline_summary,
 }
 

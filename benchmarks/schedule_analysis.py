@@ -2,19 +2,24 @@
 in the compiled program (EXPERIMENTS §Paper-validation point 3).
 
 Compiles one small train step per REGISTERED strategy (8 fake devices —
-run standalone) and reports, per strategy:
+run standalone), plain AND as the ZeRO-1 StepProgram (`<name>+zero1`
+rows), and reports, per row:
   - the CommSchedule IR statistics (op count, chain count, longest
-    chain) — the planned dependency structure, asserted in microseconds,
+    chain, UPDATE-op count) — the planned dependency structure,
+    asserted in microseconds.  StepProgram rows carry the per-bucket
+    RS→UPDATE→AG triples + the NORM clip op in the same IR,
   - number of HLO collective ops (all-reduce + reduce-scatter +
     all-gather) and how many sit inside the while-loop body (depcha:
     per-layer in-scan psums → pipelinable by XLA),
   - the repro.sim discrete-event prediction for the SAME planned
-    schedule on the same 2×4 mesh (step time, exposed comm, overlap) —
-    the simulated timeline printed next to the chain stats it explains.
+    schedule on the same 2×4 mesh (step time, exposed comm, overlap;
+    UPDATE ops costed as shard-update HBM time) — the simulated
+    timeline printed next to the chain stats it explains.
 
 Expected IR shapes: funnel = 1 chain through every bucket; concom and
 priority ≈ num_channels chains; rsag = 2 ops (RS+AG) per bucket; auto
-delegates to the simulator's predicted winner.
+delegates to the simulator's predicted winner; `+zero1` rows add
+3 ops per dp bucket + 1 NORM.
 
     PYTHONPATH=src python -m benchmarks.schedule_analysis
 """
@@ -31,7 +36,7 @@ warnings.filterwarnings("ignore")
 _COLL = r"(?:all-reduce|reduce-scatter|all-gather)"
 
 
-def analyze(strategy: str) -> dict:
+def analyze(strategy: str, zero1: bool = False) -> dict:
     import repro  # noqa: F401  (jaxcompat before jax.sharding imports)
     import jax
     import jax.numpy as jnp
@@ -40,7 +45,7 @@ def analyze(strategy: str) -> dict:
     from repro.core import GradSyncConfig, get_strategy
     from repro.data import TokenPipeline
     from repro.models import transformer as tf
-    from repro.optim import adamw
+    from repro.optim import adamw, zero1 as make_zero1
     from repro.runtime import make_train_step
     from repro.sim import compute_model_for, sim_config_for, simulate
 
@@ -53,19 +58,22 @@ def analyze(strategy: str) -> dict:
     pipe = TokenPipeline(cfg.vocab, 32, 8, mesh=mesh)
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     batch = pipe.batch_at(0)
+    opt = make_zero1(adamw(1e-3), ("data",), 2) if zero1 else adamw(1e-3)
     ts = make_train_step(
         cfg, mesh,
-        GradSyncConfig(strategy=strategy, num_channels=4, bucket_bytes=0),
-        adamw(1e-3), batch_like=batch, params_like=params)
+        GradSyncConfig(strategy=strategy, num_channels=4, bucket_bytes=0,
+                       exclude_axes=("data",) if zero1 else ()),
+        opt, batch_like=batch, params_like=params, zero1_mode=zero1)
     ir = ts.gradsync.schedule.stats()
     # simulated timeline of the SAME planned schedule on this 2×4 mesh
+    # (UPDATE/NORM ops of the StepProgram rows costed by the engine)
     mesh_shape = {"data": 2, "model": 4}
     tl = simulate(
         ts.gradsync.schedule, mesh_shape,
         compute=compute_model_for(cfg, global_batch=8, seq_len=32,
                                   n_devices=8),
         sim=sim_config_for(strategy))
-    opt_state = adamw(1e-3).init(params)
+    opt_state = ts.init_opt()
     lowered = ts.fn.lower(params, opt_state, batch, jnp.int32(0))
     hlo = lowered.compile().as_text()
 
@@ -80,10 +88,11 @@ def analyze(strategy: str) -> dict:
         end = hlo.find("\n}", idx)
         seg = hlo[idx:end if end > 0 else idx + 200000]
         in_loop += len(re.findall(rf"= [^=\n]*{_COLL}\(", seg))
-    return {"strategy": strategy,
+    return {"strategy": strategy + ("+zero1" if zero1 else ""),
             "ir_ops": ir["num_ops"],
             "ir_chains": ir["num_chains"],
             "ir_max_chain": ir["max_chain_len"],
+            "ir_update_ops": ir["kinds"].get("update", 0),
             "collective_ops": total,
             "in_loop_body": in_loop,
             "loop_trip_multiplied": in_loop * 4,   # n_layers=4
@@ -97,18 +106,20 @@ def main():
 
     from repro.core import strategy_names
 
-    print("strategy,ir_ops,ir_chains,ir_max_chain,"
+    print("strategy,ir_ops,ir_chains,ir_max_chain,ir_update_ops,"
           "collective_ops_static,in_loop_body,runtime_collectives(~),"
           "sim_step_us,sim_exposed_us,sim_overlap")
     for s in strategy_names():
-        r = analyze(s)
-        runtime = (r["collective_ops"] - r["in_loop_body"]
-                   + r["loop_trip_multiplied"])
-        print(f"{r['strategy']},{r['ir_ops']},{r['ir_chains']},"
-              f"{r['ir_max_chain']},{r['collective_ops']},"
-              f"{r['in_loop_body']},{runtime},"
-              f"{r['sim_step_us']:.1f},{r['sim_exposed_us']:.1f},"
-              f"{r['sim_overlap']:.2f}")
+        for zero1 in (False, True):
+            r = analyze(s, zero1=zero1)
+            runtime = (r["collective_ops"] - r["in_loop_body"]
+                       + r["loop_trip_multiplied"])
+            print(f"{r['strategy']},{r['ir_ops']},{r['ir_chains']},"
+                  f"{r['ir_max_chain']},{r['ir_update_ops']},"
+                  f"{r['collective_ops']},"
+                  f"{r['in_loop_body']},{runtime},"
+                  f"{r['sim_step_us']:.1f},{r['sim_exposed_us']:.1f},"
+                  f"{r['sim_overlap']:.2f}")
 
 
 if __name__ == "__main__":

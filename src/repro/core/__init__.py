@@ -23,6 +23,12 @@ from repro.core.schedule import (
     emit_gated,
     execute,
 )
+from repro.core.stepprogram import (
+    StepProgram,
+    build_step_program,
+    zero1_bucket_plan,
+    zero1_schedule,
+)
 from repro.core.strategies import make_reducer, sync_grads
 
 
@@ -70,8 +76,10 @@ __all__ = [
     "REDUCERS",
     "STRATEGIES",
     "SimConfig",
+    "StepProgram",
     "StrategyInfo",
     "Timeline",
+    "build_step_program",
     "chain",
     "compute_model_for",
     "default_network",
@@ -96,4 +104,6 @@ __all__ = [
     "sync_grads",
     "sync_in_backward",
     "update",
+    "zero1_bucket_plan",
+    "zero1_schedule",
 ]

@@ -42,6 +42,10 @@ class Bucket:
     reduce_axes: tuple[str, ...]   # mesh axes of the psum (the "communicator")
     channel: int                   # ConCom: which communicator chain
     bucket_id: int
+    # per-bucket wire dtype override (None = the plan's comm_dtype).  The
+    # ZeRO-1 StepProgram buckets pin f32 so the shard-update math matches
+    # the monolithic optimizer bit-for-bit even under a bf16 sync wire.
+    comm_dtype: Any = None
 
     @property
     def size(self) -> int:

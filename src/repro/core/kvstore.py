@@ -51,6 +51,11 @@ class GradSyncConfig:
     exclude_axes: tuple[str, ...] = ()  # reduced elsewhere (ZeRO-1 RS)
     use_fused_staging: bool = True   # fused pack/unpack kernels (§8)
     loss_scale: float = 1.0          # folded into pack; unpack divides
+    # StepProgram (§9): non-empty → plan the ZeRO-1 step as per-bucket
+    # RS→UPDATE→AG ops over these axes, appended to the sync schedule
+    # (set exclude_axes to the same axes — the RS *is* their reduction)
+    zero1_dp_axes: tuple[str, ...] = ()
+    zero1_clip: bool = False         # plan the NORM op (grad clipping)
 
 
 class GradSync:
@@ -106,7 +111,61 @@ class GradSync:
         self.schedule: CommSchedule = self.info.plan(
             self.plan, skip_names=self.skip_names, **plan_kw)
 
-    def __call__(self, grads: Any) -> Any:
+        # StepProgram (§9): append the ZeRO-1 RS→UPDATE→AG triples,
+        # planned by the SAME strategy over the dp-axes bucket plan
+        self.program = None
+        self.dp_plan = None
+        if cfg.zero1_dp_axes:
+            from repro.core.stepprogram import (
+                build_step_program,
+                zero1_bucket_plan,
+            )
+
+            id_offset = (max(b.bucket_id for b in self.plan.buckets) + 1
+                         if self.plan.buckets else 0)
+            self.dp_plan = zero1_bucket_plan(
+                grads_like, param_specs, mesh,
+                dp_axes=cfg.zero1_dp_axes,
+                bucket_bytes=cfg.bucket_bytes,
+                num_channels=1 if self.info.single_chain
+                else cfg.num_channels,
+                id_offset=id_offset)
+            dp_size = group_size(cfg.zero1_dp_axes, self.mesh_shape)
+            plan_kw2 = {}
+            if self.info.meta:
+                plan_kw2["context"] = {
+                    **plan_kw["context"],
+                    "zero1": {"dp_axes": tuple(cfg.zero1_dp_axes),
+                              "dp_size": dp_size,
+                              "clip": cfg.zero1_clip},
+                }
+            base = self.info.plan(
+                self.dp_plan, skip_names=frozenset(), **plan_kw2)
+            self.program = build_step_program(
+                self.schedule, self.plan, base, self.dp_plan,
+                dp_axes=tuple(cfg.zero1_dp_axes), dp_size=dp_size,
+                clip=cfg.zero1_clip)
+            self.schedule = self.program.schedule
+
+    def _two_phase_impl(self) -> str:
+        # ring-family reducers route the RS/AG ops through the chunked
+        # ring kernels (§8); the zero1 triples ride the same transport.
+        # (Two-phase strategies only ever reach here with flat/ring —
+        # the constructor guard rejects the rest.)
+        ring_family = (self.cfg.reducer == "ring"
+                       or self.cfg.reducer.endswith("_ring"))
+        emits_rs_ag = self.info.two_phase or self.program is not None
+        return "ring" if (ring_family and emits_rs_ag) else "psum"
+
+    def __call__(self, grads: Any, *, update_fn=None,
+                 clip_norm: float = 0.0, aux: dict | None = None) -> Any:
+        """Emit the planned schedule over ``grads``.
+
+        For pure sync schedules this returns the reduced gradients.  A
+        StepProgram schedule (``zero1_dp_axes``) additionally needs
+        ``update_fn`` (see ``repro.optim.zero.scheduled_update``); the
+        returned tree then holds the all-gathered *updates*.
+        """
         return execute(
             self.schedule,
             grads,
@@ -116,9 +175,10 @@ class GradSync:
             mean_axes=self.cfg.mean_axes,
             use_fused_staging=self.cfg.use_fused_staging,
             loss_scale=self.cfg.loss_scale,
-            two_phase_impl="ring" if (self.info.two_phase
-                                      and self.cfg.reducer == "ring")
-            else "psum",
+            two_phase_impl=self._two_phase_impl(),
+            update_fn=update_fn,
+            clip_norm=clip_norm,
+            aux=aux,
         )
 
 

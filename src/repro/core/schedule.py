@@ -43,6 +43,15 @@ Reducer = Callable[[jax.Array, Bucket], jax.Array]
 ALLREDUCE = "allreduce"
 REDUCE_SCATTER = "reduce_scatter"
 ALL_GATHER = "all_gather"
+# full-step (StepProgram) kinds — the training step beyond the gradient
+# sync, as schedulable nodes (DESIGN.md §9):
+UPDATE = "update"    # sharded optimizer update of one bucket's RS shard
+NORM = "norm"        # scalar psum of local squared grad norms (clipping)
+
+KINDS = (ALLREDUCE, REDUCE_SCATTER, ALL_GATHER, UPDATE, NORM)
+# kinds that move a bucket's payload over the wire exactly once (RS/AG
+# pairs are counted at the RS; UPDATE is local math, NORM a scalar)
+_WIRE_KINDS = (ALLREDUCE, REDUCE_SCATTER)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +90,7 @@ class CommSchedule:
         counting each reduce-scatter/all-gather pair once (at the RS)."""
         return tuple(
             op.bucket.bucket_id for op in self.ops
-            if op.kind != ALL_GATHER
+            if op.kind in _WIRE_KINDS
             and (chain is None or op.chain == chain))
 
     def leaf_names(self) -> frozenset[str]:
@@ -90,16 +99,16 @@ class CommSchedule:
 
     def comm_bytes(self, itemsize: int = 4) -> int:
         """Total payload bytes moved (RS/AG pairs counted once — they move
-        one bucket between them)."""
+        one bucket between them; UPDATE/NORM ops move no payload)."""
         return sum(op.bucket.size * itemsize for op in self.ops
-                   if op.kind != ALL_GATHER)
+                   if op.kind in _WIRE_KINDS)
 
     def chain_bytes(self, itemsize: int = 4) -> dict[int, int]:
         """Payload bytes per dependency chain (the simulator's unit of
         serialization; also what a per-channel bandwidth budget sees)."""
         out: dict[int, int] = {}
         for op in self.ops:
-            if op.kind == ALL_GATHER:
+            if op.kind not in _WIRE_KINDS:
                 continue
             out[op.chain] = out.get(op.chain, 0) + op.bucket.size * itemsize
         return out
@@ -133,10 +142,15 @@ class CommSchedule:
                         f"op {op.op_id} depends on {d}, which does not "
                         f"precede it (schedule must be topologically "
                         f"ordered)")
-            if op.kind not in (ALLREDUCE, REDUCE_SCATTER, ALL_GATHER):
+            if op.kind not in KINDS:
                 raise ValueError(f"op {op.op_id}: unknown kind {op.kind!r}")
             seen.add(op.op_id)
         return self
+
+    def update_ops(self) -> tuple[CollectiveOp, ...]:
+        """The StepProgram's optimizer-update nodes (empty for pure-sync
+        schedules)."""
+        return tuple(op for op in self.ops if op.kind == UPDATE)
 
 
 def group_size(axes: tuple[str, ...], mesh_shape: Mapping[str, int]) -> int:
@@ -225,6 +239,9 @@ def execute(
     use_fused_staging: bool = True,
     loss_scale: float = 1.0,
     two_phase_impl: str = "psum",
+    update_fn: Callable[[CollectiveOp, jax.Array], jax.Array] | None = None,
+    clip_norm: float = 0.0,
+    aux: dict | None = None,
 ) -> Any:
     """Materialize a CommSchedule over a gradient pytree.
 
@@ -243,42 +260,61 @@ def execute(
     ``two_phase_impl`` selects the reduce-scatter/all-gather transport:
     XLA's ``psum_scatter``/``all_gather`` ("psum") or the chunked
     bidirectional ring collectives ("ring").
+
+    Full-step (StepProgram, DESIGN.md §9) ops:
+      UPDATE — ``update_fn(op, g_shard) -> upd_shard`` runs the sharded
+        optimizer math on the producing reduce-scatter's shard (the
+        data-parallel mean from ``mean_axes`` and the inverse loss scale
+        are applied to the shard first); the following ALL_GATHER then
+        carries *updates*, not gradients.
+      NORM — psums the squared norm of every producing RS shard over the
+        op's reduce axes; with ``clip_norm > 0`` dependent UPDATE ops
+        see their grad shards clipped by the global norm.  The norm
+        lands in ``aux["grad_norm"]`` when ``aux`` is given.
+
+    Ops read leaves from the CURRENT flat output list, so an op whose
+    bucket shares leaves with an earlier op (ZeRO-1's dp reduce-scatter
+    after the model-axis sync) consumes the earlier op's result —
+    provided the schedule carries the dependency edge.
     """
     if two_phase_impl not in ("psum", "ring"):
         raise ValueError(f"unknown two_phase_impl {two_phase_impl!r}")
-    flat_grads = jax.tree_util.tree_leaves(grads)
-    assert len(flat_grads) == plan.num_leaves, (
-        f"plan built for {plan.num_leaves} leaves, got {len(flat_grads)}")
-    flat_out: list[jax.Array | None] = list(flat_grads)
+    flat_out: list[jax.Array] = list(jax.tree_util.tree_leaves(grads))
+    assert len(flat_out) == plan.num_leaves, (
+        f"plan built for {plan.num_leaves} leaves, got {len(flat_out)}")
     reducers = dict(reducers or {})
     by_id = {op.op_id: op for op in schedule.ops}
 
+    def dtype_of(bucket: Bucket):
+        return (bucket.comm_dtype if bucket.comm_dtype is not None
+                else plan.comm_dtype)
+
     def fused_ok(bucket: Bucket) -> bool:
         return use_fused_staging and coll_ops.staging_supported(
-            (l.dtype for l in bucket.leaves), plan.comm_dtype)
+            (l.dtype for l in bucket.leaves), dtype_of(bucket))
 
     def stage_in(bucket: Bucket) -> jax.Array:
         """CopyFromTo(g, comm_buf): pack + cast (+ loss-scale), fused."""
         if fused_ok(bucket):
             return coll_ops.fused_pack(
-                bucket, flat_grads, plan.comm_dtype, scale=loss_scale)
+                bucket, flat_out, dtype_of(bucket), scale=loss_scale)
         if loss_scale != 1.0:
             # the ref impl scales in f32 BEFORE the comm-dtype cast —
             # scaling after would defeat the underflow protection the
             # loss scale exists for (and diverge from the fused path)
             return coll_ops.fused_pack(
-                bucket, flat_grads, plan.comm_dtype, scale=loss_scale,
+                bucket, flat_out, dtype_of(bucket), scale=loss_scale,
                 impl="leafwise")
-        return pack(bucket, flat_grads, plan.comm_dtype)
+        return pack(bucket, flat_out, dtype_of(bucket))
 
-    def stage_out(bucket: Bucket, buf: jax.Array) -> None:
+    def stage_out(bucket: Bucket, buf: jax.Array,
+                  inv_scale: float) -> None:
         """CopyFromTo(recv_buf, g): unscale + cast back + scatter, fused."""
-        inv = 1.0 / loss_scale
         if fused_ok(bucket):
-            coll_ops.fused_unpack(bucket, buf, flat_out, scale=inv)
+            coll_ops.fused_unpack(bucket, buf, flat_out, scale=inv_scale)
             return
-        if loss_scale != 1.0:
-            coll_ops.fused_unpack(bucket, buf, flat_out, scale=inv,
+        if inv_scale != 1.0:
+            coll_ops.fused_unpack(bucket, buf, flat_out, scale=inv_scale,
                                   impl="leafwise")
             return
         unpack(bucket, buf, flat_out)
@@ -295,8 +331,20 @@ def execute(
             return 1.0
         return mean_scale(bucket.reduce_axes, mesh_shape, mean_axes)
 
+    def shard_src(op: CollectiveOp, want: str) -> int:
+        """The dep producing this op's same-bucket shard — deps may also
+        carry chain-ordering edges to other buckets' ops."""
+        srcs = [d for d in op.depends_on if d in shards
+                and by_id[d].bucket.bucket_id == op.bucket.bucket_id]
+        if not srcs:
+            raise ValueError(
+                f"{op.kind} op {op.op_id} has no {want} dep for "
+                f"bucket {op.bucket.bucket_id}")
+        return srcs[0]
+
     tokens: dict[int, jax.Array] = {}       # op_id -> token after that op
-    shards: dict[int, tuple[jax.Array, int]] = {}   # RS op -> (shard, size)
+    shards: dict[int, tuple[jax.Array, int]] = {}   # RS/UPD op -> (shard, n)
+    clip_scales: dict[int, jax.Array] = {}  # NORM op -> clip multiplier
 
     for op in schedule.ops:
         token = _join([tokens[d] for d in op.depends_on])
@@ -307,7 +355,7 @@ def execute(
             send_buf = stage_in(bucket)
             recv_buf, tokens[op.op_id] = emit_gated(
                 send_buf, token, lambda b, _r=red, _bk=bucket: _r(b, _bk))
-            stage_out(bucket, recv_buf)
+            stage_out(bucket, recv_buf, 1.0 / loss_scale)
 
         elif op.kind == REDUCE_SCATTER:
             group = group_of(bucket)
@@ -328,16 +376,51 @@ def execute(
             shard, tokens[op.op_id] = emit_gated(send_buf, token, rs)
             shards[op.op_id] = (shard, n)
 
-        elif op.kind == ALL_GATHER:
-            # the producing RS is the dep with the SAME bucket — deps may
-            # also carry chain-ordering edges to other buckets' ops
-            srcs = [d for d in op.depends_on if d in shards
-                    and by_id[d].bucket.bucket_id == op.bucket.bucket_id]
-            if not srcs:
+        elif op.kind == NORM:
+            # local sum of squares over every producing RS shard (each
+            # gradient element lives in exactly one shard across the
+            # reduce group, so the psum is the true global squared norm).
+            # The shards are still loss-scaled and pre-mean (UPDATE folds
+            # scale_of/loss_scale in later) — undo both here so the norm
+            # and the clip threshold see the TRUE gradients.
+            sq = jnp.float32(0.0)
+            for d in op.depends_on:
+                if d in shards and by_id[d].kind == REDUCE_SCATTER:
+                    s, _ = shards[d]
+                    g_scale = scale_of(by_id[d].bucket) / loss_scale
+                    sq = sq + g_scale * g_scale * jnp.sum(
+                        jnp.square(s.astype(jnp.float32)))
+            red, tokens[op.op_id] = emit_gated(
+                sq, token,
+                lambda v, _ax=bucket.reduce_axes: jax.lax.psum(v, _ax))
+            norm = jnp.sqrt(red)
+            if clip_norm > 0:
+                clip_scales[op.op_id] = jnp.minimum(
+                    1.0, clip_norm / (norm + 1e-9))
+            if aux is not None:
+                aux["grad_norm"] = norm
+
+        elif op.kind == UPDATE:
+            if update_fn is None:
                 raise ValueError(
-                    f"all_gather op {op.op_id} has no reduce_scatter dep "
-                    f"for bucket {op.bucket.bucket_id}")
-            shard, n = shards[srcs[0]]
+                    f"schedule contains UPDATE op {op.op_id} but no "
+                    f"update_fn was supplied")
+            src = shard_src(op, "reduce_scatter")
+            g_shard, n = shards[src]
+            g_shard = g_shard.astype(jnp.float32)
+            s = scale_of(bucket) / loss_scale   # dp mean + loss unscale
+            if s != 1.0:
+                g_shard = g_shard * s
+            for d in op.depends_on:             # clip on shards, pre-update
+                if d in clip_scales:
+                    g_shard = g_shard * clip_scales[d]
+            upd, tokens[op.op_id] = emit_gated(
+                g_shard, token, lambda v, _op=op: update_fn(_op, v))
+            shards[op.op_id] = (upd, n)
+
+        elif op.kind == ALL_GATHER:
+            src = shard_src(op, "reduce_scatter")
+            shard, n = shards[src]
             group = group_of(bucket)
 
             def ag(b, _bk=bucket, _g=group):
@@ -352,10 +435,15 @@ def execute(
             full, tokens[op.op_id] = emit_gated(shard, token, ag)
             if full.shape[0] != n:
                 full = full[:n]
-            s = scale_of(bucket)
-            if s != 1.0:
-                full = full * s
-            stage_out(bucket, full)
+            if by_id[src].kind == UPDATE:
+                # gathering optimizer updates: the dp mean and loss
+                # unscale were already applied to the grad shard
+                stage_out(bucket, full, 1.0)
+            else:
+                s = scale_of(bucket)
+                if s != 1.0:
+                    full = full * s
+                stage_out(bucket, full, 1.0 / loss_scale)
 
         else:
             raise ValueError(f"unknown op kind {op.kind!r}")

@@ -1,0 +1,229 @@
+"""StepProgram: the WHOLE training step as one scheduled program
+(DESIGN.md §9).
+
+The paper embeds collectives into the training DAG; Shi et al.
+(1805.03812) and MXNET-MPI (1801.03855) model the *parameter update* as
+a schedulable task of the same iteration DAG.  This module extends the
+CommSchedule IR accordingly: the ZeRO-1 optimizer step stops being a
+monolithic post-script and becomes per-bucket
+
+    reduce_scatter(grad bucket k)  →  UPDATE(shard k)  →  all_gather(k)
+
+op triples whose REDUCE_SCATTER dependency structure is planned by the
+SAME registered strategies (funnel / concom / depcha / priority / rsag /
+auto) that plan the gradient sync — so bucket k's shard update overlaps
+bucket k+1's reduce-scatter and earlier buckets' all-gathers, the MXNET
+push/pull overlap extended through the update.
+
+Construction:
+  ``zero1_bucket_plan``   — dp-axes bucket plan over ALL gradient leaves
+      (f32 wire, ids offset past the sync plan's buckets).
+  ``zero1_schedule``      — transform a strategy's base schedule on that
+      plan (allreduce chains, or rsag's RS/AG pairs) into RS→UPDATE→AG
+      triples, with an optional NORM op (scalar psum of local squared
+      norms) gating every UPDATE for global-norm clipping on shards.
+  ``build_step_program``  — splice the sync schedule and the zero1 ops
+      into ONE CommSchedule: each zero1 RS additionally depends on the
+      sync op that produced its leaves (the model-axis psum must land
+      before the dp reduce-scatter consumes it).
+
+Executed by ``repro.core.schedule.execute`` (UPDATE ops call the
+supplied ``update_fn``); costed by ``repro.sim`` (UPDATE = shard-update
+HBM time, NORM = scalar latency-bound allreduce).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core.buckets import Bucket, BucketPlan, make_bucket_plan
+from repro.core.schedule import (
+    ALL_GATHER,
+    NORM,
+    REDUCE_SCATTER,
+    UPDATE,
+    CollectiveOp,
+    CommSchedule,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepProgram:
+    """One schedule for the full step: sync + per-bucket ZeRO-1 ops.
+
+    ``plan`` is the leaf-indexed sync BucketPlan (treedef / num_leaves /
+    base comm dtype — what ``execute`` needs); ``dp_plan`` holds the
+    zero1 dp-axes buckets whose RS/UPDATE/AG triples follow the sync ops
+    in ``schedule``.
+    """
+
+    schedule: CommSchedule
+    plan: BucketPlan
+    dp_plan: BucketPlan
+    dp_axes: tuple[str, ...]
+    dp_size: int
+    clip: bool
+    num_sync_ops: int
+
+    def stats(self) -> dict[str, Any]:
+        return self.schedule.stats()
+
+
+def zero1_bucket_plan(
+    grads_like: Any,
+    param_specs: Any,
+    mesh,
+    *,
+    dp_axes: tuple[str, ...],
+    bucket_bytes: int = 4 * 1024 * 1024,
+    num_channels: int = 1,
+    id_offset: int = 0,
+) -> BucketPlan:
+    """Bucket ALL gradient leaves by their data-parallel reduce axes.
+
+    The wire dtype is pinned to f32 (per-bucket ``comm_dtype`` override)
+    so the shard-update math matches the monolithic zero1 optimizer
+    bit-for-bit regardless of the sync schedule's comm dtype; bucket ids
+    are offset past the sync plan's so the two coexist in one schedule.
+    """
+    axis_names = tuple(mesh.axis_names)
+    exclude = tuple(a for a in axis_names if a not in dp_axes)
+    raw = make_bucket_plan(
+        grads_like, param_specs, mesh,
+        bucket_bytes=bucket_bytes, num_channels=num_channels,
+        comm_dtype=jnp.float32, exclude_axes=exclude)
+    covered = {l.index for b in raw.buckets for l in b.leaves}
+    if len(covered) != raw.num_leaves:
+        raise ValueError(
+            f"ZeRO-1 StepProgram requires every parameter replicated "
+            f"over the dp axes {dp_axes} (got {len(covered)} of "
+            f"{raw.num_leaves} leaves dp-reducible — params already "
+            f"sharded over {dp_axes}, e.g. FSDP, keep their own storage)")
+    buckets = tuple(
+        dataclasses.replace(
+            b,
+            bucket_id=b.bucket_id + id_offset,
+            comm_dtype=jnp.float32,
+            leaves=tuple(dataclasses.replace(l, dtype=jnp.float32)
+                         for l in b.leaves))
+        for b in raw.buckets)
+    return BucketPlan(buckets=buckets, treedef=raw.treedef,
+                      num_leaves=raw.num_leaves, comm_dtype=jnp.float32)
+
+
+def _zero1_ops(
+    base: CommSchedule,
+    *,
+    dp_axes: tuple[str, ...],
+    clip: bool,
+    start_op_id: int,
+    chain_offset: int,
+    leaf_deps,
+) -> list[CollectiveOp]:
+    """Rewrite a base strategy schedule into RS→UPDATE→AG triples.
+
+    The base schedule was planned on the dp bucket plan by any
+    registered strategy: allreduce chains (funnel/concom/depcha/
+    priority) or RS/AG pairs (rsag).  Chain-ordering edges land on the
+    REDUCE_SCATTER ops only — updates and all-gathers free-fly behind
+    their own data deps, which is exactly the pipelining the paper's
+    dependency-chain design buys the sync half of the step.
+    """
+    heads = [op for op in base.ops if op.kind != ALL_GATHER]
+    rs_of: dict[int, int] = {}          # base op_id -> new RS op_id
+    ops: list[CollectiveOp] = []
+    oid = start_op_id
+
+    for bop in heads:                   # RS block (chains preserved)
+        deps = tuple(rs_of[d] for d in bop.depends_on if d in rs_of)
+        extra = leaf_deps(bop.bucket)
+        deps = tuple(dict.fromkeys(extra + deps))
+        ops.append(CollectiveOp(
+            op_id=oid, bucket=bop.bucket, chain=bop.chain + chain_offset,
+            depends_on=deps, kind=REDUCE_SCATTER))
+        rs_of[bop.op_id] = oid
+        oid += 1
+
+    norm_id: int | None = None
+    if clip and ops:
+        # the global grad norm needs every reduced shard: one scalar
+        # psum op gating all updates (the schedulable form of
+        # clip_by_global_norm under ZeRO sharding)
+        norm_bucket = Bucket(
+            leaves=(), reduce_axes=tuple(dp_axes),
+            channel=max((op.chain for op in ops), default=chain_offset) + 1,
+            bucket_id=max(op.bucket.bucket_id for op in ops) + 1,
+            comm_dtype=jnp.float32)
+        norm_id = oid
+        ops.append(CollectiveOp(
+            op_id=oid, bucket=norm_bucket, chain=norm_bucket.channel,
+            depends_on=tuple(rs_of.values()), kind=NORM))
+        oid += 1
+
+    for bop in heads:                   # UPDATE + AG per bucket
+        rs_id = rs_of[bop.op_id]
+        upd_deps = (rs_id,) + ((norm_id,) if norm_id is not None else ())
+        ops.append(CollectiveOp(
+            op_id=oid, bucket=bop.bucket, chain=bop.chain + chain_offset,
+            depends_on=upd_deps, kind=UPDATE))
+        ops.append(CollectiveOp(
+            op_id=oid + 1, bucket=bop.bucket,
+            chain=bop.chain + chain_offset,
+            depends_on=(oid,), kind=ALL_GATHER))
+        oid += 2
+    return ops
+
+
+def zero1_schedule(
+    base: CommSchedule,
+    *,
+    dp_axes: tuple[str, ...],
+    clip: bool = False,
+) -> CommSchedule:
+    """The zero1 RS→UPDATE→AG program alone (no sync ops) — what the
+    simulator and autotuner rank."""
+    ops = _zero1_ops(base, dp_axes=dp_axes, clip=clip, start_op_id=0,
+                     chain_offset=0, leaf_deps=lambda bucket: ())
+    return CommSchedule(tuple(ops)).validate()
+
+
+def build_step_program(
+    sync_schedule: CommSchedule,
+    sync_plan: BucketPlan,
+    base: CommSchedule,
+    dp_plan: BucketPlan,
+    *,
+    dp_axes: tuple[str, ...],
+    dp_size: int,
+    clip: bool = False,
+) -> StepProgram:
+    """Splice sync ops and zero1 RS→UPDATE→AG ops into one schedule.
+
+    Each zero1 reduce-scatter depends on the LAST sync op touching any
+    of its leaves (the model-axis psum result is what the dp RS
+    consumes); leaves with no sync op (TP-sharded params whose only
+    reduction IS the dp one) start as soon as their chain allows.
+    """
+    sync_ops = sync_schedule.ops
+    n_sync = len(sync_ops)
+    chain_offset = (max(op.chain for op in sync_ops) + 1) if sync_ops else 0
+
+    last_touch: dict[str, int] = {}
+    for op in sync_ops:
+        for leaf in op.bucket.leaves:
+            last_touch[leaf.name] = op.op_id
+
+    def leaf_deps(bucket: Bucket) -> tuple[int, ...]:
+        return tuple(sorted({last_touch[l.name] for l in bucket.leaves
+                             if l.name in last_touch}))
+
+    zops = _zero1_ops(base, dp_axes=dp_axes, clip=clip,
+                      start_op_id=n_sync, chain_offset=chain_offset,
+                      leaf_deps=leaf_deps)
+    schedule = CommSchedule(tuple(sync_ops) + tuple(zops)).validate()
+    return StepProgram(
+        schedule=schedule, plan=sync_plan, dp_plan=dp_plan,
+        dp_axes=tuple(dp_axes), dp_size=dp_size, clip=clip,
+        num_sync_ops=n_sync)

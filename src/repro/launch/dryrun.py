@@ -19,6 +19,7 @@ one CPU core; a crash loses nothing).  Usage:
 """
 
 import argparse
+import dataclasses
 import json
 import re
 import time
@@ -111,7 +112,7 @@ def _lower_for(arch, cfg, shape, mesh, sync, api, rules, step_kw=None):
     dp = dp_axes_of(mesh)
     params_sds = param_structs(cfg)
     pspecs = rules.tree_specs(params_sds)
-    step_kw = step_kw or {}
+    step_kw = dict(step_kw or {})
     if shape.kind == "train":
         if arch.family in ("resnet", "inception"):
             batch_sds = image_input_specs(cfg, shape)
@@ -119,13 +120,21 @@ def _lower_for(arch, cfg, shape, mesh, sync, api, rules, step_kw=None):
         else:
             batch_sds = train_input_specs(arch, cfg, shape)
             opt = adamw(3e-4)
+        if step_kw.pop("zero1", False):
+            # ZeRO-1 dry-run: the compiled program carries the
+            # StepProgram's RS→UPDATE→AG ops (or the monolithic pair)
+            from repro.optim import zero1 as _zero1
+
+            dp_size = int(np.prod([mesh.shape[a] for a in dp])) or 1
+            opt = _zero1(opt, tuple(dp), dp_size)
+            sync = dataclasses.replace(sync, exclude_axes=tuple(dp))
+            step_kw["zero1_mode"] = True
         # donate=True matches production: the AOT memory_analysis then
         # reports the aliased (in-place params/opt_state) footprint
         ts = make_train_step(cfg, mesh, sync, opt,
                              batch_like=batch_sds, params_like=params_sds,
                              donate=True, **step_kw)
-        opt_sds = jax.eval_shape(opt.init, params_sds)
-        args = (params_sds, opt_sds, batch_sds,
+        args = (params_sds, ts.opt_state_like, batch_sds,
                 jax.ShapeDtypeStruct((), jnp.int32))
         lowered = ts.fn.lower(*args)
     elif shape.kind == "prefill":
@@ -196,8 +205,16 @@ def _lower_for(arch, cfg, shape, mesh, sync, api, rules, step_kw=None):
     return lowered
 
 
-def _cost_record(compiled) -> dict:
+def _cost(compiled):
     cost = compiled.cost_analysis()
+    # jax<0.5 returns a per-device list of dicts; newer jax a single dict
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return cost
+
+
+def _cost_record(compiled) -> dict:
+    cost = _cost(compiled)
     hlo = compiled.as_text()
     colls = collective_stats(hlo)
     return {
@@ -228,7 +245,7 @@ def lower_cell(arch_id: str, shape_name: str, mesh, *,
     sync = sync or GradSyncConfig(strategy="depcha", num_channels=4)
     over = dict(overrides or {})
     step_kw = {}
-    for k in ("microbatch",):
+    for k in ("microbatch", "zero1", "zero1_plan", "clip_norm"):
         if k in over:
             step_kw[k] = over.pop(k)
     base_cfg_probe = arch.make_config(tp=tp, dp_axes=dp)
@@ -246,7 +263,7 @@ def lower_cell(arch_id: str, shape_name: str, mesh, *,
     t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost(compiled)
     hlo = compiled.as_text()
     colls = collective_stats(hlo)
 
@@ -333,6 +350,10 @@ def main():
     ap.add_argument("--bucket-mb", type=float, default=4.0)
     ap.add_argument("--comm-dtype", default="f32", choices=["f32", "bf16"])
     ap.add_argument("--channels", type=int, default=4)
+    ap.add_argument("--zero1", action="store_true",
+                    help="compile train cells with the ZeRO-1 optimizer")
+    ap.add_argument("--zero1-plan", default="scheduled",
+                    choices=["scheduled", "monolithic"])
     ap.add_argument("--out", default="results/dryrun.json")
     ap.add_argument("--tag", default="")
     ap.add_argument("--override", action="append", default=[],
@@ -347,6 +368,9 @@ def main():
         except json.JSONDecodeError:
             pass
         overrides[k] = v
+    if args.zero1:
+        overrides["zero1"] = True
+        overrides["zero1_plan"] = args.zero1_plan
 
     sync = GradSyncConfig(
         strategy=args.strategy, reducer=args.reducer,

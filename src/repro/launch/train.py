@@ -43,6 +43,12 @@ def main():
     ap.add_argument("--channels", type=int, default=4)
     ap.add_argument("--bucket-mb", type=float, default=4.0)
     ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--zero1-plan", default="scheduled",
+                    choices=["scheduled", "monolithic"],
+                    help="scheduled = StepProgram (per-bucket RS→UPDATE→"
+                         "AG planned by the strategy, clipped via the "
+                         "NORM op); monolithic = opaque optimizer.update")
+    ap.add_argument("--clip-norm", type=float, default=1.0)
     ap.add_argument("--microbatch", type=int, default=1)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--smoke", action="store_true",
@@ -97,13 +103,18 @@ def main():
     # Smoke runs keep donation off so the host copies stay comparable.
     ts = make_train_step(cfg, mesh, sync, opt,
                          batch_like=pipe.batch_at(0), params_like=params,
+                         clip_norm=args.clip_norm,
                          zero1_mode=args.zero1,
+                         zero1_plan=args.zero1_plan,
                          microbatch=args.microbatch,
                          donate=not args.smoke)
     ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) \
         if args.ckpt_dir else None
     trainer = Trainer(ts, pipe, ckpt, log_every=10)
-    _, _, hist = trainer.run(params, opt.init(params), args.steps)
+    # init_opt derives zero1 shard sizes from the step's LOCAL shapes
+    # (opt.init on global TP-sharded params would size them wrong)
+    opt_state = ts.init_opt() if args.zero1 else opt.init(params)
+    _, _, hist = trainer.run(params, opt_state, args.steps)
     print(f"[train] {args.arch} {args.strategy}: "
           f"loss {hist['losses'][0]:.3f} -> {hist['losses'][-1]:.3f}")
 

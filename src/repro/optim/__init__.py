@@ -10,7 +10,12 @@ from repro.optim.schedules import (
     cosine_warmup,
     linear_scaling_rule,
 )
-from repro.optim.zero import zero1
+from repro.optim.zero import (
+    scheduled_update,
+    shard_size,
+    zero1,
+    zero1_state_structs,
+)
 
 __all__ = [
     "Optimizer",
@@ -20,6 +25,9 @@ __all__ = [
     "constant_lr",
     "cosine_warmup",
     "linear_scaling_rule",
+    "scheduled_update",
     "sgd",
+    "shard_size",
     "zero1",
+    "zero1_state_structs",
 ]

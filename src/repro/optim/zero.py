@@ -1,5 +1,6 @@
-"""ZeRO-1: reduce-scatter gradient sync + sharded optimizer state +
-all-gather of updates (beyond-paper lever; DESIGN.md §3).
+"""ZeRO-1 on the CommSchedule IR: reduce-scatter gradient sync + sharded
+optimizer state + all-gather of updates (beyond-paper lever; DESIGN.md
+§3, §9).
 
 Wire cost per step and DP group of size n (bytes of gradient G):
   flat allreduce:       2G(n-1)/n        (the paper's scheme)
@@ -9,10 +10,20 @@ Wire cost per step and DP group of size n (bytes of gradient G):
                          the same DAG slot — so the *collective schedule*
                          strategies apply unchanged.
 
-Implementation: all gradients are flattened into one fp32 buffer, padded
-to n; ``psum_scatter`` gives each DP rank its 1/n shard; the inner
-optimizer updates the shard (state is shard-sized); ``all_gather``
-rebuilds the full update vector.
+Two execution shapes, both riding ``repro.core.schedule.execute`` (this
+module emits NO raw ``psum_scatter``/``all_gather`` of its own):
+
+  monolithic — ``zero1(...)`` wraps an inner optimizer whose ``update``
+      packs every gradient leaf into ONE f32 bucket and runs a 3-op
+      RS→UPDATE→AG CommSchedule through the shared emitter.  Drop-in
+      ``Optimizer`` API; the whole step still serializes behind one
+      collective pair.
+  scheduled  — the StepProgram path (``repro.core.stepprogram``):
+      GradSync plans per-bucket RS→UPDATE→AG triples with the registered
+      strategies, and ``scheduled_update`` below supplies the per-bucket
+      shard math (param shard slice + inner update + state carry) that
+      the executor's UPDATE ops call.  Bucket k's update overlaps bucket
+      k+1's reduce-scatter; bit-exact with the monolithic path.
 """
 from __future__ import annotations
 
@@ -22,69 +33,150 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.buckets import Bucket, BucketPlan, LeafInfo, pack
+from repro.core.schedule import (
+    ALL_GATHER,
+    REDUCE_SCATTER,
+    UPDATE,
+    CollectiveOp,
+    CommSchedule,
+    execute,
+)
 from repro.optim.optimizers import Optimizer
+from repro.utils.trees import flatten_with_names
 
 
-def _flatten(tree: Any) -> tuple[jax.Array, list]:
-    leaves = jax.tree.leaves(tree)
-    flat = jnp.concatenate(
-        [jnp.ravel(l).astype(jnp.float32) for l in leaves])
-    return flat, leaves
+def _leaf_size(leaf) -> int:
+    return int(np.prod(leaf.shape)) if leaf.shape else 1
 
 
-def _unflatten_like(flat: jax.Array, tree: Any) -> Any:
-    leaves, td = jax.tree_util.tree_flatten(tree)
-    out, off = [], 0
-    for l in leaves:
-        n = int(np.prod(l.shape)) if l.shape else 1
-        out.append(jax.lax.dynamic_slice_in_dim(flat, off, n, 0)
-                   .reshape(l.shape).astype(jnp.float32))
-        off += n
-    return jax.tree_util.tree_unflatten(td, out)
+def shard_size(n: int, dp_size: int) -> int:
+    """Per-rank shard of an ``n``-element buffer padded to ``dp_size``."""
+    return (n + (-n) % dp_size) // dp_size
 
 
-def zero1(inner: Optimizer, dp_axes: tuple[str, ...], dp_size: int) -> Optimizer:
+def _dp_index(dp_axes: tuple[str, ...]) -> jax.Array:
+    axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return jax.lax.axis_index(axis)
+
+
+def _param_shard(bucket: Bucket, params_flat, dp_size: int,
+                 n_shard: int) -> jax.Array:
+    """This rank's slice of the bucket's packed (padded) f32 params."""
+    p_buf = pack(bucket, params_flat, jnp.float32)
+    pad = (-p_buf.shape[0]) % dp_size
+    if pad:
+        p_buf = jnp.pad(p_buf, (0, pad))
+    idx = _dp_index(bucket.reduce_axes)
+    return jax.lax.dynamic_slice_in_dim(p_buf, idx * n_shard, n_shard, 0)
+
+
+def zero1(inner: Optimizer, dp_axes: tuple[str, ...], dp_size: int, *,
+          param_specs: Any = None, mesh: Any = None) -> Optimizer:
     """Wrap ``inner`` so state/update math runs on a 1/dp_size shard.
 
     Must run inside shard_map.  The *unreduced* grads go in (the RS is the
     sync); pass strategy-synced grads only with sync disabled for DP axes.
+
+    ``init`` derives the shard size from the LOCAL parameter shapes —
+    the same rule ``TrainStep.init_opt`` uses.  Inside shard_map the
+    params it sees are already local; when calling from the host on
+    GLOBAL (TP-sharded) params, pass ``param_specs``/``mesh`` so the
+    shapes are localized first.
     """
-    axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def _local_sizes(params) -> int:
+        structs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        if param_specs is not None and mesh is not None:
+            from repro.parallel.sharding import localize_structs
+
+            structs = localize_structs(structs, param_specs, mesh)
+        return sum(_leaf_size(l) for l in jax.tree.leaves(structs))
 
     def init(params):
-        """NOTE: valid only when ``params`` has the same (local) shapes the
-        update will see — i.e. dp_size==1 or no TP sharding.  For the
-        general case use ``TrainStep.init_opt`` (runtime/train_loop.py),
-        which builds the sharded flat state from the local shard sizes."""
-        flat, _ = _flatten(params)
-        n = flat.shape[0]
-        pad = (-n) % dp_size
-        shard = (n + pad) // dp_size
-        pseudo = jnp.zeros((shard,), jnp.float32)
-        return {"inner": inner.init(pseudo)}
+        n_shard = shard_size(_local_sizes(params), dp_size)
+        return {"inner": inner.init(jnp.zeros((n_shard,), jnp.float32))}
 
     def update(grads, state, params, step):
-        flat_g, _ = _flatten(grads)
-        flat_p, _ = _flatten(params)
-        n = flat_g.shape[0]            # LOCAL flat size (inside shard_map)
-        pad = (-n) % dp_size
-        if pad:
-            flat_g = jnp.pad(flat_g, (0, pad))
-            flat_p = jnp.pad(flat_p, (0, pad))
-        # (1) reduce-scatter: each rank owns the reduced 1/n shard
-        g_shard = jax.lax.psum_scatter(
-            flat_g, axis, scatter_dimension=0, tiled=True)
-        idx = jax.lax.axis_index(axis)
-        shard = g_shard.shape[0]
-        p_shard = jax.lax.dynamic_slice_in_dim(
-            flat_p, idx * shard, shard, 0)
-        # (2) sharded optimizer math
-        upd_shard, new_inner = inner.update(
-            g_shard, state["inner"], p_shard, step)
-        # (3) all-gather updates
-        flat_u = jax.lax.all_gather(upd_shard, axis, axis=0, tiled=True)
-        flat_u = flat_u[:n] if pad else flat_u
-        updates = _unflatten_like(flat_u, params)
-        return updates, {"inner": new_inner}
+        named, treedef = flatten_with_names(grads)
+        infos = tuple(
+            LeafInfo(name=n, index=i, shape=tuple(l.shape),
+                     dtype=jnp.float32, size=_leaf_size(l))
+            for i, (n, l) in enumerate(named))
+        bucket = Bucket(leaves=infos, reduce_axes=tuple(dp_axes),
+                        channel=0, bucket_id=0, comm_dtype=jnp.float32)
+        plan = BucketPlan(buckets=(bucket,), treedef=treedef,
+                          num_leaves=len(infos), comm_dtype=jnp.float32)
+        schedule = CommSchedule((
+            CollectiveOp(op_id=0, bucket=bucket, chain=0,
+                         kind=REDUCE_SCATTER),
+            CollectiveOp(op_id=1, bucket=bucket, chain=0,
+                         depends_on=(0,), kind=UPDATE),
+            CollectiveOp(op_id=2, bucket=bucket, chain=0,
+                         depends_on=(1,), kind=ALL_GATHER),
+        )).validate()
+        # only the PRODUCT of the axis sizes matters to the emitter (pad
+        # + shard math); the collectives themselves read the real groups
+        # from the enclosing shard_map
+        mesh_shape = {a: 1 for a in dp_axes}
+        mesh_shape[dp_axes[0]] = dp_size
+        params_flat = jax.tree.leaves(params)
+        carry: dict[str, Any] = {}
 
-    return Optimizer(init, update, zero1_meta=(inner, dp_size))
+        def update_fn(op, g_shard):
+            p_shard = _param_shard(op.bucket, params_flat, dp_size,
+                                   g_shard.shape[0])
+            upd, carry["inner"] = inner.update(
+                g_shard, state["inner"], p_shard, step)
+            return upd
+
+        updates = execute(
+            schedule, grads, plan,
+            reducer=lambda b, _bk: b,       # no allreduce ops planned
+            mesh_shape=mesh_shape, update_fn=update_fn)
+        return updates, {"inner": carry["inner"]}
+
+    return Optimizer(init, update,
+                     zero1_meta=(inner, dp_size, tuple(dp_axes)))
+
+
+# ------------------------------------------------- scheduled (StepProgram)
+
+def zero1_state_structs(inner: Optimizer, dp_plan: BucketPlan,
+                        dp_size: int) -> Any:
+    """Local (per-dp-rank) ShapeDtypeStructs of the per-bucket sharded
+    state the scheduled path carries: ``{"inner": {"<k>": state_k}}``
+    with state_k shaped like ``inner.init`` of bucket k's shard."""
+    out = {}
+    for i, b in enumerate(dp_plan.buckets):
+        n_shard = shard_size(b.size, dp_size)
+        out[str(i)] = jax.eval_shape(
+            inner.init, jax.ShapeDtypeStruct((n_shard,), jnp.float32))
+    return {"inner": out}
+
+
+def scheduled_update(inner: Optimizer, dp_plan: BucketPlan, params: Any,
+                     state: Any, step: jax.Array, *, dp_size: int):
+    """The UPDATE-op callback for a StepProgram schedule.
+
+    Returns ``(update_fn, new_state)``: ``update_fn(op, g_shard)`` slices
+    this rank's param shard for the op's bucket, runs the inner
+    optimizer on the reduced gradient shard, records the bucket's new
+    inner state in ``new_state["inner"]`` and returns the update shard
+    (which the schedule's all-gather then materializes).  ``new_state``
+    is complete once every UPDATE op has executed.
+    """
+    params_flat = jax.tree.leaves(params)
+    key_of = {b.bucket_id: str(i) for i, b in enumerate(dp_plan.buckets)}
+    new_state: dict[str, dict] = {"inner": {}}
+
+    def update_fn(op, g_shard):
+        key = key_of[op.bucket.bucket_id]
+        p_shard = _param_shard(op.bucket, params_flat, dp_size,
+                               g_shard.shape[0])
+        upd, ns = inner.update(g_shard, state["inner"][key], p_shard, step)
+        new_state["inner"][key] = ns
+        return upd
+
+    return update_fn, new_state

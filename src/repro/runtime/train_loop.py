@@ -30,6 +30,11 @@ from repro.optim.optimizers import (
     apply_updates,
     clip_by_global_norm,
 )
+from repro.optim.zero import (
+    scheduled_update,
+    shard_size,
+    zero1_state_structs,
+)
 from repro.parallel.sharding import batch_spec, dp_axes_of
 
 
@@ -97,6 +102,7 @@ def make_train_step(
     params_like: Any,
     clip_norm: float = 1.0,
     zero1_mode: bool = False,
+    zero1_plan: str = "scheduled",  # "scheduled" (StepProgram) | "monolithic"
     microbatch: int = 1,    # grad-accumulation factor (memory §Perf lever)
     donate: bool = False,   # enable in production (launcher); off for tests
 ) -> TrainStep:
@@ -104,6 +110,15 @@ def make_train_step(
 
     ``batch_like``/``params_like`` may be ShapeDtypeStructs (dry-run) or
     concrete arrays (training) — only shapes/dtypes are read here.
+
+    With a zero1-wrapped optimizer, ``zero1_plan="scheduled"`` (default)
+    plans the optimizer step as first-class CommSchedule ops: per-bucket
+    RS→UPDATE→AG triples planned by the configured strategy, spliced
+    after the sync ops in ONE StepProgram schedule (DESIGN.md §9), with
+    gradient clipping as a scheduled NORM op (psum'd squared norms, clip
+    on shards before the update).  ``"monolithic"`` keeps the optimizer
+    opaque: one flat RS→update→AG after the full sync (no clipping —
+    grads are still DP-partial when a norm could be taken locally).
     """
     api = family_of(cfg)
     rules = api.param_rules(cfg)
@@ -111,27 +126,11 @@ def make_train_step(
     bspecs = _batch_specs(batch_like, mesh)
     tp = getattr(cfg, "tp", 1)
     dp = dp_axes_of(mesh)
-
-    if getattr(optimizer, "zero1_meta", None):
-        # ZeRO-1: flat shard size derives from LOCAL param shapes
-        from repro.parallel.sharding import localize_structs as _loc
-        inner_opt, dp_size = optimizer.zero1_meta
-        local_p = _loc(jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params_like),
-            pspecs, mesh)
-        n_local = sum(int(np.prod(l.shape)) for l in
-                      jax.tree.leaves(local_p))
-        shard = (n_local + (-n_local) % dp_size) // dp_size
-        inner_like = jax.eval_shape(
-            inner_opt.init, jax.ShapeDtypeStruct((shard,), jnp.float32))
-        # global view: each flat leaf is dp-sharded on dim 0
-        opt_state_like = {"inner": jax.tree.map(
-            lambda l: jax.ShapeDtypeStruct((l.shape[0] * dp_size,
-                                            *l.shape[1:]), l.dtype),
-            inner_like)}
-    else:
-        opt_state_like = jax.eval_shape(optimizer.init, params_like)
-    ospecs = _opt_state_specs(opt_state_like, params_like, pspecs, mesh)
+    if zero1_plan not in ("scheduled", "monolithic"):
+        raise ValueError(f"unknown zero1_plan {zero1_plan!r}")
+    zmeta = getattr(optimizer, "zero1_meta", None)
+    zero1_scheduled = bool(zmeta) and zero1_mode \
+        and zero1_plan == "scheduled"
 
     # skip leaves from the post-backward schedule ONLY when the model is
     # actually emitting their psums inside the backward scan — otherwise
@@ -145,7 +144,32 @@ def make_train_step(
         jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                      params_like),
         pspecs, mesh)
+    if zero1_scheduled:
+        sync = dataclasses.replace(
+            sync, exclude_axes=tuple(dp), zero1_dp_axes=tuple(dp),
+            zero1_clip=bool(clip_norm))
     gs = GradSync(sync, mesh, pspecs, grads_local, in_scan_names=in_scan)
+
+    if zmeta:
+        inner_opt, dp_size, _ = zmeta
+        if zero1_scheduled:
+            local_like = zero1_state_structs(inner_opt, gs.dp_plan, dp_size)
+        else:
+            # monolithic ZeRO-1: ONE flat shard sized from LOCAL params
+            n_local = sum(int(np.prod(l.shape)) for l in
+                          jax.tree.leaves(grads_local))
+            local_like = {"inner": jax.eval_shape(
+                inner_opt.init,
+                jax.ShapeDtypeStruct((shard_size(n_local, dp_size),),
+                                     jnp.float32))}
+        # global view: each local leaf is dp-sharded on dim 0
+        opt_state_like = {"inner": jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((l.shape[0] * dp_size,
+                                            *l.shape[1:]), l.dtype),
+            local_like["inner"])}
+    else:
+        opt_state_like = jax.eval_shape(optimizer.init, params_like)
+    ospecs = _opt_state_specs(opt_state_like, params_like, pspecs, mesh)
 
     def step(params, opt_state, batch, step_idx):
         if microbatch > 1:
@@ -180,19 +204,32 @@ def make_train_step(
                 lambda p: api.train_forward(p, batch, cfg))(params)
         if tp > 1:   # psum-transpose inflation (module docstring)
             grads = jax.tree.map(lambda g: g / tp, grads)
-        # zero1_mode: sync.exclude_axes=dp — buckets then carry only the
-        # model-axis reductions; the DP sum happens in zero1's
-        # reduce-scatter inside optimizer.update.
-        grads = gs(grads)
-        if clip_norm and not zero1_mode:
-            # (zero1: grads are still DP-partial here — the local norm
-            # would differ per rank; clip inside the sharded update
-            # instead if needed)
-            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        if zero1_scheduled:
+            # StepProgram: ONE schedule carries the model-axis sync ops
+            # AND the per-bucket zero1 RS→UPDATE→AG triples; clipping is
+            # the scheduled NORM op (psum'd squared shard norms, applied
+            # to the grad shards before each update)
+            update_fn, new_state = scheduled_update(
+                inner_opt, gs.dp_plan, params, opt_state, step_idx,
+                dp_size=dp_size)
+            aux: dict = {}
+            updates = gs(grads, update_fn=update_fn,
+                         clip_norm=float(clip_norm or 0.0), aux=aux)
+            opt_state = new_state
+            gnorm = aux.get("grad_norm", jnp.float32(0.0))
         else:
-            gnorm = jnp.float32(0.0)
-        updates, opt_state = optimizer.update(
-            grads, opt_state, params, step_idx)
+            # zero1_mode (monolithic): sync.exclude_axes=dp — buckets
+            # carry only the model-axis reductions; the DP sum happens
+            # in zero1's reduce-scatter inside optimizer.update.
+            grads = gs(grads)
+            if clip_norm and not zero1_mode:
+                # (monolithic zero1: grads are still DP-partial here —
+                # use zero1_plan="scheduled" for clipped ZeRO training)
+                grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            else:
+                gnorm = jnp.float32(0.0)
+            updates, opt_state = optimizer.update(
+                grads, opt_state, params, step_idx)
         params = apply_updates(params, updates)
         loss = jax.lax.psum(loss, dp) if dp else loss
         metrics = {"loss": loss, "grad_norm": gnorm}

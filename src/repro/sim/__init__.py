@@ -16,9 +16,11 @@ delegating to the predicted winner.
 """
 from repro.sim.autotune import (
     Prediction,
+    flat_step_schedule,
     grid_search,
     last_auto_report,
     plan_auto,
+    rank_step_plans,
     rank_strategies,
     sim_config_for,
     simulate_strategy,
@@ -27,6 +29,7 @@ from repro.sim.compute import (
     ComputeModel,
     HardwareModel,
     StagingModel,
+    UpdateModel,
     compute_model_for,
     count_params,
     fwd_flops,
@@ -52,16 +55,19 @@ __all__ = [
     "SimConfig",
     "StagingModel",
     "Timeline",
+    "UpdateModel",
     "ascii_timeline",
     "chrome_trace",
     "chrome_trace_events",
     "compute_model_for",
     "count_params",
     "default_network",
+    "flat_step_schedule",
     "fwd_flops",
     "grid_search",
     "last_auto_report",
     "plan_auto",
+    "rank_step_plans",
     "rank_strategies",
     "sim_config_for",
     "simulate",

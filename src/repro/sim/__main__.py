@@ -32,6 +32,7 @@ from repro.sim import (
     grid_search,
     last_auto_report,
     plan_auto,
+    rank_step_plans,
     simulate,
     simulate_strategy,
     write_chrome_trace,
@@ -71,6 +72,13 @@ def main():
                          "per-leaf pack/unpack")
     ap.add_argument("--autotune", action="store_true",
                     help="grid-search strategy × channels × bucket size")
+    ap.add_argument("--zero1", action="store_true",
+                    help="simulate the full-step ZeRO-1 StepProgram "
+                         "(per-bucket RS→UPDATE→AG) vs the flat "
+                         "allreduce + monolithic update baseline")
+    ap.add_argument("--clip", action="store_true",
+                    help="with --zero1: plan the scheduled grad-norm "
+                         "NORM op gating the updates")
     ap.add_argument("--trace", default="",
                     help="write a Chrome-trace JSON of all timelines")
     ap.add_argument("--ascii", action="store_true",
@@ -147,6 +155,37 @@ def main():
           f"fused {both['fused'].step_time * 1e3:.3f} ms/step vs "
           f"leafwise {both['leafwise'].step_time * 1e3:.3f} ms/step "
           f"(Δ {(both['leafwise'].step_time - both['fused'].step_time) * 1e6:.1f} us)")
+
+    if args.zero1:
+        # the full-step StepProgram: zero1 RS→UPDATE→AG triples planned
+        # by each strategy vs that strategy's flat allreduce + ONE
+        # monolithic update (same wire bytes, unsharded + unoverlapped
+        # update) — UPDATE/NORM ops costed by the engine
+        from repro.core.stepprogram import zero1_bucket_plan
+
+        dp = dp_axes_of(mesh)
+        if not dp:
+            raise SystemExit("[sim] --zero1 needs a data-parallel axis")
+        dp_plan = zero1_bucket_plan(
+            params_sds, pspecs, mesh, dp_axes=dp,
+            bucket_bytes=int(args.bucket_mb * 1024 * 1024),
+            num_channels=args.channels)
+        ranked = rank_step_plans(
+            dp_plan, mesh_shape, dp_axes=dp, clip=args.clip,
+            compute=compute, sim=sim)
+        print("step_plan,ops,update_ops,step_ms,exposed_ms,overlap_pct")
+        for name, tl in ranked:
+            ups = sum(1 for e in tl.events if e.kind == "update")
+            print(f"{name},{len(tl.events)},{ups},"
+                  f"{tl.step_time * 1e3:.3f},"
+                  f"{tl.exposed_comm * 1e3:.3f},"
+                  f"{tl.overlap_fraction * 100:.1f}")
+            timelines[name] = tl
+        best_z = next(t for n, t in ranked if n.startswith("zero1:"))
+        best_f = next(t for n, t in ranked if n.startswith("flat:"))
+        print(f"[sim] zero1-scheduled {best_z.step_time * 1e3:.3f} ms/step"
+              f" vs flat+monolithic {best_f.step_time * 1e3:.3f} ms/step "
+              f"(Δ {(best_f.step_time - best_z.step_time) * 1e6:.1f} us)")
 
     if args.ascii:
         best = report["winner"]

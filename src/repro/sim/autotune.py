@@ -27,13 +27,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Mapping, Sequence
 
-from repro.core.buckets import BucketPlan, make_bucket_plan
+from repro.core.buckets import Bucket, BucketPlan, make_bucket_plan
 from repro.core.registry import (
     fixed_strategy_names,
     get_strategy,
     register_strategy,
 )
-from repro.core.schedule import CommSchedule
+from repro.core.schedule import UPDATE, CollectiveOp, CommSchedule
+from repro.core.stepprogram import zero1_schedule
 
 from repro.sim.compute import ComputeModel
 from repro.sim.engine import SimConfig, Timeline, simulate
@@ -85,15 +86,95 @@ def rank_strategies(
     skip_names: frozenset[str] = frozenset(),
     strategies: Sequence[str] | None = None,
     in_scan_active: bool = True,
+    zero1: Mapping[str, Any] | None = None,
 ) -> list[tuple[str, Timeline]]:
-    """Every fixed strategy's predicted timeline, best first."""
+    """Every fixed strategy's predicted timeline, best first.
+
+    With ``zero1`` ({"dp_axes": ..., "clip": ...}) each candidate's plan
+    is first rewritten into the StepProgram's RS→UPDATE→AG triples
+    (``repro.core.stepprogram.zero1_schedule``) so the ranking prices
+    the *whole step* — shard updates and all-gathers included — not just
+    the gradient sync half.
+    """
     names = tuple(strategies) if strategies else fixed_strategy_names()
     out = []
     for name in names:
-        _, tl = simulate_strategy(
-            name, plan, mesh_shape, compute=compute, net=net, sim=sim,
-            skip_names=skip_names, in_scan_active=in_scan_active)
+        if zero1 is not None:
+            base = get_strategy(name).plan(plan, skip_names=skip_names)
+            schedule = zero1_schedule(
+                base, dp_axes=tuple(zero1["dp_axes"]),
+                clip=bool(zero1.get("clip", False)))
+            tl = simulate(
+                schedule, mesh_shape, compute=compute, net=net,
+                sim=sim_config_for(name, sim,
+                                   in_scan_active=in_scan_active))
+        else:
+            _, tl = simulate_strategy(
+                name, plan, mesh_shape, compute=compute, net=net, sim=sim,
+                skip_names=skip_names, in_scan_active=in_scan_active)
         out.append((name, tl))
+    out.sort(key=lambda p: (p[1].step_time, p[0]))
+    return out
+
+
+def flat_step_schedule(
+    plan: BucketPlan,
+    strategy: str = "concom",
+    *,
+    skip_names: frozenset[str] = frozenset(),
+) -> CommSchedule:
+    """The monolithic baseline the StepProgram replaces: the strategy's
+    allreduce schedule followed by ONE full-buffer UPDATE op that waits
+    on every sync op (the opaque ``optimizer.update`` post-script)."""
+    base = get_strategy(strategy).plan(plan, skip_names=skip_names)
+    ops = list(base.ops)
+    if not ops:
+        return base
+    tails = {op.op_id for op in ops}
+    for op in ops:
+        tails -= set(op.depends_on)
+    all_leaves = tuple(l for op in ops for l in op.bucket.leaves)
+    full = Bucket(leaves=all_leaves, reduce_axes=(),
+                  channel=max(op.chain for op in ops) + 1,
+                  bucket_id=max(op.bucket.bucket_id for op in ops) + 1,
+                  comm_dtype=ops[0].bucket.comm_dtype)
+    ops.append(CollectiveOp(
+        op_id=max(op.op_id for op in ops) + 1, bucket=full,
+        chain=full.channel, depends_on=tuple(sorted(tails)), kind=UPDATE))
+    return CommSchedule(tuple(ops)).validate()
+
+
+def rank_step_plans(
+    dp_plan: BucketPlan,
+    mesh_shape: Mapping[str, int],
+    *,
+    dp_axes: tuple[str, ...],
+    clip: bool = False,
+    compute: ComputeModel | None = None,
+    net: NetworkModel | None = None,
+    sim: SimConfig | None = None,
+    strategies: Sequence[str] | None = None,
+) -> list[tuple[str, Timeline]]:
+    """ZeRO-1-scheduled vs flat(+monolithic update) step plans, ranked.
+
+    Rows are labelled ``zero1:<strategy>`` (per-bucket RS→UPDATE→AG
+    triples) and ``flat:<strategy>`` (the strategy's allreduce schedule
+    + one full-buffer update) — the comparison the StepProgram exists to
+    win: same wire bytes, but the update is sharded AND overlapped.
+    """
+    names = tuple(strategies) if strategies else fixed_strategy_names()
+    out: list[tuple[str, Timeline]] = []
+    for name in names:
+        base = get_strategy(name).plan(dp_plan)
+        zs = zero1_schedule(base, dp_axes=tuple(dp_axes), clip=clip)
+        scfg = sim_config_for(name, sim, in_scan_active=False)
+        out.append((f"zero1:{name}",
+                    simulate(zs, mesh_shape, compute=compute, net=net,
+                             sim=scfg)))
+        fs = flat_step_schedule(dp_plan, name)
+        out.append((f"flat:{name}",
+                    simulate(fs, mesh_shape, compute=compute, net=net,
+                             sim=scfg)))
     out.sort(key=lambda p: (p[1].step_time, p[0]))
     return out
 
@@ -130,13 +211,20 @@ def plan_auto(
     """Plan by simulation: run every fixed candidate through the
     discrete-event engine on this exact BucketPlan, return the winner's
     schedule.  ``context`` (supplied by GradSync for meta strategies)
-    carries mesh_shape / reducer / itemsize / an optional ComputeModel."""
+    carries mesh_shape / reducer / itemsize / an optional ComputeModel.
+
+    When GradSync is planning a ZeRO-1 StepProgram it adds a ``zero1``
+    mapping ({"dp_axes", "dp_size", "clip"}) — the candidates are then
+    ranked as their rewritten RS→UPDATE→AG step programs (UPDATE ops
+    costed), so ``auto`` picks the strategy whose *zero1-scheduled*
+    whole-step timeline wins, not the one whose plain sync would."""
     ctx = dict(context or {})
     mesh_shape = ctx.get("mesh_shape") or {
         a: 8 for b in plan.buckets for a in b.reduce_axes}
     reducer = ctx.get("reducer", "flat")
     sim = SimConfig(itemsize=int(ctx.get("itemsize", 4)), reducer=reducer,
                     fused_staging=bool(ctx.get("fused_staging", True)))
+    zero1 = ctx.get("zero1")
     # in-scan psums are keyed on the CONFIGURED strategy, so a delegated
     # depcha runs as plain chains — rank it with the semantics the
     # delegated execution can actually realize (in-scan only counts when
@@ -144,13 +232,16 @@ def plan_auto(
     ranked = rank_strategies(
         plan, mesh_shape,
         compute=ctx.get("compute"), net=ctx.get("net"), sim=sim,
-        skip_names=skip_names, strategies=_candidates(reducer),
-        in_scan_active=bool(skip_names))
+        skip_names=skip_names,
+        strategies=fixed_strategy_names() if zero1 is not None
+        else _candidates(reducer),
+        in_scan_active=bool(skip_names), zero1=zero1)
     winner = ranked[0][0]
     _LAST_AUTO.clear()
     _LAST_AUTO.update({
         "winner": winner,
         "ranking": [(n, tl.step_time) for n, tl in ranked],
+        "zero1": zero1 is not None,
     })
     return get_strategy(winner).plan(plan, skip_names=skip_names)
 

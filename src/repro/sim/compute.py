@@ -68,12 +68,33 @@ class StagingModel:
 
 
 @dataclasses.dataclass(frozen=True)
+class UpdateModel:
+    """HBM cost of one scheduled optimizer UPDATE op (DESIGN.md §9).
+
+    The sharded update is pure elementwise math: read the gradient
+    shard, the param shard and the optimizer moments, write the update
+    and the new moments — ~7 passes over the shard for AdamW-class
+    optimizers — plus a dispatch overhead.  ZeRO-1 shrinks the shard by
+    the dp group size, which is exactly what this model prices against
+    the monolithic full-buffer update.
+    """
+
+    hbm_bw: float = 819e9        # bytes/s (same v5e source as staging)
+    passes: float = 7.0          # g, p, m, v reads + u, m, v writes
+    overhead: float = 2e-6       # per-op dispatch/launch cost
+
+    def update_time(self, shard_bytes: float) -> float:
+        return self.passes * shard_bytes / self.hbm_bw + self.overhead
+
+
+@dataclasses.dataclass(frozen=True)
 class ComputeModel:
     """Step-level compute durations + bucket release-time policy."""
 
     t_fwd: float
     t_bwd: float
     n_stages: int = 1        # backward scan steps (layers); release grain
+    update: UpdateModel = UpdateModel()   # UPDATE-op (shard math) cost
 
     def bucket_release_times(
         self,

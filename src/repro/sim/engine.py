@@ -12,7 +12,13 @@ For in-scan strategies (depcha) the chain edges are dropped and releases
 snap to scan-step boundaries: each layer's psum is emitted inside the
 backward scan, gated only by the scan itself — ``drop_chain_deps`` +
 ``per_stage_release`` in ``SimConfig`` (cross-bucket edges vanish;
-same-bucket RS→AG edges always survive, they are data deps).
+same-bucket data edges — RS→UPDATE→AG, and every NORM edge — always
+survive).
+
+StepProgram kinds (DESIGN.md §9) are costed too: an UPDATE op prices
+the sharded optimizer math (``ComputeModel.update`` HBM model over the
+1/group shard), a NORM op the scalar latency-bound allreduce of the
+squared grad norms; neither pays staging.
 
 The run is fully deterministic: ties break on op_id, no wall-clock, no
 randomness — the same schedule always yields the same timeline.
@@ -23,7 +29,16 @@ import dataclasses
 import heapq
 from typing import Mapping
 
-from repro.core.schedule import ALL_GATHER, CommSchedule
+import numpy as np
+
+from repro.core.schedule import (
+    ALLREDUCE,
+    ALL_GATHER,
+    NORM,
+    REDUCE_SCATTER,
+    UPDATE,
+    CommSchedule,
+)
 
 from repro.sim.compute import ComputeModel
 from repro.sim.netmodel import NetworkModel, default_network
@@ -123,25 +138,69 @@ def simulate(
     sim = sim or SimConfig()
     compute = compute or ComputeModel(t_fwd=0.0, t_bwd=0.0)
 
+    # gradient-ready times come from the wire ops' buckets only: UPDATE/
+    # AG ops share their RS bucket (same release), while synthetic
+    # buckets (NORM scalar, the flat baseline's full-buffer update) are
+    # gated by their deps, not a release of their own.  Each leaf counts
+    # ONCE: in a spliced StepProgram the dp buckets re-carry the sync
+    # buckets' leaves, and double-counting them would both skew the sync
+    # releases (vs the same schedule without zero1) and push the dp
+    # releases artificially late.
+    seen_leaves: set[str] = set()
+    eff_sizes: list[tuple[int, int]] = []
+    for bid, bucket in sorted({op.bucket.bucket_id: op.bucket
+                               for op in schedule.ops
+                               if op.kind in (ALLREDUCE, REDUCE_SCATTER)
+                               }.items()):
+        fresh = sum(l.size for l in bucket.leaves
+                    if l.name not in seen_leaves)
+        seen_leaves.update(l.name for l in bucket.leaves)
+        eff_sizes.append((bid, fresh))
     releases = compute.bucket_release_times(
-        sorted({op.bucket.bucket_id: op.bucket.size
-                for op in schedule.ops}.items()),
-        per_stage=sim.per_stage_release)
+        eff_sizes, per_stage=sim.per_stage_release)
 
     by_id = {op.op_id: op for op in schedule.ops}
 
     def deps_of(op) -> tuple[int, ...]:
         if not sim.drop_chain_deps:
             return op.depends_on
-        # in-scan semantics: only the data dep (same bucket's RS) survives
-        return tuple(d for d in op.depends_on
-                     if op.kind == ALL_GATHER
-                     and by_id[d].bucket.bucket_id == op.bucket.bucket_id)
+        # in-scan semantics: only data deps survive — the same bucket's
+        # RS→UPDATE→AG spine, every NORM edge (the scalar norm needs all
+        # shards; clipped updates need the norm), and cross-chain edges
+        # (a StepProgram dp RS waiting on the sync op that produces its
+        # leaves).  Chain-ordering edges are same-chain by construction.
+        return tuple(
+            d for d in op.depends_on
+            if (op.kind in (ALL_GATHER, UPDATE)
+                and by_id[d].bucket.bucket_id == op.bucket.bucket_id)
+            or op.kind == NORM or by_id[d].kind == NORM
+            or by_id[d].chain != op.chain)
+
+    def itemsize_of(op) -> int:
+        # zero1 buckets pin their own wire dtype (f32) independent of
+        # the sync schedule's comm dtype
+        if op.bucket.comm_dtype is not None:
+            return np.dtype(op.bucket.comm_dtype).itemsize
+        return sim.itemsize
+
+    def group_of(op) -> int:
+        g = 1
+        for a in op.bucket.reduce_axes:
+            g *= int(mesh_shape.get(a, 1))
+        return max(g, 1)
 
     def duration(op) -> float:
+        nbytes = op.bucket.size * itemsize_of(op)
+        if op.kind == UPDATE:
+            # sharded optimizer math: an HBM pass over the 1/group shard
+            return compute.update.update_time(nbytes / group_of(op))
+        if op.kind == NORM:
+            # scalar psum of squared norms: latency-bound allreduce
+            return net.allreduce_time(
+                max(nbytes, sim.itemsize), op.bucket.reduce_axes,
+                mesh_shape)
         # wire time + the op's share of CopyFromTo staging (pack/unpack;
         # fused vs leafwise is a GradSyncConfig knob the tuner must see)
-        nbytes = op.bucket.size * sim.itemsize
         return net.collective_time(
             op.kind, nbytes, op.bucket.reduce_axes, mesh_shape,
             reducer=op.reducer or sim.reducer) + net.staging_time(
@@ -150,7 +209,7 @@ def simulate(
 
     pending = {op.op_id: len(deps_of(op)) for op in schedule.ops}
     children: dict[int, list[int]] = {}
-    dep_ready = {op.op_id: releases[op.bucket.bucket_id]
+    dep_ready = {op.op_id: releases.get(op.bucket.bucket_id, compute.t_fwd)
                  for op in schedule.ops}
     for op in schedule.ops:
         for d in deps_of(op):
@@ -191,8 +250,8 @@ def simulate(
             heapq.heappush(running, (end, oid))
             events.append(OpEvent(
                 op_id=oid, bucket_id=op.bucket.bucket_id, chain=op.chain,
-                kind=op.kind, nbytes=op.bucket.size * sim.itemsize,
-                release=releases[op.bucket.bucket_id],
+                kind=op.kind, nbytes=op.bucket.size * itemsize_of(op),
+                release=releases.get(op.bucket.bucket_id, compute.t_fwd),
                 start=start, end=end))
         else:
             finish_one()

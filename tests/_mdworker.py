@@ -137,41 +137,84 @@ for strat in [s for s in strategy_names() if s != "funnel"]:
             ok = False
 check("strategies-identical-grads-8dev", ok)
 
-# 4. ZeRO-1 at dp=2 x tp=4 == plain adamw at dp=1 (one train step)
+# 4. ZeRO-1 on the StepProgram (DESIGN.md §9) at dp=2 × tp=4: the
+#    scheduled per-bucket RS→UPDATE→AG program is bit-exact with the
+#    monolithic zero1 optimizer, matches flat allreduce+update on the
+#    SAME mesh, matches plain adamw at dp=1, rides the ring transport,
+#    and clips via the scheduled NORM op exactly like
+#    clip_by_global_norm does on the flat path.
 from repro.optim import adamw, zero1
 from repro.runtime import make_train_step
 from repro.data import TokenPipeline
 
 
-def one_step(mesh, cfg, use_zero, dp_size):
+def one_step(mesh, cfg, *, mode, dp_size=1, clip_norm=0.0,
+             strategy="concom", reducer="flat"):
     pipe = TokenPipeline(96, 32, 4, seed=3, mesh=mesh)
     params = family_of(cfg).init(jax.random.PRNGKey(2), mk_dense(1))
     b = pipe.batch_at(0)
-    if use_zero:
-        opt = zero1(adamw(1e-3), ("data",), dp_size)
-        sync = GradSyncConfig(strategy="concom", exclude_axes=("data",))
-    else:
+    if mode == "flat":
         opt = adamw(1e-3)
-        sync = GradSyncConfig(strategy="concom")
-    ts = make_train_step(cfg, mesh, sync, opt, batch_like=b,
-                         params_like=params, zero1_mode=use_zero)
+        sync = GradSyncConfig(strategy=strategy, reducer=reducer,
+                              bucket_bytes=1 << 12)
+        ts = make_train_step(cfg, mesh, sync, opt, batch_like=b,
+                             params_like=params, clip_norm=clip_norm)
+    else:
+        opt = zero1(adamw(1e-3), ("data",), dp_size)
+        sync = GradSyncConfig(strategy=strategy, reducer=reducer,
+                              bucket_bytes=1 << 12,
+                              exclude_axes=("data",))
+        ts = make_train_step(cfg, mesh, sync, opt, batch_like=b,
+                             params_like=params, zero1_mode=True,
+                             zero1_plan=mode, clip_norm=clip_norm)
     ps = jax.device_put(params, ts.shardings(ts.param_specs))
-    os_ = ts.init_opt()
-    p2, _, m = ts.fn(ps, os_, b, jnp.int32(0))
-    return float(m["loss"]), p2
+    p2, _, m = ts.fn(ps, ts.init_opt(), b, jnp.int32(0))
+    return float(m["loss"]), p2, ts
 
 
-l_ref, p_ref = one_step(mesh1, mk_dense(1), False, 1)
-l_z, p_z = one_step(mesh8, mk_dense(4), True, 2)
-ok = abs(l_ref - l_z) < 3e-4
-worst = 0.0
-for (n, a), (_, b) in zip(named_leaves(p_ref), named_leaves(p_z)):
-    a = np.asarray(a, np.float32); b = np.asarray(b, np.float32)
-    if a.shape != b.shape:
-        continue
-    worst = max(worst, float(np.max(np.abs(a - b))))
-check("zero1-multidev-loss", ok)
-check("zero1-multidev-params", worst < 5e-4)
+def worst_diff(pa, pb):
+    worst = 0.0
+    for (n, a), (_, b) in zip(named_leaves(pa), named_leaves(pb)):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        if a.shape != b.shape:
+            continue
+        worst = max(worst, float(np.max(np.abs(a - b))))
+    return worst
+
+
+l_ref, p_ref, _ = one_step(mesh1, mk_dense(1), mode="flat")
+l_s, p_s, ts_s = one_step(mesh8, mk_dense(4), mode="scheduled", dp_size=2)
+l_m, p_m, _ = one_step(mesh8, mk_dense(4), mode="monolithic", dp_size=2)
+l_f8, p_f8, _ = one_step(mesh8, mk_dense(4), mode="flat")
+
+kinds = ts_s.gradsync.schedule.stats()["kinds"]
+check("zero1-sched-ir-update-ops",
+      kinds.get("update", 0) > 1
+      and kinds.get("update") == kinds.get("all_gather"))
+check("zero1-sched-multidev-loss", abs(l_ref - l_s) < 3e-4)
+check("zero1-sched-multidev-params", worst_diff(p_ref, p_s) < 5e-4)
+check("zero1-sched-equals-monolithic-bitexact",
+      worst_diff(p_s, p_m) == 0.0)
+check("zero1-sched-equals-flat-allreduce-update",
+      worst_diff(p_s, p_f8) < 1e-5)
+
+# rsag's two-phase base plan rewrites to the same triples: bit-exact
+_, p_rsag, _ = one_step(mesh8, mk_dense(4), mode="scheduled", dp_size=2,
+                        strategy="rsag")
+check("zero1-sched-rsag-equals-concom", worst_diff(p_s, p_rsag) == 0.0)
+
+# ring-family reducer: the zero1 RS/AG ops ride the chunked ring kernels
+_, p_ring, _ = one_step(mesh8, mk_dense(4), mode="scheduled", dp_size=2,
+                        reducer="ring")
+check("zero1-sched-ring-transport", worst_diff(p_s, p_ring) < 5e-5)
+
+# scheduled NORM clip ≡ clip_by_global_norm on the flat path (same mesh)
+_, p_sc, _ = one_step(mesh8, mk_dense(4), mode="scheduled", dp_size=2,
+                      clip_norm=0.05)
+_, p_fc, _ = one_step(mesh8, mk_dense(4), mode="flat", clip_norm=0.05)
+check("zero1-sched-clip-matches-flat-clip",
+      worst_diff(p_sc, p_fc) < 1e-5)
 
 # 5. FSDP (ZeRO-3 storage) one train step == plain, params compared
 #    globally (device_get gathers the data-sharded weights)

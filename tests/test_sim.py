@@ -260,6 +260,33 @@ def test_chrome_trace_has_one_event_per_op():
     assert len(xs) == len(schedule.ops)
 
 
+def test_zero1_step_program_sim_is_deterministic_and_costed():
+    """StepProgram schedules simulate like any other IR: one event per
+    op (UPDATE/NORM included), deterministically, with the zero1
+    buckets' pinned f32 wire dtype overriding SimConfig.itemsize."""
+    import dataclasses
+
+    from repro.core.stepprogram import zero1_schedule
+
+    plan = _plan(n_buckets=6, num_channels=3)
+    f32_plan = BucketPlan(
+        buckets=tuple(dataclasses.replace(b, comm_dtype=jnp.float32)
+                      for b in plan.buckets),
+        treedef=None, num_leaves=6, comm_dtype=jnp.float32)
+    zs = zero1_schedule(get_strategy("concom").plan(f32_plan),
+                        dp_axes=("data",), clip=True)
+    a = simulate(zs, MESH, compute=COMPUTE)
+    b = simulate(zs, MESH, compute=COMPUTE)
+    assert a == b
+    assert len(a.events) == len(zs.ops)
+    # a bf16 SimConfig must NOT shrink the zero1 wire ops (f32 pinned)
+    bf16 = simulate(zs, MESH, compute=COMPUTE, sim=SimConfig(itemsize=2))
+    rs_a = min(e.duration for e in a.events if e.kind == REDUCE_SCATTER)
+    rs_b = min(e.duration for e in bf16.events
+               if e.kind == REDUCE_SCATTER)
+    assert rs_a == rs_b
+
+
 def test_schedule_byte_metadata():
     plan = _plan(n_buckets=6, num_channels=3, elems=1024)
     for name in ("concom", "rsag"):

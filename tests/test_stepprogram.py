@@ -1,0 +1,368 @@
+"""StepProgram (DESIGN.md §9): the full training step as CommSchedule IR.
+
+Three layers of checks:
+  - pure-IR transform properties (microseconds, no devices): every
+    registered strategy's plan rewrites into valid per-bucket
+    RS→UPDATE→AG triples with the NORM clip op gating updates;
+  - simulator semantics: UPDATE/NORM ops are costed, bucket k's update
+    overlaps bucket k+1's reduce-scatter, zero1-scheduled plans beat the
+    flat allreduce + monolithic-update baseline, and ``auto`` ranks the
+    rewritten step programs;
+  - executable parity on the smoke mesh (dp=1): scheduled per-bucket
+    zero1 ≡ monolithic zero1 ≡ flat allreduce+update bit-for-bit, and
+    the scheduled NORM clip ≡ ``clip_by_global_norm``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.sim  # noqa: F401  (registers the "auto" strategy)
+from repro.core.buckets import Bucket, BucketPlan, LeafInfo
+from repro.core.registry import fixed_strategy_names, get_strategy
+from repro.core.schedule import (
+    ALL_GATHER,
+    ALLREDUCE,
+    NORM,
+    REDUCE_SCATTER,
+    UPDATE,
+)
+from repro.core.stepprogram import (
+    build_step_program,
+    zero1_bucket_plan,
+    zero1_schedule,
+)
+from repro.sim import (
+    ComputeModel,
+    SimConfig,
+    UpdateModel,
+    flat_step_schedule,
+    last_auto_report,
+    rank_step_plans,
+    simulate,
+)
+
+MESH = {"data": 8, "model": 1}
+COMPUTE = ComputeModel(t_fwd=1e-4, t_bwd=2e-4, n_stages=8)
+
+
+def _plan(n_buckets=8, num_channels=4, elems=1 << 20):
+    buckets = []
+    for bid in range(n_buckets):
+        leaves = (LeafInfo(name=f"g{bid}", index=bid, shape=(elems,),
+                           dtype=jnp.float32, size=elems),)
+        buckets.append(Bucket(leaves=leaves, reduce_axes=("data",),
+                              channel=bid % num_channels, bucket_id=bid,
+                              comm_dtype=jnp.float32))
+    return BucketPlan(buckets=tuple(buckets), treedef=None,
+                      num_leaves=n_buckets, comm_dtype=jnp.float32)
+
+
+# ------------------------------------------------------------- IR shape
+
+def test_transform_every_strategy_makes_rs_update_ag_triples():
+    plan = _plan()
+    for name in fixed_strategy_names():
+        base = get_strategy(name).plan(plan)
+        zs = zero1_schedule(base, dp_axes=("data",))
+        assert zs.validate() is zs
+        kinds = zs.stats()["kinds"]
+        n = len(plan.buckets)
+        assert kinds == {REDUCE_SCATTER: n, UPDATE: n, ALL_GATHER: n}, name
+        by_id = {op.op_id: op for op in zs.ops}
+        for op in zs.ops:
+            if op.kind == UPDATE:
+                srcs = [d for d in op.depends_on
+                        if by_id[d].kind == REDUCE_SCATTER
+                        and by_id[d].bucket.bucket_id == op.bucket.bucket_id]
+                assert len(srcs) == 1, name
+            if op.kind == ALL_GATHER:
+                (d,) = op.depends_on
+                assert by_id[d].kind == UPDATE, name
+                assert by_id[d].bucket.bucket_id == op.bucket.bucket_id
+        # wire bytes unchanged: the RS/AG pair moves what the allreduce
+        # moved (UPDATE/NORM move nothing)
+        assert zs.comm_bytes(4) == base.comm_bytes(4), name
+
+
+def test_transform_clip_adds_one_norm_gating_every_update():
+    plan = _plan()
+    zs = zero1_schedule(get_strategy("concom").plan(plan),
+                        dp_axes=("data",), clip=True)
+    norms = [op for op in zs.ops if op.kind == NORM]
+    assert len(norms) == 1
+    norm = norms[0]
+    rs_ids = {op.op_id for op in zs.ops if op.kind == REDUCE_SCATTER}
+    assert set(norm.depends_on) == rs_ids       # norm waits on ALL shards
+    assert norm.bucket.leaves == ()             # synthetic scalar bucket
+    for op in zs.ops:
+        if op.kind == UPDATE:
+            assert norm.op_id in op.depends_on  # clip-on-shards gate
+
+
+def test_transform_preserves_strategy_chain_structure():
+    plan = _plan(n_buckets=8, num_channels=4)
+    for name, want_chains in (("funnel", 1), ("concom", 4)):
+        base = get_strategy(name).plan(plan)
+        zs = zero1_schedule(base, dp_axes=("data",))
+        rs = [op for op in zs.ops if op.kind == REDUCE_SCATTER]
+        assert len({op.chain for op in rs}) == want_chains, name
+        # chain-ordering edges live on the RS ops only: AGs and UPDATEs
+        # free-fly behind their data deps (the overlap the paper's
+        # dependency chains buy, extended through the update)
+        by_id = {op.op_id: op for op in zs.ops}
+        for op in rs:
+            for d in op.depends_on:
+                assert by_id[d].kind == REDUCE_SCATTER, name
+
+
+def test_build_step_program_splices_sync_deps():
+    # sync schedule: one allreduce over bucket "a"; dp plan shares leaf
+    sync_leaf = LeafInfo(name="a", index=0, shape=(16,),
+                         dtype=jnp.float32, size=16)
+    sync_bucket = Bucket(leaves=(sync_leaf,), reduce_axes=("model",),
+                         channel=0, bucket_id=0)
+    from repro.core.schedule import CollectiveOp, CommSchedule
+
+    sync = CommSchedule((CollectiveOp(op_id=0, bucket=sync_bucket,
+                                      chain=0, kind=ALLREDUCE),))
+    sync_plan = BucketPlan(buckets=(sync_bucket,), treedef=None,
+                           num_leaves=2, comm_dtype=jnp.float32)
+    dp_buckets = tuple(
+        Bucket(leaves=(LeafInfo(name=n, index=i, shape=(16,),
+                                dtype=jnp.float32, size=16),),
+               reduce_axes=("data",), channel=0, bucket_id=1 + i,
+               comm_dtype=jnp.float32)
+        for i, n in enumerate(("a", "b")))
+    dp_plan = BucketPlan(buckets=dp_buckets, treedef=None,
+                         num_leaves=2, comm_dtype=jnp.float32)
+    base = get_strategy("concom").plan(dp_plan)
+    prog = build_step_program(sync, sync_plan, base, dp_plan,
+                              dp_axes=("data",), dp_size=8)
+    assert prog.num_sync_ops == 1
+    assert prog.schedule.validate() is prog.schedule
+    rs = {op.bucket.leaves[0].name: op for op in prog.schedule.ops
+          if op.kind == REDUCE_SCATTER}
+    assert 0 in rs["a"].depends_on      # dp RS of "a" waits on its sync
+    assert 0 not in rs["b"].depends_on  # "b" had no sync op
+
+
+# ---------------------------------------------------------------- sim
+
+def test_sim_costs_update_and_norm_ops():
+    plan = _plan()
+    zs = zero1_schedule(get_strategy("concom").plan(plan),
+                        dp_axes=("data",), clip=True)
+    tl = simulate(zs, MESH, compute=COMPUTE)
+    assert len(tl.events) == len(zs.ops)
+    upd = [e for e in tl.events if e.kind == UPDATE]
+    assert len(upd) == len(plan.buckets)
+    assert all(e.duration > 0 for e in upd)
+    # shard update time matches the compute model (f32 shard = size/8)
+    want = COMPUTE.update.update_time(plan.buckets[0].size * 4 / 8)
+    assert upd[0].duration == pytest.approx(want)
+    (nrm,) = [e for e in tl.events if e.kind == NORM]
+    assert nrm.duration > 0
+    # NORM starts only after every RS finished
+    rs_end = max(e.end for e in tl.events if e.kind == REDUCE_SCATTER)
+    assert nrm.start >= rs_end - 1e-15
+
+
+def test_sim_update_overlaps_next_reduce_scatter():
+    plan = _plan(n_buckets=8, num_channels=1)
+    zs = zero1_schedule(get_strategy("concom").plan(plan),
+                        dp_axes=("data",))
+    tl = simulate(zs, MESH, compute=COMPUTE)
+    upd = [e for e in tl.events if e.kind == UPDATE]
+    rs = [e for e in tl.events if e.kind == REDUCE_SCATTER]
+    # bucket k's shard update runs while a LATER bucket reduce-scatters
+    assert any(u.start < r.end and r.start < u.end
+               for u in upd for r in rs if r.bucket_id > u.bucket_id)
+
+
+def test_zero1_scheduled_beats_flat_monolithic_baseline():
+    plan = _plan(n_buckets=12, num_channels=4)
+    ranked = rank_step_plans(plan, MESH, dp_axes=("data",),
+                             compute=COMPUTE)
+    names = [n for n, _ in ranked]
+    assert {n.split(":")[0] for n in names} == {"zero1", "flat"}
+    assert {n.split(":")[1] for n in names} == set(fixed_strategy_names())
+    by = dict(ranked)
+    for s in fixed_strategy_names():
+        assert by[f"zero1:{s}"].step_time <= by[f"flat:{s}"].step_time, s
+
+
+def test_flat_step_schedule_has_one_terminal_update():
+    plan = _plan()
+    fs = flat_step_schedule(plan, "concom")
+    upd = fs.update_ops()
+    assert len(upd) == 1
+    assert upd[0].bucket.reduce_axes == ()      # full-buffer update
+    assert len(upd[0].bucket.leaves) == len(plan.buckets)
+    tl = simulate(fs, MESH, compute=COMPUTE)
+    # the monolithic update is the LAST thing that happens
+    assert max(tl.events, key=lambda e: e.end).kind == UPDATE
+
+
+def test_update_model_prices_sharding():
+    um = UpdateModel()
+    full = um.update_time(64 << 20)
+    shard = um.update_time((64 << 20) / 8)
+    assert 0.0 < shard < full
+    assert full == pytest.approx(um.passes * (64 << 20) / um.hbm_bw
+                                 + um.overhead)
+
+
+def test_auto_ranks_zero1_step_programs():
+    plan = _plan()
+    info = get_strategy("auto")
+    schedule = info.plan(plan, context={
+        "mesh_shape": MESH, "compute": COMPUTE,
+        "zero1": {"dp_axes": ("data",), "dp_size": 8, "clip": False}})
+    report = last_auto_report()
+    assert report["zero1"] is True
+    assert report["winner"] in fixed_strategy_names()
+    assert {n for n, _ in report["ranking"]} == set(fixed_strategy_names())
+    # auto returns the winner's BASE plan (GradSync applies the rewrite)
+    assert schedule == get_strategy(report["winner"]).plan(plan)
+
+
+# ------------------------------------------------- executable parity
+
+@pytest.fixture(scope="module")
+def step_setup(smoke_mesh):
+    from repro.data import TokenPipeline
+    from repro.models import transformer as tf
+
+    cfg = tf.TransformerConfig(
+        name="stepprog", n_layers=2, d_model=32, n_heads=4, kv_heads=2,
+        d_ff=64, vocab=64, tp=1, attn_chunk=16, dtype=jnp.float32)
+    pipe = TokenPipeline(64, 16, 4, seed=7, mesh=smoke_mesh)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, pipe.batch_at(0), params
+
+
+def _one_step(cfg, batch, params, mesh, *, mode, clip_norm=0.0,
+              strategy="concom", reducer="flat", loss_scale=1.0):
+    from repro.core import GradSyncConfig
+    from repro.optim import adamw, zero1
+    from repro.runtime import make_train_step
+
+    if mode == "flat":
+        opt = adamw(1e-3)
+        sync = GradSyncConfig(strategy=strategy, reducer=reducer,
+                              bucket_bytes=1 << 14,
+                              loss_scale=loss_scale)
+        ts = make_train_step(cfg, mesh, sync, opt, batch_like=batch,
+                             params_like=params, clip_norm=clip_norm)
+    else:
+        opt = zero1(adamw(1e-3), ("data",), 1)
+        sync = GradSyncConfig(strategy=strategy, reducer=reducer,
+                              bucket_bytes=1 << 14,
+                              exclude_axes=("data",),
+                              loss_scale=loss_scale)
+        ts = make_train_step(cfg, mesh, sync, opt, batch_like=batch,
+                             params_like=params, zero1_mode=True,
+                             zero1_plan=mode, clip_norm=clip_norm)
+    p, _, m = ts.fn(params, ts.init_opt(), batch, jnp.int32(0))
+    return ts, p, m
+
+
+def _max_diff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_gradsync_schedule_carries_zero1_collectives(step_setup,
+                                                     smoke_mesh):
+    cfg, batch, params = step_setup
+    ts, _, _ = _one_step(cfg, batch, params, smoke_mesh,
+                         mode="scheduled", clip_norm=0.5)
+    kinds = ts.gradsync.schedule.stats()["kinds"]
+    assert kinds.get(UPDATE, 0) > 1          # per-bucket, not monolithic
+    assert kinds.get(REDUCE_SCATTER) == kinds.get(UPDATE) \
+        == kinds.get(ALL_GATHER)
+    assert kinds.get(NORM) == 1
+    assert ts.gradsync.program is not None
+    assert ts.gradsync.program.schedule is ts.gradsync.schedule
+    assert len(ts.gradsync.schedule.update_ops()) == kinds[UPDATE]
+
+
+def test_scheduled_matches_monolithic_and_flat_bit_exact(step_setup,
+                                                         smoke_mesh):
+    cfg, batch, params = step_setup
+    _, p_s, m_s = _one_step(cfg, batch, params, smoke_mesh,
+                            mode="scheduled")
+    _, p_m, m_m = _one_step(cfg, batch, params, smoke_mesh,
+                            mode="monolithic")
+    _, p_f, m_f = _one_step(cfg, batch, params, smoke_mesh, mode="flat")
+    assert float(m_s["loss"]) == float(m_m["loss"]) == float(m_f["loss"])
+    assert _max_diff(p_s, p_m) == 0.0
+    assert _max_diff(p_s, p_f) == 0.0        # dp=1: RS/AG are identities
+
+
+def test_scheduled_clip_matches_clip_by_global_norm(step_setup,
+                                                    smoke_mesh):
+    cfg, batch, params = step_setup
+    clip = 0.05                              # small enough to bind
+    _, p_s, m_s = _one_step(cfg, batch, params, smoke_mesh,
+                            mode="scheduled", clip_norm=clip)
+    _, p_f, m_f = _one_step(cfg, batch, params, smoke_mesh,
+                            mode="flat", clip_norm=clip)
+    assert float(m_s["grad_norm"]) > clip    # the clip actually engaged
+    assert float(m_s["grad_norm"]) == pytest.approx(
+        float(m_f["grad_norm"]), rel=1e-6)
+    assert _max_diff(p_s, p_f) < 1e-6
+
+
+def test_scheduled_clip_unaffected_by_loss_scale(step_setup, smoke_mesh):
+    """The NORM op sees loss-scaled, pre-mean RS shards — it must undo
+    both so the norm (and the clip threshold) match the true grads."""
+    cfg, batch, params = step_setup
+    clip = 0.05
+    _, p_s, m_s = _one_step(cfg, batch, params, smoke_mesh,
+                            mode="scheduled", clip_norm=clip,
+                            loss_scale=1024.0)
+    _, p_f, m_f = _one_step(cfg, batch, params, smoke_mesh,
+                            mode="flat", clip_norm=clip,
+                            loss_scale=1024.0)
+    assert float(m_s["grad_norm"]) == pytest.approx(
+        float(m_f["grad_norm"]), rel=1e-5)
+    assert _max_diff(p_s, p_f) < 1e-6
+
+
+def test_scheduled_every_strategy_same_params(step_setup, smoke_mesh):
+    """The StepProgram is schedule-only: every strategy (auto included)
+    trains to identical params."""
+    from repro.core import strategy_names
+
+    cfg, batch, params = step_setup
+    outs = {}
+    for strat in strategy_names():
+        _, p, _ = _one_step(cfg, batch, params, smoke_mesh,
+                            mode="scheduled", strategy=strat)
+        outs[strat] = p
+    ref = outs.pop("concom")
+    for strat, p in outs.items():
+        assert _max_diff(ref, p) == 0.0, strat
+
+
+def test_zero1_bucket_plan_covers_all_leaves(smoke_mesh):
+    from jax.sharding import PartitionSpec as P
+
+    grads = {"w": jnp.ones((64, 8)), "b": jnp.ones((8,))}
+    specs = jax.tree.map(lambda _: P(), grads)
+    sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), grads)
+    plan = zero1_bucket_plan(sds, specs, smoke_mesh, dp_axes=("data",),
+                             bucket_bytes=256, id_offset=5)
+    covered = {l.index for b in plan.buckets for l in b.leaves}
+    assert covered == {0, 1}
+    assert min(b.bucket_id for b in plan.buckets) >= 5
+    assert all(b.comm_dtype == jnp.float32 for b in plan.buckets)
+    assert all(b.reduce_axes == ("data",) for b in plan.buckets)
+    # params already sharded over dp (FSDP-style) must be rejected
+    with pytest.raises(ValueError, match="replicated over the dp axes"):
+        zero1_bucket_plan(sds, jax.tree.map(lambda _: P("data"), grads),
+                          smoke_mesh, dp_axes=("data",))
