@@ -15,11 +15,13 @@ bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
 # minutes-long CPU staging/collective microbenchmark → BENCH_pack.json
-# (fused-vs-leafwise CopyFromTo + ring-vs-psum rows) and the StepProgram
+# (fused-vs-leafwise CopyFromTo + ring-vs-psum rows), the StepProgram
 # benchmark → BENCH_step.json (scheduled-zero1 vs monolithic vs flat:
-# wall, peak-memory proxy, simulated exposed comm); both CI artifacts
+# wall, peak-memory proxy, simulated exposed comm) and the pipelined
+# StepProgram benchmark → BENCH_pipeline.json (deferred vs scheduled vs
+# monolithic at accum M∈{1,4}); all CI artifacts
 bench-smoke:
-	PYTHONPATH=src $(PY) -m benchmarks.run --sections pack,step
+	PYTHONPATH=src $(PY) -m benchmarks.run --sections pack,step,pipeline
 
 schedule:
 	PYTHONPATH=src $(PY) -m benchmarks.schedule_analysis

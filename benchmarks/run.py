@@ -378,6 +378,114 @@ def bench_step(emit):
              overlap=round(tl.overlap_fraction, 3))
 
 
+def bench_pipeline(emit):
+    """§10 pipelined StepProgram benchmark → BENCH_pipeline.json.
+
+    Deferred (phase-split: AGs at the NEXT step's top, update shards
+    carried in opt_state) vs scheduled (same-step StepProgram) vs
+    monolithic zero1, at grad-accumulation M ∈ {1, 4}: measured wall
+    time per train step (1 CPU device — orders overhead) and the
+    simulator's steady-state prediction for the SAME dp bucket plan on
+    a 2×4 mesh (step time, exposed comm, overlap fraction; with M > 1
+    the releases come only from the FINAL microbatch's backward).
+    Accumulation GROWS the global batch at fixed microbatch shape
+    (batch 8·M split M ways), matching the sim's per-microbatch model;
+    bucket_bytes is 1 MB so the dp plan's all-gather wave fits the
+    in-flight window — the regime the deferred plan is built for.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    import repro.sim  # noqa: F401  (registers the "auto" strategy)
+    from repro.core import GradSyncConfig
+    from repro.core.stepprogram import zero1_bucket_plan
+    from repro.data import TokenPipeline
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import transformer as tf
+    from repro.models.registry import family_of
+    from repro.optim import adamw, zero1
+    from repro.runtime import make_train_step
+    from repro.sim import compute_model_for, rank_step_plans
+
+    mesh = make_smoke_mesh(1, 1)
+    cfg = tf.TransformerConfig(
+        name="pipe", n_layers=4, d_model=128, n_heads=8, kv_heads=4,
+        d_ff=512, vocab=1024, tp=1, attn_chunk=64, dtype=jnp.float32)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    mesh_shape = {"data": 2, "model": 4}
+    bb = 1 << 20
+
+    def build(mode, accum, batch):
+        opt = zero1(adamw(1e-3), ("data",), 1)
+        return make_train_step(
+            cfg, mesh,
+            GradSyncConfig(strategy="concom", bucket_bytes=bb,
+                           exclude_axes=("data",)),
+            opt, batch_like=batch, params_like=params,
+            zero1_mode=True, zero1_plan=mode, clip_norm=0.0,
+            microbatch=accum)
+
+    walls = {}
+    for accum in (1, 4):
+        batch = TokenPipeline(1024, 128, 8 * accum, mesh=mesh).batch_at(0)
+        for mode in ("monolithic", "scheduled", "deferred"):
+            ts = build(mode, accum, batch)
+            state = ts.init_opt()
+            compiled = ts.fn.lower(params, state, batch,
+                                   jax.ShapeDtypeStruct((), jnp.int32)
+                                   ).compile()
+            step0 = jnp.int32(0)
+            us = _t(lambda _f=compiled, _s=state, _b=batch: _f(
+                params, _s, _b, step0))
+            walls[(mode, accum)] = us
+            phases = ts.gradsync.schedule.phase_counts()
+            emit(f"pipeline_{mode}_accum{accum}_wall", us,
+                 f"pre{phases.get('pre', 0)}_post{phases.get('post', 0)}",
+                 mode=mode, accum=accum,
+                 ir_pre_ops=phases.get("pre", 0),
+                 ir_post_ops=phases.get("post", 0),
+                 deferred_bytes=ts.gradsync.schedule.deferred_bytes())
+        emit(f"pipeline_deferred_vs_scheduled_accum{accum}", 0,
+             f"wall{walls[('scheduled', accum)] / walls[('deferred', accum)]:.2f}x",
+             accum=accum,
+             wall_ratio=round(walls[("scheduled", accum)]
+                              / walls[("deferred", accum)], 3))
+
+    # simulated steady state on the dp bucket plan itself — the
+    # deferred:<s> / zero1:<s> / flat:<s> leaderboard auto ranks
+    pspecs = family_of(cfg).param_rules(cfg).tree_specs(params)
+    dp_plan = zero1_bucket_plan(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                     params),
+        pspecs, mesh, dp_axes=("data",), bucket_bytes=bb)
+    # rank_step_plans wants the PER-MICROBATCH model when accum > 1;
+    # the microbatch shape is batch 8 at every M (accumulation grows
+    # the global batch), so the per-micro model is the same model
+    micro = compute_model_for(cfg, global_batch=8, seq_len=128,
+                              n_devices=8)
+    for accum in (1, 4):
+        ranked = rank_step_plans(dp_plan, mesh_shape, dp_axes=("data",),
+                                 compute=micro, accum=accum)
+        for name, tl in ranked:
+            emit(f"pipeline_sim_{name.replace(':', '_')}_accum{accum}",
+                 tl.step_time * 1e6,
+                 f"exposed{tl.exposed_comm * 1e6:.0f}us",
+                 plan=name, accum=accum,
+                 simulated_step_us=tl.step_time * 1e6,
+                 simulated_exposed_us=tl.exposed_comm * 1e6,
+                 overlap=round(tl.overlap_fraction, 3))
+        by = dict(ranked)
+        bz = min(v.exposed_comm for k, v in by.items()
+                 if k.startswith("zero1:"))
+        bd = min(v.exposed_comm for k, v in by.items()
+                 if k.startswith("deferred:"))
+        emit(f"pipeline_sim_deferred_below_zero1_accum{accum}", 0,
+             f"deferred{bd * 1e6:.1f}us_zero1{bz * 1e6:.1f}us_"
+             f"pass={bd < bz}",
+             accum=accum, deferred_exposed_us=bd * 1e6,
+             zero1_exposed_us=bz * 1e6, strictly_below=bool(bd < bz))
+
+
 def bench_roofline_summary(emit):
     path = "results/dryrun.json"
     if not os.path.exists(path):
@@ -406,6 +514,7 @@ SECTIONS = {
     "kernels": bench_kernels,
     "pack": bench_pack,
     "step": bench_step,
+    "pipeline": bench_pipeline,
     "roofline": bench_roofline_summary,
 }
 

@@ -36,7 +36,9 @@ warnings.filterwarnings("ignore")
 _COLL = r"(?:all-reduce|reduce-scatter|all-gather)"
 
 
-def analyze(strategy: str, zero1: bool = False) -> dict:
+def analyze(strategy: str, zero1: str = "") -> dict:
+    """One row: ``zero1`` is "" (plain sync), "scheduled" (StepProgram)
+    or "deferred" (phase-split StepProgram — the AGs tagged PRE)."""
     import repro  # noqa: F401  (jaxcompat before jax.sharding imports)
     import jax
     import jax.numpy as jnp
@@ -63,16 +65,25 @@ def analyze(strategy: str, zero1: bool = False) -> dict:
         cfg, mesh,
         GradSyncConfig(strategy=strategy, num_channels=4, bucket_bytes=0,
                        exclude_axes=("data",) if zero1 else ()),
-        opt, batch_like=batch, params_like=params, zero1_mode=zero1)
+        opt, batch_like=batch, params_like=params, zero1_mode=bool(zero1),
+        zero1_plan=zero1 or "scheduled")
     ir = ts.gradsync.schedule.stats()
+    phases = ir["phases"]
     # simulated timeline of the SAME planned schedule on this 2×4 mesh
-    # (UPDATE/NORM ops of the StepProgram rows costed by the engine)
+    # (UPDATE/NORM ops of the StepProgram rows costed by the engine;
+    # deferred rows in pipelined steady state — PRE gathers at the top)
     mesh_shape = {"data": 2, "model": 4}
-    tl = simulate(
-        ts.gradsync.schedule, mesh_shape,
-        compute=compute_model_for(cfg, global_batch=8, seq_len=32,
-                                  n_devices=8),
-        sim=sim_config_for(strategy))
+    compute = compute_model_for(cfg, global_batch=8, seq_len=32,
+                                n_devices=8)
+    if zero1 == "deferred":
+        from repro.sim import simulate_pipelined
+
+        post, pre = ts.gradsync.schedule.split_phases()
+        tl = simulate_pipelined(post, pre, mesh_shape, compute=compute,
+                                sim=sim_config_for(strategy))
+    else:
+        tl = simulate(ts.gradsync.schedule, mesh_shape, compute=compute,
+                      sim=sim_config_for(strategy))
     opt_state = ts.init_opt()
     lowered = ts.fn.lower(params, opt_state, batch, jnp.int32(0))
     hlo = lowered.compile().as_text()
@@ -88,11 +99,15 @@ def analyze(strategy: str, zero1: bool = False) -> dict:
         end = hlo.find("\n}", idx)
         seg = hlo[idx:end if end > 0 else idx + 200000]
         in_loop += len(re.findall(rf"= [^=\n]*{_COLL}\(", seg))
-    return {"strategy": strategy + ("+zero1" if zero1 else ""),
+    tag = {"": "", "scheduled": "+zero1", "deferred": "+zero1d"}[zero1]
+    return {"strategy": strategy + tag,
             "ir_ops": ir["num_ops"],
             "ir_chains": ir["num_chains"],
             "ir_max_chain": ir["max_chain_len"],
             "ir_update_ops": ir["kinds"].get("update", 0),
+            "ir_pre_ops": phases.get("pre", 0),
+            "ir_post_ops": phases.get("post", 0),
+            "deferred_kb": ts.gradsync.schedule.deferred_bytes() / 1024,
             "collective_ops": total,
             "in_loop_body": in_loop,
             "loop_trip_multiplied": in_loop * 4,   # n_layers=4
@@ -107,15 +122,18 @@ def main():
     from repro.core import strategy_names
 
     print("strategy,ir_ops,ir_chains,ir_max_chain,ir_update_ops,"
+          "ir_pre_ops,ir_post_ops,deferred_kb,"
           "collective_ops_static,in_loop_body,runtime_collectives(~),"
           "sim_step_us,sim_exposed_us,sim_overlap")
     for s in strategy_names():
-        for zero1 in (False, True):
+        for zero1 in ("", "scheduled", "deferred"):
             r = analyze(s, zero1=zero1)
             runtime = (r["collective_ops"] - r["in_loop_body"]
                        + r["loop_trip_multiplied"])
             print(f"{r['strategy']},{r['ir_ops']},{r['ir_chains']},"
                   f"{r['ir_max_chain']},{r['ir_update_ops']},"
+                  f"{r['ir_pre_ops']},{r['ir_post_ops']},"
+                  f"{r['deferred_kb']:.0f},"
                   f"{r['collective_ops']},"
                   f"{r['in_loop_body']},{runtime},"
                   f"{r['sim_step_us']:.1f},{r['sim_exposed_us']:.1f},"

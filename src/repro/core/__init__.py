@@ -45,6 +45,7 @@ _SIM_EXPORTS = (
     "grid_search",
     "rank_strategies",
     "simulate",
+    "simulate_pipelined",
     "simulate_strategy",
 )
 
@@ -99,6 +100,7 @@ __all__ = [
     "register_strategy",
     "scan_layers",
     "simulate",
+    "simulate_pipelined",
     "simulate_strategy",
     "strategy_names",
     "sync_grads",

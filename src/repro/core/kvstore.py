@@ -56,6 +56,19 @@ class GradSyncConfig:
     # (set exclude_axes to the same axes — the RS *is* their reduction)
     zero1_dp_axes: tuple[str, ...] = ()
     zero1_clip: bool = False         # plan the NORM op (grad clipping)
+    # pipelined StepProgram (§10): tag the zero1 all-gathers PRE so they
+    # detach into the NEXT step's top (executed via ``apply_pending``
+    # with the carried update shards) instead of serializing the tail
+    zero1_defer_ag: bool = False
+    # grad-accumulation factor of the consuming train step — meta
+    # strategies (auto) fold the M-microbatch scan into their ranking
+    # (with the peeled-tail release shape unless accum_overlap is off)
+    zero1_accum: int = 1
+    zero1_accum_overlap: bool = True
+    # PER-MICROBATCH ComputeModel for meta-strategy ranking: without it
+    # auto ranks schedules on comm alone (ComputeModel(0, 0)) and the
+    # deferred family has no forward window to hide its gathers under
+    sim_compute: Any = None
 
 
 class GradSync:
@@ -106,6 +119,7 @@ class GradSync:
                 "reducer": cfg.reducer,
                 "itemsize": np.dtype(cfg.comm_dtype).itemsize,
                 "fused_staging": cfg.use_fused_staging,
+                "compute": cfg.sim_compute,
             }
         # the strategy's dependency structure, planned once, inspectable
         self.schedule: CommSchedule = self.info.plan(
@@ -137,14 +151,17 @@ class GradSync:
                     **plan_kw["context"],
                     "zero1": {"dp_axes": tuple(cfg.zero1_dp_axes),
                               "dp_size": dp_size,
-                              "clip": cfg.zero1_clip},
+                              "clip": cfg.zero1_clip,
+                              "defer": cfg.zero1_defer_ag,
+                              "accum": cfg.zero1_accum,
+                              "accum_overlap": cfg.zero1_accum_overlap},
                 }
             base = self.info.plan(
                 self.dp_plan, skip_names=frozenset(), **plan_kw2)
             self.program = build_step_program(
                 self.schedule, self.plan, base, self.dp_plan,
                 dp_axes=tuple(cfg.zero1_dp_axes), dp_size=dp_size,
-                clip=cfg.zero1_clip)
+                clip=cfg.zero1_clip, defer_ag=cfg.zero1_defer_ag)
             self.schedule = self.program.schedule
 
     def _two_phase_impl(self) -> str:
@@ -158,16 +175,23 @@ class GradSync:
         return "ring" if (ring_family and emits_rs_ag) else "psum"
 
     def __call__(self, grads: Any, *, update_fn=None,
-                 clip_norm: float = 0.0, aux: dict | None = None) -> Any:
+                 clip_norm: float = 0.0, aux: dict | None = None,
+                 schedule: CommSchedule | None = None) -> Any:
         """Emit the planned schedule over ``grads``.
 
         For pure sync schedules this returns the reduced gradients.  A
         StepProgram schedule (``zero1_dp_axes``) additionally needs
         ``update_fn`` (see ``repro.optim.zero.scheduled_update``); the
         returned tree then holds the all-gathered *updates*.
+
+        ``schedule`` overrides the planned schedule for phase-split
+        execution — the deferred train step passes
+        ``program.post_schedule()`` here (the update shards then land
+        in ``aux["update_shards"]``) and gathers last step's shards via
+        ``apply_pending``.
         """
         return execute(
-            self.schedule,
+            self.schedule if schedule is None else schedule,
             grads,
             self.plan,
             reducer=self.reducer,
@@ -179,6 +203,31 @@ class GradSync:
             update_fn=update_fn,
             clip_norm=clip_norm,
             aux=aux,
+        )
+
+    def apply_pending(self, updates_like: Any,
+                      pending: dict[int, jax.Array]) -> Any:
+        """Materialize the deferred PRE program: all-gather the update
+        shards carried from the previous step (``pending``: bucket_id →
+        local shard) into ``updates_like`` (a zeros tree shaped like the
+        params).  Every leaf covered by the dp plan is overwritten; the
+        gathers free-fly, so bucket 0's result is available while later
+        buckets are still on the wire.
+        """
+        if self.program is None or not self.program.defer_ag:
+            raise ValueError(
+                "apply_pending requires a StepProgram planned with "
+                "zero1_defer_ag=True")
+        return execute(
+            self.program.pre_schedule(),
+            updates_like,
+            self.plan,
+            reducer=self.reducer,
+            mesh_shape=self.mesh_shape,
+            mean_axes=self.cfg.mean_axes,
+            use_fused_staging=self.cfg.use_fused_staging,
+            two_phase_impl=self._two_phase_impl(),
+            pending=pending,
         )
 
 

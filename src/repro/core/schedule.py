@@ -32,6 +32,7 @@ from typing import Any, Callable, Mapping
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dependency as dep
 from repro.core.buckets import Bucket, BucketPlan, pack, unpack
@@ -53,6 +54,15 @@ KINDS = (ALLREDUCE, REDUCE_SCATTER, ALL_GATHER, UPDATE, NORM)
 # pairs are counted at the RS; UPDATE is local math, NORM a scalar)
 _WIRE_KINDS = (ALLREDUCE, REDUCE_SCATTER)
 
+# execution phases (pipelined StepProgram, DESIGN.md §10): POST ops run
+# after this step's backward produced their inputs; PRE ops are DEFERRED
+# — they consume state carried from the previous step and execute at the
+# top of the NEXT step, overlapping its forward (the ZeRO-1 all-gathers
+# of already-computed update shards are the canonical case)
+POST = "post"
+PRE = "pre"
+PHASES = (POST, PRE)
+
 
 @dataclasses.dataclass(frozen=True)
 class CollectiveOp:
@@ -64,6 +74,7 @@ class CollectiveOp:
     depends_on: tuple[int, ...] = ()    # op_ids that must complete first
     kind: str = ALLREDUCE
     reducer: str = ""                   # registered reducer tag; "" = default
+    phase: str = POST                   # POST (same step) | PRE (next step)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +128,48 @@ class CommSchedule:
         """Distinct reduction-axis groups (the communicators involved)."""
         return frozenset(op.bucket.reduce_axes for op in self.ops)
 
+    def phase_counts(self) -> dict[str, int]:
+        """Op count per execution phase ({"post": n} for plain schedules,
+        {"post": n, "pre": m} once all-gathers were deferred)."""
+        out: dict[str, int] = {}
+        for op in self.ops:
+            out[op.phase] = out.get(op.phase, 0) + 1
+        return out
+
+    def deferred_bytes(self, itemsize: int = 4) -> int:
+        """Payload bytes whose materialization crosses the step boundary
+        (the PRE ops' buckets — what the next step's forward must gather
+        before it can read those params)."""
+        return sum(
+            op.bucket.size * (np_itemsize(op.bucket.comm_dtype, itemsize))
+            for op in self.ops if op.phase == PRE)
+
+    def split_phases(self) -> tuple["CommSchedule", "CommSchedule"]:
+        """(post, pre) sub-schedules for pipelined execution.
+
+        POST ops keep their ids and deps — nothing may depend on a PRE
+        op inside one step (a deferred op's result only exists NEXT
+        step), checked here at planning time.  PRE ops drop every dep
+        on a POST op: those producers ran in the PREVIOUS step, and
+        their results arrive as carried state (``execute(pending=...)``),
+        not as in-schedule edges.
+        """
+        pre_ids = {op.op_id for op in self.ops if op.phase == PRE}
+        for op in self.ops:
+            if op.phase != PRE and pre_ids.intersection(op.depends_on):
+                raise ValueError(
+                    f"post op {op.op_id} depends on deferred (PRE) op(s) "
+                    f"{sorted(pre_ids.intersection(op.depends_on))} — a "
+                    f"deferred result does not exist until the next step")
+        post = tuple(op for op in self.ops if op.phase != PRE)
+        pre = tuple(
+            dataclasses.replace(
+                op, depends_on=tuple(d for d in op.depends_on
+                                     if d in pre_ids))
+            for op in self.ops if op.phase == PRE)
+        return (CommSchedule(post).validate(),
+                CommSchedule(pre).validate())
+
     def stats(self) -> dict[str, Any]:
         lengths = self.chain_lengths()
         kinds: dict[str, int] = {}
@@ -127,6 +180,7 @@ class CommSchedule:
             "num_chains": self.num_chains,
             "max_chain_len": max(lengths.values()) if lengths else 0,
             "kinds": kinds,
+            "phases": self.phase_counts(),
         }
 
     def validate(self) -> "CommSchedule":
@@ -144,6 +198,9 @@ class CommSchedule:
                         f"ordered)")
             if op.kind not in KINDS:
                 raise ValueError(f"op {op.op_id}: unknown kind {op.kind!r}")
+            if op.phase not in PHASES:
+                raise ValueError(
+                    f"op {op.op_id}: unknown phase {op.phase!r}")
             seen.add(op.op_id)
         return self
 
@@ -151,6 +208,12 @@ class CommSchedule:
         """The StepProgram's optimizer-update nodes (empty for pure-sync
         schedules)."""
         return tuple(op for op in self.ops if op.kind == UPDATE)
+
+
+def np_itemsize(dtype: Any, fallback: int) -> int:
+    """Wire bytes per element for a bucket's pinned comm dtype (falling
+    back to the schedule-level itemsize when the bucket has no pin)."""
+    return fallback if dtype is None else np.dtype(dtype).itemsize
 
 
 def group_size(axes: tuple[str, ...], mesh_shape: Mapping[str, int]) -> int:
@@ -242,6 +305,7 @@ def execute(
     update_fn: Callable[[CollectiveOp, jax.Array], jax.Array] | None = None,
     clip_norm: float = 0.0,
     aux: dict | None = None,
+    pending: Mapping[int, jax.Array] | None = None,
 ) -> Any:
     """Materialize a CommSchedule over a gradient pytree.
 
@@ -276,6 +340,16 @@ def execute(
     bucket shares leaves with an earlier op (ZeRO-1's dp reduce-scatter
     after the model-axis sync) consumes the earlier op's result —
     provided the schedule carries the dependency edge.
+
+    Pipelined (phase-split) execution (DESIGN.md §10):
+      ``pending`` maps bucket_id → the update shard CARRIED from the
+        previous step.  An ALL_GATHER with no in-schedule shard producer
+        reads its shard from there (and, being an update shard, skips
+        the dp-mean/loss-unscale that gradient gathers apply) — this is
+        how a PRE program materializes last step's deferred gathers.
+      UPDATE ops record their output shard in ``aux["update_shards"]``
+        (bucket_id-keyed) when ``aux`` is given, so a POST program with
+        deferred all-gathers can hand the shards to the next step.
     """
     if two_phase_impl not in ("psum", "ring"):
         raise ValueError(f"unknown two_phase_impl {two_phase_impl!r}")
@@ -331,12 +405,17 @@ def execute(
             return 1.0
         return mean_scale(bucket.reduce_axes, mesh_shape, mean_axes)
 
-    def shard_src(op: CollectiveOp, want: str) -> int:
+    def shard_src(op: CollectiveOp, want: str,
+                  optional: bool = False) -> int | None:
         """The dep producing this op's same-bucket shard — deps may also
-        carry chain-ordering edges to other buckets' ops."""
+        carry chain-ordering edges to other buckets' ops.  ``optional``
+        returns None instead of raising (a deferred gather whose shard
+        arrives via ``pending`` has no in-schedule producer)."""
         srcs = [d for d in op.depends_on if d in shards
                 and by_id[d].bucket.bucket_id == op.bucket.bucket_id]
         if not srcs:
+            if optional:
+                return None
             raise ValueError(
                 f"{op.kind} op {op.op_id} has no {want} dep for "
                 f"bucket {op.bucket.bucket_id}")
@@ -417,10 +496,22 @@ def execute(
             upd, tokens[op.op_id] = emit_gated(
                 g_shard, token, lambda v, _op=op: update_fn(_op, v))
             shards[op.op_id] = (upd, n)
+            if aux is not None:
+                aux.setdefault("update_shards", {})[bucket.bucket_id] = upd
 
         elif op.kind == ALL_GATHER:
-            src = shard_src(op, "reduce_scatter")
-            shard, n = shards[src]
+            has_pending = (pending is not None
+                           and bucket.bucket_id in pending)
+            src = shard_src(op, "reduce_scatter", optional=has_pending)
+            if src is not None:
+                shard, n = shards[src]
+                gathers_updates = by_id[src].kind == UPDATE
+            else:
+                # PRE program: the shard was produced by LAST step's
+                # UPDATE op and carried across the boundary — always an
+                # update shard (dp mean + loss unscale already applied)
+                shard, n = pending[bucket.bucket_id], bucket.size
+                gathers_updates = True
             group = group_of(bucket)
 
             def ag(b, _bk=bucket, _g=group):
@@ -435,7 +526,7 @@ def execute(
             full, tokens[op.op_id] = emit_gated(shard, token, ag)
             if full.shape[0] != n:
                 full = full[:n]
-            if by_id[src].kind == UPDATE:
+            if gathers_updates:
                 # gathering optimizer updates: the dp mean and loss
                 # unscale were already applied to the grad shard
                 stage_out(bucket, full, 1.0)

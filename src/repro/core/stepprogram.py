@@ -42,6 +42,8 @@ from repro.core.buckets import Bucket, BucketPlan, make_bucket_plan
 from repro.core.schedule import (
     ALL_GATHER,
     NORM,
+    POST,
+    PRE,
     REDUCE_SCATTER,
     UPDATE,
     CollectiveOp,
@@ -66,9 +68,22 @@ class StepProgram:
     dp_size: int
     clip: bool
     num_sync_ops: int
+    defer_ag: bool = False
 
     def stats(self) -> dict[str, Any]:
         return self.schedule.stats()
+
+    def post_schedule(self) -> CommSchedule:
+        """The ops that run in the step that produced the gradients
+        (sync + RS + NORM + UPDATE; plus the AGs unless deferred)."""
+        return self.schedule.split_phases()[0]
+
+    def pre_schedule(self) -> CommSchedule:
+        """The deferred all-gathers, re-rooted for the NEXT step's top:
+        their update-shard inputs arrive as carried state
+        (``execute(pending=...)``), so every op free-flies — bucket 0's
+        gather overlaps the rest and the input pipeline."""
+        return self.schedule.split_phases()[1]
 
 
 def zero1_bucket_plan(
@@ -121,6 +136,7 @@ def _zero1_ops(
     start_op_id: int,
     chain_offset: int,
     leaf_deps,
+    defer_ag: bool = False,
 ) -> list[CollectiveOp]:
     """Rewrite a base strategy schedule into RS→UPDATE→AG triples.
 
@@ -130,6 +146,13 @@ def _zero1_ops(
     REDUCE_SCATTER ops only — updates and all-gathers free-fly behind
     their own data deps, which is exactly the pipelining the paper's
     dependency-chain design buys the sync half of the step.
+
+    With ``defer_ag`` the all-gathers are tagged PRE (DESIGN.md §10):
+    they detach from this step's tail and execute at the top of the
+    NEXT step, the update shards crossing the boundary as carried
+    state.  The in-step dependency edges are kept so the un-split
+    schedule still validates (and still describes the scheduled,
+    same-step execution bit-exactly).
     """
     heads = [op for op in base.ops if op.kind != ALL_GATHER]
     rs_of: dict[int, int] = {}          # base op_id -> new RS op_id
@@ -171,7 +194,8 @@ def _zero1_ops(
         ops.append(CollectiveOp(
             op_id=oid + 1, bucket=bop.bucket,
             chain=bop.chain + chain_offset,
-            depends_on=(oid,), kind=ALL_GATHER))
+            depends_on=(oid,), kind=ALL_GATHER,
+            phase=PRE if defer_ag else POST))
         oid += 2
     return ops
 
@@ -181,11 +205,15 @@ def zero1_schedule(
     *,
     dp_axes: tuple[str, ...],
     clip: bool = False,
+    defer_ag: bool = False,
 ) -> CommSchedule:
     """The zero1 RS→UPDATE→AG program alone (no sync ops) — what the
-    simulator and autotuner rank."""
+    simulator and autotuner rank.  ``defer_ag`` tags the all-gathers
+    PRE (split with ``CommSchedule.split_phases`` for the pipelined
+    two-step timeline)."""
     ops = _zero1_ops(base, dp_axes=dp_axes, clip=clip, start_op_id=0,
-                     chain_offset=0, leaf_deps=lambda bucket: ())
+                     chain_offset=0, leaf_deps=lambda bucket: (),
+                     defer_ag=defer_ag)
     return CommSchedule(tuple(ops)).validate()
 
 
@@ -198,6 +226,7 @@ def build_step_program(
     dp_axes: tuple[str, ...],
     dp_size: int,
     clip: bool = False,
+    defer_ag: bool = False,
 ) -> StepProgram:
     """Splice sync ops and zero1 RS→UPDATE→AG ops into one schedule.
 
@@ -205,6 +234,11 @@ def build_step_program(
     of its leaves (the model-axis psum result is what the dp RS
     consumes); leaves with no sync op (TP-sharded params whose only
     reduction IS the dp one) start as soon as their chain allows.
+
+    ``defer_ag`` builds the PIPELINED program: the all-gathers are
+    tagged PRE, to be executed at the top of the next step via
+    ``StepProgram.pre_schedule()`` while ``post_schedule()`` carries
+    everything else (DESIGN.md §10).
     """
     sync_ops = sync_schedule.ops
     n_sync = len(sync_ops)
@@ -221,9 +255,9 @@ def build_step_program(
 
     zops = _zero1_ops(base, dp_axes=dp_axes, clip=clip,
                       start_op_id=n_sync, chain_offset=chain_offset,
-                      leaf_deps=leaf_deps)
+                      leaf_deps=leaf_deps, defer_ag=defer_ag)
     schedule = CommSchedule(tuple(sync_ops) + tuple(zops)).validate()
     return StepProgram(
         schedule=schedule, plan=sync_plan, dp_plan=dp_plan,
         dp_axes=tuple(dp_axes), dp_size=dp_size, clip=clip,
-        num_sync_ops=n_sync)
+        num_sync_ops=n_sync, defer_ag=defer_ag)

@@ -353,7 +353,7 @@ def main():
     ap.add_argument("--zero1", action="store_true",
                     help="compile train cells with the ZeRO-1 optimizer")
     ap.add_argument("--zero1-plan", default="scheduled",
-                    choices=["scheduled", "monolithic"])
+                    choices=["scheduled", "deferred", "monolithic"])
     ap.add_argument("--out", default="results/dryrun.json")
     ap.add_argument("--tag", default="")
     ap.add_argument("--override", action="append", default=[],

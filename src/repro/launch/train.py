@@ -44,12 +44,19 @@ def main():
     ap.add_argument("--bucket-mb", type=float, default=4.0)
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--zero1-plan", default="scheduled",
-                    choices=["scheduled", "monolithic"],
+                    choices=["scheduled", "deferred", "monolithic"],
                     help="scheduled = StepProgram (per-bucket RS→UPDATE→"
                          "AG planned by the strategy, clipped via the "
-                         "NORM op); monolithic = opaque optimizer.update")
+                         "NORM op); deferred = pipelined StepProgram "
+                         "(AGs detach into the next step's top, update "
+                         "shards carried in opt_state); monolithic = "
+                         "opaque optimizer.update")
     ap.add_argument("--clip-norm", type=float, default=1.0)
     ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--no-accum-overlap", action="store_true",
+                    help="keep the final microbatch inside the "
+                         "accumulation scan (sync waits for the whole "
+                         "scan) instead of peeling it for overlap")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config on local devices")
@@ -107,6 +114,7 @@ def main():
                          zero1_mode=args.zero1,
                          zero1_plan=args.zero1_plan,
                          microbatch=args.microbatch,
+                         accum_overlap=not args.no_accum_overlap,
                          donate=not args.smoke)
     ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) \
         if args.ckpt_dir else None
@@ -114,6 +122,9 @@ def main():
     # init_opt derives zero1 shard sizes from the step's LOCAL shapes
     # (opt.init on global TP-sharded params would size them wrong)
     opt_state = ts.init_opt() if args.zero1 else opt.init(params)
+    # (deferred plan: checkpoints keep params + opt_state["pending"]
+    # consistent, so resume is exact as-is; a consumer exporting params
+    # must flush the carried shards with ts.finalize(params, opt_state))
     _, _, hist = trainer.run(params, opt_state, args.steps)
     print(f"[train] {args.arch} {args.strategy}: "
           f"loss {hist['losses'][0]:.3f} -> {hist['losses'][-1]:.3f}")

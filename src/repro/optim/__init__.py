@@ -14,6 +14,7 @@ from repro.optim.zero import (
     scheduled_update,
     shard_size,
     zero1,
+    zero1_pending_structs,
     zero1_state_structs,
 )
 
@@ -29,5 +30,6 @@ __all__ = [
     "sgd",
     "shard_size",
     "zero1",
+    "zero1_pending_structs",
     "zero1_state_structs",
 ]

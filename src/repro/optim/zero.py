@@ -156,6 +156,18 @@ def zero1_state_structs(inner: Optimizer, dp_plan: BucketPlan,
     return {"inner": out}
 
 
+def zero1_pending_structs(dp_plan: BucketPlan, dp_size: int) -> Any:
+    """Local ShapeDtypeStructs of the deferred-AG carry (DESIGN.md §10):
+    one f32 update shard per dp bucket, keyed like the inner state.
+    Zero-initialized by ``TrainStep.init_opt`` — gathering zeros at step
+    0 is the identity update, so a fresh deferred run starts exactly
+    like a scheduled one."""
+    return {
+        str(i): jax.ShapeDtypeStruct(
+            (shard_size(b.size, dp_size),), jnp.float32)
+        for i, b in enumerate(dp_plan.buckets)}
+
+
 def scheduled_update(inner: Optimizer, dp_plan: BucketPlan, params: Any,
                      state: Any, step: jax.Array, *, dp_size: int):
     """The UPDATE-op callback for a StepProgram schedule.

@@ -33,6 +33,7 @@ from repro.optim.optimizers import (
 from repro.optim.zero import (
     scheduled_update,
     shard_size,
+    zero1_pending_structs,
     zero1_state_structs,
 )
 from repro.parallel.sharding import batch_spec, dp_axes_of
@@ -48,6 +49,29 @@ def _batch_specs(batch_like: Any, mesh: Mesh) -> Any:
         k: (P() if np.ndim(v) == 0 else bspec)
         for k, v in batch_like.items()
     }
+
+
+def _micro_compute(cfg: Any, batch_like: Any, mesh: Mesh,
+                   microbatch: int):
+    """PER-MICROBATCH ComputeModel for meta-strategy (auto) ranking —
+    derived from the batch shape the step will actually run.  Returns
+    None for configs outside the arch registry's FLOP model (auto then
+    ranks on comm alone, as before)."""
+    try:
+        from repro.sim.compute import compute_model_for
+
+        dims = next(np.shape(v) for v in jax.tree.leaves(batch_like)
+                    if np.ndim(v) > 0)
+        cm = compute_model_for(
+            cfg, global_batch=int(dims[0]),
+            seq_len=int(dims[1]) if len(dims) > 1 else 1,
+            n_devices=int(mesh.devices.size))
+        if microbatch > 1:
+            cm = dataclasses.replace(cm, t_fwd=cm.t_fwd / microbatch,
+                                     t_bwd=cm.t_bwd / microbatch)
+        return cm
+    except Exception:
+        return None
 
 
 def _opt_state_specs(state_like: Any, params_like: Any, pspecs: Any,
@@ -76,6 +100,11 @@ class TrainStep:
     mesh: Mesh
     gradsync: GradSync | None
     opt_state_like: Any = None        # global ShapeDtypeStructs
+    # deferred StepProgram only: jitted (params, opt_state) -> params
+    # that all-gathers + applies the carried update shards, so the last
+    # trained step's update lands before an eval/checkpoint/export reads
+    # the params (during training the NEXT step's PRE program does this)
+    finalize: Callable[..., Any] | None = None
 
     def shardings(self, tree_specs):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s), tree_specs)
@@ -102,8 +131,9 @@ def make_train_step(
     params_like: Any,
     clip_norm: float = 1.0,
     zero1_mode: bool = False,
-    zero1_plan: str = "scheduled",  # "scheduled" (StepProgram) | "monolithic"
+    zero1_plan: str = "scheduled",  # "scheduled" | "deferred" | "monolithic"
     microbatch: int = 1,    # grad-accumulation factor (memory §Perf lever)
+    accum_overlap: bool = True,  # peel the last microbatch out of the scan
     donate: bool = False,   # enable in production (launcher); off for tests
 ) -> TrainStep:
     """Build the jitted, shard_map'd train step for one (arch, mesh, sync).
@@ -116,9 +146,23 @@ def make_train_step(
     RS→UPDATE→AG triples planned by the configured strategy, spliced
     after the sync ops in ONE StepProgram schedule (DESIGN.md §9), with
     gradient clipping as a scheduled NORM op (psum'd squared norms, clip
-    on shards before the update).  ``"monolithic"`` keeps the optimizer
-    opaque: one flat RS→update→AG after the full sync (no clipping —
-    grads are still DP-partial when a norm could be taken locally).
+    on shards before the update).  ``"deferred"`` pipelines that program
+    across the step boundary (DESIGN.md §10): the all-gathers detach
+    into the TOP of the next step — the update shards ride along in
+    ``opt_state["pending"]``, each step first gathers + applies them
+    (overlapping its own forward) and ends with fresh shards instead of
+    a serialized AG tail; ``TrainStep.finalize`` flushes the last
+    pending shards when training stops.  ``"monolithic"`` keeps the
+    optimizer opaque: one flat RS→update→AG after the full sync (no
+    clipping — grads are still DP-partial when a norm could be taken
+    locally).
+
+    With ``microbatch > 1`` and ``accum_overlap`` (default) the FINAL
+    microbatch is peeled out of the accumulation scan: its backward is
+    emitted inline, so each sync/RS bucket can start the moment that
+    backward produces its gradients — comm overlaps the last
+    microbatch's compute instead of waiting for the whole scan
+    (bit-exact with the plain scan: same accumulation order).
     """
     api = family_of(cfg)
     rules = api.param_rules(cfg)
@@ -126,11 +170,12 @@ def make_train_step(
     bspecs = _batch_specs(batch_like, mesh)
     tp = getattr(cfg, "tp", 1)
     dp = dp_axes_of(mesh)
-    if zero1_plan not in ("scheduled", "monolithic"):
+    if zero1_plan not in ("scheduled", "deferred", "monolithic"):
         raise ValueError(f"unknown zero1_plan {zero1_plan!r}")
     zmeta = getattr(optimizer, "zero1_meta", None)
     zero1_scheduled = bool(zmeta) and zero1_mode \
-        and zero1_plan == "scheduled"
+        and zero1_plan in ("scheduled", "deferred")
+    defer_ag = zero1_scheduled and zero1_plan == "deferred"
 
     # skip leaves from the post-backward schedule ONLY when the model is
     # actually emitting their psums inside the backward scan — otherwise
@@ -147,13 +192,22 @@ def make_train_step(
     if zero1_scheduled:
         sync = dataclasses.replace(
             sync, exclude_axes=tuple(dp), zero1_dp_axes=tuple(dp),
-            zero1_clip=bool(clip_norm))
+            zero1_clip=bool(clip_norm), zero1_defer_ag=defer_ag,
+            zero1_accum=microbatch, zero1_accum_overlap=accum_overlap)
+    if get_strategy(sync.strategy).meta and sync.sim_compute is None:
+        sync = dataclasses.replace(
+            sync, sim_compute=_micro_compute(cfg, batch_like, mesh,
+                                             microbatch))
     gs = GradSync(sync, mesh, pspecs, grads_local, in_scan_names=in_scan)
 
     if zmeta:
         inner_opt, dp_size, _ = zmeta
         if zero1_scheduled:
             local_like = zero1_state_structs(inner_opt, gs.dp_plan, dp_size)
+            if defer_ag:
+                # the deferred-AG carry: last step's update shards
+                local_like["pending"] = zero1_pending_structs(
+                    gs.dp_plan, dp_size)
         else:
             # monolithic ZeRO-1: ONE flat shard sized from LOCAL params
             n_local = sum(int(np.prod(l.shape)) for l in
@@ -163,24 +217,57 @@ def make_train_step(
                 jax.ShapeDtypeStruct((shard_size(n_local, dp_size),),
                                      jnp.float32))}
         # global view: each local leaf is dp-sharded on dim 0
-        opt_state_like = {"inner": jax.tree.map(
+        opt_state_like = jax.tree.map(
             lambda l: jax.ShapeDtypeStruct((l.shape[0] * dp_size,
                                             *l.shape[1:]), l.dtype),
-            local_like["inner"])}
+            local_like)
     else:
         opt_state_like = jax.eval_shape(optimizer.init, params_like)
     ospecs = _opt_state_specs(opt_state_like, params_like, pspecs, mesh)
 
+    # deferred-AG: dp bucket_id ↔ pending-state key (both derived from
+    # gs.dp_plan, so the pairing is static) + the phase-split schedule
+    if defer_ag:
+        pend_keys = tuple((b.bucket_id, str(i))
+                          for i, b in enumerate(gs.dp_plan.buckets))
+        post_sched = gs.program.post_schedule()
+
+        def gather_pending(params, opt_state):
+            """PRE program (DESIGN.md §10): all-gather the PREVIOUS
+            step's update shards and apply them to the params.  The
+            gathers free-fly, overlapping the input pipeline and each
+            other; the zero-initialized carry gathers to an identity
+            update, so a fresh run's step 0 starts unchanged.  Shared
+            by the step prologue and ``finalize`` so the two stay
+            bit-identical."""
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            prev = gs.apply_pending(
+                zeros, {bid: opt_state["pending"][k]
+                        for bid, k in pend_keys})
+            return apply_updates(params, prev)
+
     def step(params, opt_state, batch, step_idx):
+        if defer_ag:
+            # apply LAST step's deferred update shards before anything
+            # reads the params
+            params = gather_pending(params, opt_state)
         if microbatch > 1:
             # grad accumulation: scan over microbatches — activations live
-            # only for one microbatch (temp memory ÷ microbatch)
-            def split(x):
+            # only for one microbatch (temp memory ÷ microbatch).  Each
+            # microbatch sees its 1/M share of the batch-level
+            # normalizer, and the accumulated loss/grads are divided by
+            # M below — the mean over microbatches, NOT the sum, so the
+            # effective LR and the reported loss are independent of M.
+            def split(path, x):
                 if np.ndim(x) == 0:
+                    if any(getattr(k, "key", None) == "global_tokens"
+                           for k in path):
+                        x = x / microbatch
                     return jnp.broadcast_to(x, (microbatch,))
                 b = x.shape[0]
                 return x.reshape(microbatch, b // microbatch, *x.shape[1:])
-            mbs = jax.tree.map(split, batch)
+            mbs = jax.tree_util.tree_map_with_path(split, batch)
 
             def body(acc, mb):
                 l, g = jax.value_and_grad(
@@ -197,8 +284,22 @@ def make_train_step(
             # unroll so cost_analysis sees every microbatch
             mb_unroll = microbatch if getattr(
                 cfg, "chunk_unroll", False) else 1
-            (loss, grads), _ = jax.lax.scan(body, zero, mbs,
-                                            unroll=mb_unroll)
+            if accum_overlap:
+                # accumulation-overlapped sync: peel the FINAL
+                # microbatch out of the scan so its backward is emitted
+                # inline — each sync/RS bucket starts the moment this
+                # backward produces its gradients, overlapping the
+                # accumulation tail instead of waiting behind the scan.
+                # Same accumulation order as the plain scan: bit-exact.
+                head = jax.tree.map(lambda v: v[:-1], mbs)
+                last = jax.tree.map(lambda v: v[-1], mbs)
+                acc, _ = jax.lax.scan(body, zero, head, unroll=mb_unroll)
+                (loss, grads), _ = body(acc, last)
+            else:
+                (loss, grads), _ = jax.lax.scan(body, zero, mbs,
+                                                unroll=mb_unroll)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
         else:
             loss, grads = jax.value_and_grad(
                 lambda p: api.train_forward(p, batch, cfg))(params)
@@ -214,7 +315,14 @@ def make_train_step(
                 dp_size=dp_size)
             aux: dict = {}
             updates = gs(grads, update_fn=update_fn,
-                         clip_norm=float(clip_norm or 0.0), aux=aux)
+                         clip_norm=float(clip_norm or 0.0), aux=aux,
+                         schedule=post_sched if defer_ag else None)
+            if defer_ag:
+                # the AGs were deferred: carry this step's update shards
+                # to the next step's PRE program instead of applying
+                new_state["pending"] = {
+                    k: aux["update_shards"][bid] for bid, k in pend_keys}
+                updates = None
             opt_state = new_state
             gnorm = aux.get("grad_norm", jnp.float32(0.0))
         else:
@@ -230,7 +338,8 @@ def make_train_step(
                 gnorm = jnp.float32(0.0)
             updates, opt_state = optimizer.update(
                 grads, opt_state, params, step_idx)
-        params = apply_updates(params, updates)
+        if updates is not None:
+            params = apply_updates(params, updates)
         loss = jax.lax.psum(loss, dp) if dp else loss
         metrics = {"loss": loss, "grad_norm": gnorm}
         return params, opt_state, metrics
@@ -242,8 +351,17 @@ def make_train_step(
         out_specs=(pspecs, ospecs, mspecs),
         check_vma=False)
     jitted = jax.jit(wrapped, donate_argnums=(0, 1) if donate else ())
+
+    finalize = None
+    if defer_ag:
+        # flush the carried update shards (same PRE program the next
+        # step would run) — for eval/checkpoint-export/parity checks
+        finalize = jax.jit(jax.shard_map(
+            gather_pending, mesh=mesh, in_specs=(pspecs, ospecs),
+            out_specs=pspecs, check_vma=False))
+
     return TrainStep(jitted, pspecs, ospecs, bspecs, mesh, gs,
-                     opt_state_like)
+                     opt_state_like, finalize=finalize)
 
 
 class Trainer:

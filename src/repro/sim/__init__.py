@@ -34,7 +34,14 @@ from repro.sim.compute import (
     count_params,
     fwd_flops,
 )
-from repro.sim.engine import OpEvent, SimConfig, Timeline, simulate
+from repro.sim.engine import (
+    OpEvent,
+    PipelinedTimeline,
+    SimConfig,
+    Timeline,
+    simulate,
+    simulate_pipelined,
+)
 from repro.sim.netmodel import DCN, ICI, LinkModel, NetworkModel, default_network
 from repro.sim.trace import (
     ascii_timeline,
@@ -51,6 +58,7 @@ __all__ = [
     "LinkModel",
     "NetworkModel",
     "OpEvent",
+    "PipelinedTimeline",
     "Prediction",
     "SimConfig",
     "StagingModel",
@@ -71,6 +79,7 @@ __all__ = [
     "rank_strategies",
     "sim_config_for",
     "simulate",
+    "simulate_pipelined",
     "simulate_strategy",
     "write_chrome_trace",
 ]

@@ -37,7 +37,12 @@ from repro.core.schedule import UPDATE, CollectiveOp, CommSchedule
 from repro.core.stepprogram import zero1_schedule
 
 from repro.sim.compute import ComputeModel
-from repro.sim.engine import SimConfig, Timeline, simulate
+from repro.sim.engine import (
+    SimConfig,
+    Timeline,
+    simulate,
+    simulate_pipelined,
+)
 from repro.sim.netmodel import NetworkModel, default_network
 
 
@@ -86,32 +91,18 @@ def rank_strategies(
     skip_names: frozenset[str] = frozenset(),
     strategies: Sequence[str] | None = None,
     in_scan_active: bool = True,
-    zero1: Mapping[str, Any] | None = None,
 ) -> list[tuple[str, Timeline]]:
     """Every fixed strategy's predicted timeline, best first.
 
-    With ``zero1`` ({"dp_axes": ..., "clip": ...}) each candidate's plan
-    is first rewritten into the StepProgram's RS→UPDATE→AG triples
-    (``repro.core.stepprogram.zero1_schedule``) so the ranking prices
-    the *whole step* — shard updates and all-gathers included — not just
-    the gradient sync half.
+    (Whole-step ZeRO-1 rankings live in ``rank_step_plans`` — the
+    deferred/zero1/flat family leaderboard ``auto`` consults.)
     """
     names = tuple(strategies) if strategies else fixed_strategy_names()
     out = []
     for name in names:
-        if zero1 is not None:
-            base = get_strategy(name).plan(plan, skip_names=skip_names)
-            schedule = zero1_schedule(
-                base, dp_axes=tuple(zero1["dp_axes"]),
-                clip=bool(zero1.get("clip", False)))
-            tl = simulate(
-                schedule, mesh_shape, compute=compute, net=net,
-                sim=sim_config_for(name, sim,
-                                   in_scan_active=in_scan_active))
-        else:
-            _, tl = simulate_strategy(
-                name, plan, mesh_shape, compute=compute, net=net, sim=sim,
-                skip_names=skip_names, in_scan_active=in_scan_active)
+        _, tl = simulate_strategy(
+            name, plan, mesh_shape, compute=compute, net=net, sim=sim,
+            skip_names=skip_names, in_scan_active=in_scan_active)
         out.append((name, tl))
     out.sort(key=lambda p: (p[1].step_time, p[0]))
     return out
@@ -154,27 +145,47 @@ def rank_step_plans(
     net: NetworkModel | None = None,
     sim: SimConfig | None = None,
     strategies: Sequence[str] | None = None,
+    accum: int = 1,
+    accum_overlap: bool = True,
 ) -> list[tuple[str, Timeline]]:
-    """ZeRO-1-scheduled vs flat(+monolithic update) step plans, ranked.
+    """Step-plan families × strategies, ranked by predicted step time.
 
-    Rows are labelled ``zero1:<strategy>`` (per-bucket RS→UPDATE→AG
-    triples) and ``flat:<strategy>`` (the strategy's allreduce schedule
-    + one full-buffer update) — the comparison the StepProgram exists to
-    win: same wire bytes, but the update is sharded AND overlapped.
+    Rows are labelled ``deferred:<strategy>`` (pipelined StepProgram:
+    the all-gathers split into a PRE program hidden under the NEXT
+    step's forward — simulated in steady state), ``zero1:<strategy>``
+    (per-bucket RS→UPDATE→AG triples, same-step) and ``flat:<strategy>``
+    (the strategy's allreduce schedule + one full-buffer update) — the
+    §9/§10 arc on one leaderboard: same wire bytes, progressively less
+    of them exposed.
+
+    ``compute`` is the PER-MICROBATCH model when ``accum`` > 1: the
+    M-microbatch accumulation scan is folded in (releases only from the
+    final microbatch's backward — during it with ``accum_overlap``, the
+    peeled-tail training shape, else at the scan's end), and the
+    deferred PRE window is the FIRST microbatch's forward.
     """
     names = tuple(strategies) if strategies else fixed_strategy_names()
+    base_compute = compute or ComputeModel(t_fwd=0.0, t_bwd=0.0)
+    eff = base_compute.with_accum(accum, overlap_tail=accum_overlap)
     out: list[tuple[str, Timeline]] = []
     for name in names:
         base = get_strategy(name).plan(dp_plan)
         zs = zero1_schedule(base, dp_axes=tuple(dp_axes), clip=clip)
         scfg = sim_config_for(name, sim, in_scan_active=False)
         out.append((f"zero1:{name}",
-                    simulate(zs, mesh_shape, compute=compute, net=net,
+                    simulate(zs, mesh_shape, compute=eff, net=net,
                              sim=scfg)))
         fs = flat_step_schedule(dp_plan, name)
         out.append((f"flat:{name}",
-                    simulate(fs, mesh_shape, compute=compute, net=net,
+                    simulate(fs, mesh_shape, compute=eff, net=net,
                              sim=scfg)))
+        zd = zero1_schedule(base, dp_axes=tuple(dp_axes), clip=clip,
+                            defer_ag=True)
+        post, pre = zd.split_phases()
+        out.append((f"deferred:{name}",
+                    simulate_pipelined(
+                        post, pre, mesh_shape, compute=eff, net=net,
+                        sim=scfg, pre_window=base_compute.t_fwd)))
     out.sort(key=lambda p: (p[1].step_time, p[0]))
     return out
 
@@ -214,10 +225,15 @@ def plan_auto(
     carries mesh_shape / reducer / itemsize / an optional ComputeModel.
 
     When GradSync is planning a ZeRO-1 StepProgram it adds a ``zero1``
-    mapping ({"dp_axes", "dp_size", "clip"}) — the candidates are then
-    ranked as their rewritten RS→UPDATE→AG step programs (UPDATE ops
-    costed), so ``auto`` picks the strategy whose *zero1-scheduled*
-    whole-step timeline wins, not the one whose plain sync would."""
+    mapping ({"dp_axes", "dp_size", "clip", "defer"}) — the candidates
+    are then ranked via ``rank_step_plans`` across ALL THREE step-plan
+    families (``deferred:<s>`` / ``zero1:<s>`` / ``flat:<s>``, UPDATE
+    ops costed, the deferred rows in pipelined steady state).  ``auto``
+    delegates to the best strategy WITHIN the family the caller will
+    execute (``defer`` → the pipelined rows, else the same-step zero1
+    rows — a deferred-only win must not pick a strategy the scheduled
+    execution can't realize); that family lands in
+    ``last_auto_report()["plan"]`` and the full ranking in the report."""
     ctx = dict(context or {})
     mesh_shape = ctx.get("mesh_shape") or {
         a: 8 for b in plan.buckets for a in b.reduce_axes}
@@ -225,6 +241,28 @@ def plan_auto(
     sim = SimConfig(itemsize=int(ctx.get("itemsize", 4)), reducer=reducer,
                     fused_staging=bool(ctx.get("fused_staging", True)))
     zero1 = ctx.get("zero1")
+    if zero1 is not None:
+        ranked = rank_step_plans(
+            plan, mesh_shape, dp_axes=tuple(zero1["dp_axes"]),
+            clip=bool(zero1.get("clip", False)),
+            compute=ctx.get("compute"), net=ctx.get("net"), sim=sim,
+            accum=int(zero1.get("accum", 1)),
+            accum_overlap=bool(zero1.get("accum_overlap", True)))
+        # the winner must come from the family the caller will EXECUTE
+        # (zero1_plan="deferred" → pipelined rows, else same-step rows);
+        # the full three-family ranking stays in the report for
+        # visibility, including the flat baseline no zero1 run executes
+        family = "deferred" if zero1.get("defer") else "zero1"
+        winner = next(n for n, _ in ranked
+                      if n.startswith(family + ":")).split(":", 1)[1]
+        _LAST_AUTO.clear()
+        _LAST_AUTO.update({
+            "winner": winner,
+            "plan": family,
+            "ranking": [(n, tl.step_time) for n, tl in ranked],
+            "zero1": True,
+        })
+        return get_strategy(winner).plan(plan, skip_names=skip_names)
     # in-scan psums are keyed on the CONFIGURED strategy, so a delegated
     # depcha runs as plain chains — rank it with the semantics the
     # delegated execution can actually realize (in-scan only counts when
@@ -233,15 +271,14 @@ def plan_auto(
         plan, mesh_shape,
         compute=ctx.get("compute"), net=ctx.get("net"), sim=sim,
         skip_names=skip_names,
-        strategies=fixed_strategy_names() if zero1 is not None
-        else _candidates(reducer),
-        in_scan_active=bool(skip_names), zero1=zero1)
+        strategies=_candidates(reducer),
+        in_scan_active=bool(skip_names))
     winner = ranked[0][0]
     _LAST_AUTO.clear()
     _LAST_AUTO.update({
         "winner": winner,
         "ranking": [(n, tl.step_time) for n, tl in ranked],
-        "zero1": zero1 is not None,
+        "zero1": False,
     })
     return get_strategy(winner).plan(plan, skip_names=skip_names)
 

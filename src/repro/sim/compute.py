@@ -126,6 +126,26 @@ class ComputeModel:
     def end(self) -> float:
         return self.t_fwd + self.t_bwd
 
+    def with_accum(self, accum: int, *,
+                   overlap_tail: bool = True) -> "ComputeModel":
+        """Fold an M-microbatch gradient-accumulation scan into the step.
+
+        ``self`` is the PER-MICROBATCH model.  The returned model spans
+        the whole M-microbatch step: with ``overlap_tail`` (the peeled
+        final microbatch of DESIGN.md §10) the first M-1 microbatches
+        become pure head compute and releases happen during the FINAL
+        microbatch's backward — the only place the runtime can emit
+        them, since the accumulated gradients do not exist earlier.
+        Without it (plain scan) every release waits for the entire scan.
+        """
+        if accum <= 1:
+            return self
+        micro = self.t_fwd + self.t_bwd
+        if overlap_tail:
+            return dataclasses.replace(
+                self, t_fwd=(accum - 1) * micro + self.t_fwd)
+        return dataclasses.replace(self, t_fwd=accum * micro, t_bwd=0.0)
+
 
 def count_params(cfg) -> int:
     """Total parameter elements via eval_shape (no device allocation)."""

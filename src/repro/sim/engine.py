@@ -259,3 +259,56 @@ def simulate(
     events.sort(key=lambda e: (e.start, e.op_id))
     return Timeline(events=tuple(events),
                     t_fwd=compute.t_fwd, t_bwd=compute.t_bwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinedTimeline(Timeline):
+    """A deferred-AG (phase-split) step in steady state (DESIGN.md §10).
+
+    ``t_fwd``/``t_bwd`` describe the possibly-PUSHED compute (the
+    forward start slips when the PRE gathers outrun their overlap
+    window), while ``pure_compute`` is what compute alone would take —
+    so ``exposed_comm`` counts BOTH ends of the pipeline: time the
+    forward waited on last step's gathers at the head, and time the
+    step waited on its own sync/RS/update tail.
+    """
+
+    pure_compute: float = 0.0
+
+    @property
+    def exposed_comm(self) -> float:
+        return max(0.0, self.step_time - self.pure_compute)
+
+
+def simulate_pipelined(
+    post: CommSchedule,
+    pre: CommSchedule,
+    mesh_shape: Mapping[str, int],
+    *,
+    compute: ComputeModel,
+    net: NetworkModel | None = None,
+    sim: SimConfig | None = None,
+    pre_window: float | None = None,
+) -> PipelinedTimeline:
+    """Steady-state timeline of one pipelined step.
+
+    ``pre`` holds last step's deferred all-gathers: their update-shard
+    inputs were carried across the boundary, so every op is released at
+    t=0 and they overlap the forward (and each other).  ``pre_window``
+    is the compute time available to hide them — the forward of the
+    first microbatch that reads the params (defaults to
+    ``compute.t_fwd``); gathers that outrun it push the whole step.
+    ``post`` (sync + RS + NORM + UPDATE) then executes against the
+    pushed compute's release times exactly like a plain step.
+    """
+    idle = ComputeModel(t_fwd=0.0, t_bwd=0.0)
+    pre_tl = simulate(pre, mesh_shape, compute=idle, net=net, sim=sim)
+    window = compute.t_fwd if pre_window is None else pre_window
+    push = max(0.0, pre_tl.comm_end - window)
+    shifted = dataclasses.replace(compute, t_fwd=compute.t_fwd + push)
+    post_tl = simulate(post, mesh_shape, compute=shifted, net=net, sim=sim)
+    events = tuple(sorted(pre_tl.events + post_tl.events,
+                          key=lambda e: (e.start, e.op_id)))
+    return PipelinedTimeline(
+        events=events, t_fwd=shifted.t_fwd, t_bwd=compute.t_bwd,
+        pure_compute=compute.end)

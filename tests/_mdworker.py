@@ -387,4 +387,82 @@ comp_ring_out = np.asarray(_comp_with("compressed_ring"))
 check("compressed-ring-equals-compressed",
       float(np.max(np.abs(comp_out - comp_ring_out))) == 0.0)
 
+# 10. pipelined StepProgram (DESIGN.md §10) at dp=2 × tp=4: the
+#     deferred plan (AGs detached into the next step's top, update
+#     shards carried in opt_state["pending"]) is BIT-exact with the
+#     scheduled plan over consecutive steps — the real all-gather
+#     materializes the shards identically on both paths, so the carried
+#     state (the easy thing to get wrong) is fully checked — and the
+#     peeled-final-microbatch accumulation is bit-exact with the plain
+#     scan while microbatch count leaves the trajectory unchanged.
+pipe8 = TokenPipeline(96, 32, 8, seed=5, mesh=mesh8)
+
+
+def run_steps(mode, n, *, clip_norm=0.0, microbatch=1,
+              accum_overlap=True):
+    cfg = mk_dense(4)
+    params = family_of(cfg).init(jax.random.PRNGKey(2), mk_dense(1))
+    b0 = pipe8.batch_at(0)
+    if mode == "flat":
+        opt = adamw(1e-3)
+        sync = GradSyncConfig(strategy="concom", bucket_bytes=1 << 12)
+        ts = make_train_step(cfg, mesh8, sync, opt, batch_like=b0,
+                             params_like=params, clip_norm=clip_norm,
+                             microbatch=microbatch,
+                             accum_overlap=accum_overlap)
+    else:
+        opt = zero1(adamw(1e-3), ("data",), 2)
+        sync = GradSyncConfig(strategy="concom", bucket_bytes=1 << 12,
+                              exclude_axes=("data",))
+        ts = make_train_step(cfg, mesh8, sync, opt, batch_like=b0,
+                             params_like=params, zero1_mode=True,
+                             zero1_plan=mode, clip_norm=clip_norm,
+                             microbatch=microbatch,
+                             accum_overlap=accum_overlap)
+    ps = jax.device_put(params, ts.shardings(ts.param_specs))
+    st = ts.init_opt()
+    m = None
+    for k in range(n):
+        ps, st, m = ts.fn(ps, st, pipe8.batch_at(k), jnp.int32(k))
+    return ts, ps, st, m
+
+
+ts_ds, p_ds, s_ds, m_ds = run_steps("deferred", 2)
+_, p_ss, _, m_ss = run_steps("scheduled", 2)
+check("pipelined-deferred-ir-phases",
+      ts_ds.gradsync.schedule.phase_counts().get("pre", 0) > 1
+      and ts_ds.gradsync.program.defer_ag)
+check("pipelined-deferred-equals-scheduled-2steps-bitexact",
+      worst_diff(ts_ds.finalize(p_ds, s_ds), p_ss) == 0.0)
+ts_d3, p_d3, s_d3, _ = run_steps("deferred", 3)
+_, p_s3, _, _ = run_steps("scheduled", 3)
+check("pipelined-deferred-equals-scheduled-3steps-bitexact",
+      worst_diff(ts_d3.finalize(p_d3, s_d3), p_s3) == 0.0)
+
+# clipped: the NORM op stays in the POST program; the grad-norm metric
+# and the clipped trajectory both survive the phase split
+ts_dc, p_dc, s_dc, m_dc = run_steps("deferred", 2, clip_norm=0.05)
+_, p_sc2, _, m_sc2 = run_steps("scheduled", 2, clip_norm=0.05)
+check("pipelined-deferred-clip-bitexact",
+      worst_diff(ts_dc.finalize(p_dc, s_dc), p_sc2) == 0.0
+      and float(m_dc["grad_norm"]) == float(m_sc2["grad_norm"]))
+
+# accumulation-overlapped (peeled final microbatch) ≡ plain scan, and
+# microbatch count ≡ unsplit batch (normalization), on real dp groups.
+# The peel preserves the exact accumulation order, but the inlined
+# final backward compiles outside the scan body — under tp=4 XLA fuses
+# its matmul/psum chain differently, so parity is float round-off
+# (~1e-7 after 2 steps), not bit-level (it IS bit-exact at dp=1, see
+# tests/test_pipelined.py).
+_, p_ov, _, m_ov = run_steps("flat", 2, microbatch=4, accum_overlap=True)
+_, p_pl, _, m_pl = run_steps("flat", 2, microbatch=4,
+                             accum_overlap=False)
+check("accum-overlap-equals-plain-scan",
+      worst_diff(p_ov, p_pl) < 1e-5
+      and float(m_ov["loss"]) == float(m_pl["loss"]))
+_, p_m1, _, m_m1 = run_steps("flat", 2, microbatch=1)
+check("accum-m4-equals-m1-trajectory",
+      worst_diff(p_ov, p_m1) < 1e-5
+      and abs(float(m_ov["loss"]) - float(m_m1["loss"])) < 1e-5)
+
 print("DONE", flush=True)

@@ -193,5 +193,5 @@ def test_kvstore_records_same_ir(smoke_mesh):
     np.testing.assert_allclose(np.asarray(o0), np.asarray(g1))
     assert recorded["stats"] == {
         "num_ops": 2, "num_chains": 2, "max_chain_len": 1,
-        "kinds": {ALLREDUCE: 2}}
+        "kinds": {ALLREDUCE: 2}, "phases": {"post": 2}}
     assert recorded["chains"] == {0: 1, 1: 1}

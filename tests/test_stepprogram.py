@@ -185,7 +185,7 @@ def test_zero1_scheduled_beats_flat_monolithic_baseline():
     ranked = rank_step_plans(plan, MESH, dp_axes=("data",),
                              compute=COMPUTE)
     names = [n for n, _ in ranked]
-    assert {n.split(":")[0] for n in names} == {"zero1", "flat"}
+    assert {n.split(":")[0] for n in names} == {"deferred", "zero1", "flat"}
     assert {n.split(":")[1] for n in names} == set(fixed_strategy_names())
     by = dict(ranked)
     for s in fixed_strategy_names():
@@ -222,7 +222,11 @@ def test_auto_ranks_zero1_step_programs():
     report = last_auto_report()
     assert report["zero1"] is True
     assert report["winner"] in fixed_strategy_names()
-    assert {n for n, _ in report["ranking"]} == set(fixed_strategy_names())
+    assert report["plan"] in ("deferred", "zero1", "flat")
+    # the ranking covers all three step-plan families × every strategy
+    labels = {n for n, _ in report["ranking"]}
+    assert labels == {f"{fam}:{s}" for fam in ("deferred", "zero1", "flat")
+                      for s in fixed_strategy_names()}
     # auto returns the winner's BASE plan (GradSync applies the rewrite)
     assert schedule == get_strategy(report["winner"]).plan(plan)
 
