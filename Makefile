@@ -1,7 +1,7 @@
 # Convenience targets; `make test` is the tier-1 gate (ROADMAP.md).
 PY ?= python
 
-.PHONY: test test-dev bench bench-smoke schedule dryrun sim-smoke
+.PHONY: test test-dev bench bench-smoke schedule dryrun sim-smoke analyze lint
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -25,6 +25,16 @@ bench-smoke:
 
 schedule:
 	PYTHONPATH=src $(PY) -m benchmarks.schedule_analysis
+
+# static analyzer (DESIGN.md §11) over the full strategy × reducer ×
+# channels × zero1 × accum registry cross-product — seconds, no devices;
+# nonzero exit iff any plannable schedule fails a pass
+analyze:
+	PYTHONPATH=src $(PY) -m repro.analyze --json BENCH_analyze.json
+
+# ruff is in requirements-dev.txt; the CI gate runs the same invocation
+lint:
+	ruff check src tests benchmarks
 
 dryrun:
 	PYTHONPATH=src $(PY) -m repro.launch.dryrun --all --mesh both

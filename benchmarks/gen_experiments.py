@@ -5,10 +5,9 @@
 from __future__ import annotations
 
 import json
-import os
 
-from benchmarks.paper_figures import fig13, fig14, fig15, fig16, validate
-from benchmarks.roofline import ICI_BW, PEAK_FLOPS, assemble
+from benchmarks.paper_figures import validate
+from benchmarks.roofline import assemble
 
 HBM_PER_CHIP_GB = 16.0   # TPU v5e
 

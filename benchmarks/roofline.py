@@ -22,9 +22,8 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
 import sys
-from typing import Any, Optional
+from typing import Optional
 
 PEAK_FLOPS = 197e12        # bf16 / chip
 HBM_BW = 819e9             # bytes/s

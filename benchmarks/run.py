@@ -22,7 +22,6 @@ import json
 import os
 import time
 
-import numpy as np
 
 
 def _t(fn, *args, reps=3):

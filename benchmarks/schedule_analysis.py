@@ -69,6 +69,17 @@ def analyze(strategy: str, zero1: str = "") -> dict:
         zero1_plan=zero1 or "scheduled")
     ir = ts.gradsync.schedule.stats()
     phases = ir["phases"]
+    # static analyzer verdict for the planned schedule (DESIGN.md §11):
+    # "OK" or the distinct pass:code error classes
+    from repro.analysis import run_passes
+
+    report = run_passes(
+        ts.gradsync.schedule,
+        mesh_shape=ts.gradsync.mesh_shape,
+        default_reducer=ts.gradsync.cfg.reducer,
+        plan_comm_dtype=ts.gradsync.cfg.comm_dtype,
+        expect_defer=zero1 == "deferred")
+    verdict = "OK" if report.ok else ";".join(report.error_classes)
     # simulated timeline of the SAME planned schedule on this 2×4 mesh
     # (UPDATE/NORM ops of the StepProgram rows costed by the engine;
     # deferred rows in pipelined steady state — PRE gathers at the top)
@@ -101,6 +112,7 @@ def analyze(strategy: str, zero1: str = "") -> dict:
         in_loop += len(re.findall(rf"= [^=\n]*{_COLL}\(", seg))
     tag = {"": "", "scheduled": "+zero1", "deferred": "+zero1d"}[zero1]
     return {"strategy": strategy + tag,
+            "analyzer": verdict,
             "ir_ops": ir["num_ops"],
             "ir_chains": ir["num_chains"],
             "ir_max_chain": ir["max_chain_len"],
@@ -121,7 +133,7 @@ def main():
 
     from repro.core import strategy_names
 
-    print("strategy,ir_ops,ir_chains,ir_max_chain,ir_update_ops,"
+    print("strategy,analyzer,ir_ops,ir_chains,ir_max_chain,ir_update_ops,"
           "ir_pre_ops,ir_post_ops,deferred_kb,"
           "collective_ops_static,in_loop_body,runtime_collectives(~),"
           "sim_step_us,sim_exposed_us,sim_overlap")
@@ -130,7 +142,8 @@ def main():
             r = analyze(s, zero1=zero1)
             runtime = (r["collective_ops"] - r["in_loop_body"]
                        + r["loop_trip_multiplied"])
-            print(f"{r['strategy']},{r['ir_ops']},{r['ir_chains']},"
+            print(f"{r['strategy']},{r['analyzer']},"
+                  f"{r['ir_ops']},{r['ir_chains']},"
                   f"{r['ir_max_chain']},{r['ir_update_ops']},"
                   f"{r['ir_pre_ops']},{r['ir_post_ops']},"
                   f"{r['deferred_kb']:.0f},"

@@ -3,7 +3,6 @@
 
     PYTHONPATH=src python examples/serve_lm.py
 """
-import threading
 import time
 
 import jax

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.core import GradSyncConfig, get_strategy, strategy_names
-from repro.data import Prefetcher, TokenPipeline
+from repro.data import TokenPipeline
 from repro.launch.mesh import make_smoke_mesh
 from repro.models import transformer as tf
 from repro.optim import adamw, cosine_warmup

@@ -1,0 +1,70 @@
+"""Static CommSchedule verifier (DESIGN.md §11).
+
+The paper's central hazard — "incorrect designs can easily lead to
+deadlocks or program crashes" when collectives are embedded in a
+training DAG — becomes *checkable* here: five pure-Python analysis
+passes run over any ``CommSchedule``/``StepProgram`` BEFORE anything is
+traced, and reject malformed schedules with a printable witness instead
+of a cryptic XLA error (or silent wrong numbers).
+
+Passes (``repro.analysis.passes``):
+  deadlock    — cycle / stuck-schedule detection over the union of chain
+                deps, data deps (ops reading the CURRENT flat outputs)
+                and cross-step PRE→POST carry edges, with a topological
+                witness on failure.
+  spmd        — per-rank issue-order simulation per mesh-axis group:
+                every rank in a communicator group must issue the same
+                collective sequence per channel (the paper's
+                funnel-vs-concurrent deadlock scenario), with reducer
+                families expanded into their stage collectives.
+  carry       — ``zero1_plan="deferred"`` soundness: every PRE
+                all-gather is covered by a POST UPDATE producing the
+                same bucket/dtype/shard, with exact bucket-set equality
+                so ``opt_state["pending"]`` is never read uninitialized
+                or half-written.
+  accounting  — RS/AG pair symmetry, ``comm_dtype`` legality per
+                reducer family, deferred-bytes consistency.
+  donation    — staged buffers both donated and read by a PRE op of the
+                next step.
+
+Entry points:
+  ``verify_schedule``  — raise ``ScheduleError`` on the first finding
+                         (the ``verify=`` hook in GradSync / KVStore).
+  ``run_passes``       — collect every finding into an
+                         ``AnalysisReport`` (CLI / benchmarks).
+  ``python -m repro.analyze`` — lint the full strategy × reducer ×
+                         channels × zero1-plan registry cross-product.
+"""
+from repro.analysis.passes import (
+    PASS_NAMES,
+    Finding,
+    ScheduleError,
+    Witness,
+    check_accounting,
+    check_carry,
+    check_deadlock,
+    check_donation,
+    check_spmd,
+    structural_findings,
+)
+from repro.analysis.verifier import (
+    AnalysisReport,
+    run_passes,
+    verify_schedule,
+)
+
+__all__ = [
+    "AnalysisReport",
+    "Finding",
+    "PASS_NAMES",
+    "ScheduleError",
+    "Witness",
+    "check_accounting",
+    "check_carry",
+    "check_deadlock",
+    "check_donation",
+    "check_spmd",
+    "run_passes",
+    "structural_findings",
+    "verify_schedule",
+]

@@ -1,0 +1,171 @@
+"""``python -m repro.analyze`` — lint every plannable schedule.
+
+Exhaustively plans the registry cross-product
+
+    strategy × reducer × num_channels × zero1 plan × accum
+
+on two mesh topologies (the 8-fake-device dp mesh and the dp=2 × tp=4
+smoke mesh) through the REAL planning path (``GradSync``), runs all
+five analysis passes on each resulting schedule, and reports.  Exit
+code 0 iff every plannable cell is clean — cells a constructor contract
+rejects up front (e.g. two-phase strategies with a hierarchical
+reducer) are counted separately, not failures.
+
+Everything is static: the mesh is a stand-in carrying only axis names
+and sizes, gradients are ShapeDtypeStructs — no devices, no tracing, no
+XLA.  ``--json PATH`` writes the machine-readable report.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import repro.sim.autotune  # noqa: F401  (registers the "auto" strategy)
+from repro.core.kvstore import GradSync, GradSyncConfig
+from repro.core.registry import reducer_names, strategy_names
+
+from repro.analysis.verifier import run_passes
+
+
+class StaticMesh:
+    """Mesh stand-in: axis names + sizes, no devices.  Enough for
+    ``make_bucket_plan`` / ``missing_axes`` / ``GradSync`` planning."""
+
+    def __init__(self, shape: dict[str, int]):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+    def __repr__(self):
+        return f"StaticMesh({self.shape})"
+
+
+def _model(model_axis: str | None):
+    """A small transformer-ish gradient pytree + param specs: a few MiB
+    across mixed shapes so bucketing produces multiple buckets per
+    channel; ``model_axis`` shards the matmul weights (their specs then
+    exclude that axis from the reduce set, like real TP)."""
+    mp = model_axis
+    shapes = {
+        "embed": ((1024, 128), P()),
+        "w_in": ((128, 512), (P(None, mp) if mp else P())),
+        "w_out": ((512, 128), (P(mp, None) if mp else P())),
+        "b_in": ((512,), (P(mp) if mp else P())),
+        "b_out": ((128,), P()),
+        "head": ((128, 1024), P()),
+        "scale": ((), P()),
+    }
+    grads = {k: jax.ShapeDtypeStruct(s, jnp.float32)
+             for k, (s, _) in shapes.items()}
+    specs = {k: spec for k, (_, spec) in shapes.items()}
+    return grads, specs
+
+
+MESHES: dict[str, tuple[dict[str, int], str | None]] = {
+    # name -> (axis sizes, model-sharding axis)
+    "dp8": ({"data": 8}, None),
+    "smoke-dp2tp4": ({"data": 2, "model": 4}, "model"),
+}
+
+
+def lint_cell(mesh_name: str, strategy: str, reducer: str,
+              num_channels: int, zero1: str, accum: int) -> dict[str, Any]:
+    """Plan one cross-product cell and run the analyzer on the result."""
+    mesh_shape, model_axis = MESHES[mesh_name]
+    mesh = StaticMesh(mesh_shape)
+    grads, specs = _model(model_axis)
+    dp_axes = ("data",) if zero1 != "none" else ()
+    cfg = GradSyncConfig(
+        strategy=strategy,
+        reducer=reducer,
+        bucket_bytes=256 * 1024,
+        num_channels=num_channels,
+        exclude_axes=dp_axes,
+        zero1_dp_axes=dp_axes,
+        zero1_clip=zero1 != "none",
+        zero1_defer_ag=zero1 == "deferred",
+        zero1_accum=accum,
+        verify=False,            # run_passes below collects ALL findings
+    )
+    cell = {
+        "mesh": mesh_name, "strategy": strategy, "reducer": reducer,
+        "channels": num_channels, "zero1": zero1, "accum": accum,
+    }
+    try:
+        gs = GradSync(cfg, mesh, specs, grads)
+    except ValueError as e:
+        # constructor contract (e.g. two-phase × hierarchical): the cell
+        # is unreachable by construction, not an analyzer failure
+        return {**cell, "status": "rejected", "reason": str(e)}
+    report = run_passes(
+        gs.schedule,
+        mesh_shape=gs.mesh_shape,
+        default_reducer=cfg.reducer,
+        plan_comm_dtype=cfg.comm_dtype,
+        expect_defer=cfg.zero1_defer_ag,
+    )
+    status = "ok" if report.ok else "error"
+    return {**cell, "status": status, **report.to_dict()}
+
+
+def iter_cells():
+    for mesh_name in MESHES:
+        for strategy in strategy_names():
+            for reducer in reducer_names():
+                for num_channels in (1, 4):
+                    for zero1 in ("none", "scheduled", "deferred"):
+                        for accum in (1, 4):
+                            yield (mesh_name, strategy, reducer,
+                                   num_channels, zero1, accum)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analyze",
+        description="statically lint the full strategy x reducer x "
+                    "channels x zero1 x accum registry cross-product")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print every cell, not just failures")
+    args = ap.parse_args(argv)
+
+    cells = [lint_cell(*c) for c in iter_cells()]
+    n_ok = sum(c["status"] == "ok" for c in cells)
+    n_rej = sum(c["status"] == "rejected" for c in cells)
+    bad = [c for c in cells if c["status"] == "error"]
+
+    def _label(c):
+        return (f"{c['mesh']}/{c['strategy']}/{c['reducer']}"
+                f"/ch{c['channels']}/{c['zero1']}/acc{c['accum']}")
+
+    for c in cells:
+        if c["status"] == "error":
+            classes = sorted({f"{f['pass']}:{f['code']}"
+                              for f in c["findings"]})
+            print(f"ERROR    {_label(c)}: {classes}")
+            for f in c["findings"]:
+                print(f"         {f['message']}")
+        elif args.verbose:
+            print(f"{c['status']:8s} {_label(c)}")
+
+    print(f"repro.analyze: {len(cells)} cells — {n_ok} ok, "
+          f"{n_rej} rejected by contract, {len(bad)} analyzer errors")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"cells": cells,
+                       "summary": {"total": len(cells), "ok": n_ok,
+                                   "rejected": n_rej,
+                                   "errors": len(bad)}}, f, indent=2)
+        print(f"report written to {args.json}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,702 @@
+"""The five analysis passes (DESIGN.md §11).
+
+Every pass is a pure function ``CommSchedule (+ context) -> [Finding]``:
+no jax, no tracing, no devices — a schedule with hundreds of ops checks
+in well under a millisecond, so the passes run on EVERY plan
+(``GradSyncConfig.verify``, on by default) without showing up in setup
+time.  Reachability is computed once as per-op ancestor bitmasks
+(python ints), so the pairwise ordering checks are O(1) lookups.
+
+Error classes are machine-readable ``Finding.code`` strings; the
+mutation corpus (``repro.analysis.mutations``) asserts each class is
+caught by the pass that owns it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.schedule import (
+    ALL_GATHER,
+    ALLREDUCE,
+    KINDS,
+    NORM,
+    PHASES,
+    POST,
+    PRE,
+    REDUCE_SCATTER,
+    UPDATE,
+    CommSchedule,
+    np_itemsize,
+)
+
+PASS_NAMES = ("deadlock", "spmd", "carry", "accounting", "donation")
+
+# kinds whose issue order on a shared communicator must be rank-uniform
+# (an ALL_GATHER is the second half of a matched pair — it attaches to
+# its producing RS/UPDATE and free-flies, the paper's OUTSTANDING window)
+_SERIAL_KINDS = (ALLREDUCE, REDUCE_SCATTER, NORM)
+
+
+@dataclasses.dataclass(frozen=True)
+class Witness:
+    """Printable evidence for one finding (the 'topological witness')."""
+
+    title: str
+    lines: tuple[str, ...] = ()
+
+    def render(self) -> str:
+        return "\n".join((self.title,) + tuple(f"  {l}" for l in self.lines))
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One failed check: which pass, which error class, which ops."""
+
+    pass_name: str
+    code: str            # machine-readable error class
+    message: str
+    ops: tuple[int, ...] = ()
+    witness: Witness | None = None
+
+    def render(self) -> str:
+        out = f"[{self.pass_name}:{self.code}] {self.message}"
+        if self.witness is not None:
+            out += "\n" + self.witness.render()
+        return out
+
+
+class ScheduleError(ValueError):
+    """A schedule failed static verification (raised by ``verify_schedule``
+    and the ``verify=`` planning hooks)."""
+
+    def __init__(self, findings: Sequence[Finding]):
+        self.findings = tuple(findings)
+        super().__init__("\n".join(f.render() for f in self.findings))
+
+    @property
+    def pass_name(self) -> str:
+        return self.findings[0].pass_name
+
+    @property
+    def code(self) -> str:
+        return self.findings[0].code
+
+
+def _op_str(op) -> str:
+    deps = ",".join(str(d) for d in op.depends_on)
+    return (f"op {op.op_id} {op.kind} bucket={op.bucket.bucket_id} "
+            f"chain={op.chain} phase={op.phase} deps=[{deps}]")
+
+
+# ------------------------------------------------------------- structure
+
+def structural_findings(schedule: CommSchedule) -> list[Finding]:
+    """Program-order soundness: what ``CommSchedule.validate`` enforces.
+
+    ``validate`` routes through this function (one implementation, two
+    entry points) so the shallow check and the analyzer cannot drift.
+    """
+    out: list[Finding] = []
+    seen: set[int] = set()
+    all_ids = {op.op_id for op in schedule.ops}
+    for op in schedule.ops:
+        if op.op_id in seen:
+            out.append(Finding(
+                "deadlock", "duplicate-op-id",
+                f"duplicate op_id {op.op_id}", (op.op_id,)))
+        if op.kind not in KINDS:
+            out.append(Finding(
+                "deadlock", "unknown-kind",
+                f"op {op.op_id}: unknown kind {op.kind!r}", (op.op_id,)))
+        if op.phase not in PHASES:
+            out.append(Finding(
+                "deadlock", "unknown-phase",
+                f"op {op.op_id}: unknown phase {op.phase!r}", (op.op_id,)))
+        if op.bucket.bucket_id < 0:
+            out.append(Finding(
+                "deadlock", "unknown-bucket",
+                f"op {op.op_id}: negative bucket_id "
+                f"{op.bucket.bucket_id}", (op.op_id,)))
+        for d in op.depends_on:
+            if d == op.op_id:
+                out.append(Finding(
+                    "deadlock", "self-dependency",
+                    f"op {op.op_id} depends on itself", (op.op_id,)))
+            elif d not in all_ids:
+                out.append(Finding(
+                    "deadlock", "dangling-dep",
+                    f"op {op.op_id} depends on {d}, which is not in the "
+                    f"schedule (dangling chain-dep reference)",
+                    (op.op_id,)))
+            elif d not in seen:
+                out.append(Finding(
+                    "deadlock", "non-topological",
+                    f"op {op.op_id} depends on {d}, which does not "
+                    f"precede it (schedule must be topologically "
+                    f"ordered)", (op.op_id, d)))
+        seen.add(op.op_id)
+    return out
+
+
+def _ancestor_masks(schedule: CommSchedule) -> dict[int, int]:
+    """op_id -> bitmask (over tuple positions) of transitive ancestors.
+
+    Only meaningful on structurally sound schedules (deps precede);
+    callers gate on ``structural_findings`` first.
+    """
+    pos = {op.op_id: i for i, op in enumerate(schedule.ops)}
+    anc: dict[int, int] = {}
+    for op in schedule.ops:
+        m = 0
+        for d in op.depends_on:
+            m |= anc.get(d, 0) | (1 << pos[d])
+        anc[op.op_id] = m
+    return anc
+
+
+def _reaches(anc: Mapping[int, int], pos: Mapping[int, int],
+             src: int, dst: int) -> bool:
+    """True if ``dst`` transitively depends on ``src`` (src →* dst)."""
+    return bool(anc.get(dst, 0) >> pos[src] & 1)
+
+
+def _find_cycle(schedule: CommSchedule) -> list[int] | None:
+    """A dependency cycle as an op_id path, or None."""
+    deps = {op.op_id: [d for d in op.depends_on
+                       if d != op.op_id and any(
+                           o.op_id == d for o in schedule.ops)]
+            for op in schedule.ops}
+    state: dict[int, int] = {}          # 0 unseen / 1 on stack / 2 done
+    parent: dict[int, int] = {}
+
+    for root in deps:
+        if state.get(root):
+            continue
+        stack = [(root, iter(deps[root]))]
+        state[root] = 1
+        while stack:
+            node, it = stack[-1]
+            advanced = False
+            for d in it:
+                if state.get(d, 0) == 1:     # back edge → cycle
+                    cyc = [d, node]
+                    cur = node
+                    while cur != d:
+                        cur = parent[cur]
+                        cyc.append(cur)
+                    return list(reversed(cyc))
+                if state.get(d, 0) == 0:
+                    state[d] = 1
+                    parent[d] = node
+                    stack.append((d, iter(deps[d])))
+                    advanced = True
+                    break
+            if not advanced:
+                state[node] = 2
+                stack.pop()
+    return None
+
+
+# ------------------------------------------------- pass 1: deadlock/cycle
+
+def check_deadlock(schedule: CommSchedule) -> list[Finding]:
+    """Cycle / stuck-schedule detection over the union dependency graph:
+    chain deps (``depends_on``), data deps (two ops touching the same
+    leaf read/write the same slot of the CURRENT flat outputs), and the
+    cross-step PRE→POST carry edges (a PRE op's result only exists in
+    the NEXT step, so a POST op depending on one can never be released).
+    """
+    out = structural_findings(schedule)
+    by_id = {op.op_id: op for op in schedule.ops}
+
+    # true cycles (possible once op_ids stop being tuple-ordered) — the
+    # witness is the cycle path the topological sort gets stuck on
+    cyc = _find_cycle(schedule)
+    if cyc is not None:
+        lines = tuple(_op_str(by_id[i]) for i in cyc)
+        out.append(Finding(
+            "deadlock", "cycle",
+            f"dependency cycle through ops {cyc} — no topological order "
+            f"exists; every rank deadlocks waiting on the cycle",
+            tuple(cyc),
+            Witness("cycle (each op waits on the next):", lines)))
+        return out           # reachability is meaningless below a cycle
+
+    # cross-step carry edges: POST(step N) → PRE(executes step N+1) →
+    # unrolled, a POST op depending on a PRE op closes a two-step cycle
+    pre_ids = {op.op_id for op in schedule.ops if op.phase == PRE}
+    for op in schedule.ops:
+        bad = pre_ids.intersection(op.depends_on)
+        if op.phase != PRE and bad:
+            lines = tuple(_op_str(by_id[i]) for i in sorted(bad))
+            out.append(Finding(
+                "deadlock", "cross-step-cycle",
+                f"post op {op.op_id} depends on deferred (PRE) op(s) "
+                f"{sorted(bad)} — a deferred result does not exist until "
+                f"the next step, so this step can never release it",
+                (op.op_id,) + tuple(sorted(bad)),
+                Witness("cross-step carry cycle:",
+                        (_op_str(op),) + lines)))
+
+    if any(f.code in ("non-topological", "dangling-dep", "duplicate-op-id")
+           for f in out):
+        return out           # ancestor masks need a sound tuple order
+
+    # data deps: ops sharing a leaf read/write the same flat-output slot
+    # — the emitter consumes the CURRENT value, so every later toucher
+    # must be ordered after every earlier one (checked pairwise on
+    # consecutive touchers; reachability is transitive).  PRE ops read
+    # carried state, not the in-step outputs of their leaf-mates.
+    anc = _ancestor_masks(schedule)
+    pos = {op.op_id: i for i, op in enumerate(schedule.ops)}
+    touch: dict[str, list] = {}
+    for op in schedule.ops:
+        if op.phase == PRE:
+            continue
+        for leaf in op.bucket.leaves:
+            touch.setdefault(leaf.name, []).append(op)
+    for name, ops in touch.items():
+        for a, b in zip(ops, ops[1:]):
+            if not _reaches(anc, pos, a.op_id, b.op_id):
+                out.append(Finding(
+                    "deadlock", "missing-data-edge",
+                    f"ops {a.op_id} and {b.op_id} both stage leaf "
+                    f"{name!r} but carry no dependency path — op "
+                    f"{b.op_id} may read the slot before op {a.op_id} "
+                    f"wrote it",
+                    (a.op_id, b.op_id),
+                    Witness(f"unordered writers of leaf {name!r}:",
+                            (_op_str(a), _op_str(b)))))
+    return out
+
+
+# --------------------------------------------- pass 2: SPMD consistency
+
+def _family(reducer: str) -> str:
+    """Reducer family prefix: 'hierarchical_ring' → 'hierarchical'."""
+    if not reducer:
+        return "flat"
+    for fam in ("hierarchical", "compressed", "ring", "flat"):
+        if reducer == fam or reducer.startswith(fam + "_"):
+            return fam
+    return reducer
+
+
+def reducer_stages(op, default_reducer: str = "flat",
+                   ) -> tuple[tuple[str, tuple[str, ...]], ...]:
+    """The wire collectives one op expands into, per reducer family —
+    what each rank actually issues on the network (DESIGN.md §3, §8)."""
+    axes = op.bucket.reduce_axes
+    if op.kind == UPDATE:
+        return ()                       # local optimizer math
+    if op.kind != ALLREDUCE:
+        return ((op.kind, axes),)
+    fam = _family(op.reducer or default_reducer)
+    if fam == "hierarchical" and "pod" in axes and "data" in axes:
+        rest = tuple(a for a in axes if a not in ("pod", "data"))
+        stages = ((REDUCE_SCATTER, ("data",)), (ALLREDUCE, ("pod",)),
+                  (ALL_GATHER, ("data",)))
+        return stages + (((ALLREDUCE, rest),) if rest else ())
+    if fam == "compressed":
+        # quantize → all-to-all int8 shards → local reduce → all-gather
+        return (("all_to_all", axes), (ALL_GATHER, axes))
+    return ((ALLREDUCE, axes),)
+
+
+def _groups_of(rank: tuple[int, ...], axes: tuple[str, ...],
+               axis_names: tuple[str, ...]) -> tuple:
+    """The communicator instance ``rank`` belongs to for a collective
+    over ``axes``: its coordinates on the complement axes."""
+    return tuple((a, c) for a, c in zip(axis_names, rank) if a not in axes)
+
+
+def check_spmd(
+    schedule: CommSchedule,
+    mesh_shape: Mapping[str, int] | None = None,
+    *,
+    default_reducer: str = "flat",
+    rank_programs: Mapping[tuple[int, ...], Sequence[int]] | None = None,
+) -> list[Finding]:
+    """SPMD-consistency: every rank of a communicator group must issue
+    the same collective sequence per channel.
+
+    Two checks:
+      (1) serialization — ALLREDUCE / REDUCE_SCATTER / NORM ops on one
+          communicator (reduce_axes, channel) must be totally ordered by
+          dependency paths.  An unordered pair means two engine chains
+          can issue on the same communicator in either order — ranks may
+          disagree, the paper's funnel-vs-concurrent deadlock.  Matched
+          second-phase ALL_GATHERs are exempt: they attach to their
+          producing RS/UPDATE and free-fly (the OUTSTANDING window).
+      (2) per-rank issue simulation — each rank's issue order
+          (``rank_programs`` override, else the shared schedule order)
+          is expanded through the reducer families' stage collectives
+          and grouped by communicator *instance*; every member of an
+          instance must see the identical sequence.  This is where
+          hierarchical/compressed stage structure and KVStore barrier
+          joins are checked on real group boundaries.
+    """
+    out: list[Finding] = []
+    if structural_findings(schedule):
+        return out           # ordering checks need a sound tuple order
+
+    by_id = {op.op_id: op for op in schedule.ops}
+    anc = _ancestor_masks(schedule)
+    pos = {op.op_id: i for i, op in enumerate(schedule.ops)}
+
+    if mesh_shape is not None:
+        for op in schedule.ops:
+            missing = [a for a in op.bucket.reduce_axes
+                       if a not in mesh_shape]
+            if missing:
+                out.append(Finding(
+                    "spmd", "unknown-axis",
+                    f"op {op.op_id} reduces over axes {missing} absent "
+                    f"from the mesh {dict(mesh_shape)}", (op.op_id,)))
+
+    # (1) total serialization per communicator (reduce_axes, channel)
+    comms: dict[tuple, list] = {}
+    for op in schedule.ops:
+        if op.kind in _SERIAL_KINDS:
+            key = (op.bucket.reduce_axes, op.bucket.channel)
+            comms.setdefault(key, []).append(op)
+    for (axes, channel), ops in comms.items():
+        for a, b in zip(ops, ops[1:]):
+            if not _reaches(anc, pos, a.op_id, b.op_id):
+                seq_a = [o.op_id for o in ops if o.chain == a.chain]
+                seq_b = [o.op_id for o in ops if o.chain == b.chain]
+                out.append(Finding(
+                    "spmd", "concurrent-collectives",
+                    f"ops {a.op_id} and {b.op_id} issue on the same "
+                    f"communicator (axes={axes}, channel={channel}) "
+                    f"with no dependency path — ranks may issue them "
+                    f"in different orders and deadlock (the "
+                    f"funnel-vs-concurrent hazard)",
+                    (a.op_id, b.op_id),
+                    Witness(
+                        f"unordered collectives on (axes={axes}, "
+                        f"channel={channel}):",
+                        (_op_str(a), _op_str(b),
+                         f"chain {a.chain} issues: {seq_a}",
+                         f"chain {b.chain} issues: {seq_b}"))))
+
+    # (2) per-rank issue sequences per communicator INSTANCE
+    if mesh_shape is not None and not out:
+        axis_names = tuple(mesh_shape)
+        sizes = [int(mesh_shape[a]) for a in axis_names]
+        ranks: list[tuple[int, ...]] = [()]
+        for s in sizes:
+            ranks = [r + (c,) for r in ranks for c in range(s)]
+        if rank_programs is None:
+            order = tuple(op.op_id for op in schedule.ops)
+            rank_programs = {r: order for r in ranks}
+        seqs: dict[tuple, dict[tuple[int, ...], list[tuple]]] = {}
+        for rank in ranks:
+            for oid in rank_programs.get(rank, ()):
+                op = by_id.get(oid)
+                if op is None:
+                    continue
+                for si, (kind, axes) in enumerate(
+                        reducer_stages(op, default_reducer)):
+                    if any(a not in mesh_shape for a in axes):
+                        continue       # reported above as unknown-axis
+                    inst = (axes, op.bucket.channel,
+                            _groups_of(rank, axes, axis_names))
+                    sig = (op.bucket.bucket_id, kind, si, op.bucket.size)
+                    seqs.setdefault(inst, {}).setdefault(
+                        rank, []).append(sig)
+        for inst, per_rank in seqs.items():
+            ref_rank = min(per_rank)
+            ref = per_rank[ref_rank]
+            for rank, seq in per_rank.items():
+                if seq != ref:
+                    axes, channel, group = inst
+                    out.append(Finding(
+                        "spmd", "rank-divergence",
+                        f"ranks {ref_rank} and {rank} issue different "
+                        f"collective sequences on communicator "
+                        f"(axes={axes}, channel={channel}, "
+                        f"group={group}) — mismatched collectives "
+                        f"deadlock the group",
+                        (),
+                        Witness(
+                            f"per-rank issue sequences on axes={axes} "
+                            f"channel={channel}:",
+                            (f"rank {ref_rank}: {ref}",
+                             f"rank {rank}: {seq}"))))
+                    break
+    return out
+
+
+# ------------------------------------------------ pass 3: carry soundness
+
+def check_carry(schedule: CommSchedule, *,
+                expect_defer: bool | None = None) -> list[Finding]:
+    """Soundness of the cross-step carry (``zero1_plan="deferred"``).
+
+    In steady state the SAME program runs every step, so the predecessor
+    schedule is the schedule itself: every PRE ALL_GATHER must be
+    covered by a POST UPDATE producing the same bucket / dtype / shard
+    size, and the two bucket sets must match EXACTLY — a PRE gather
+    without an UPDATE reads ``opt_state["pending"]`` uninitialized; an
+    UPDATE whose gather neither ran in-step nor deferred leaves the
+    carry half-written (or double-applies under a mixed split).
+    """
+    out: list[Finding] = []
+    pre_ops = [op for op in schedule.ops if op.phase == PRE]
+    if expect_defer is False and pre_ops:
+        out.append(Finding(
+            "carry", "unexpected-defer",
+            f"schedule carries {len(pre_ops)} PRE op(s) but was planned "
+            f"without defer_ag — nothing will execute them next step",
+            tuple(op.op_id for op in pre_ops)))
+
+    for op in pre_ops:
+        if op.kind != ALL_GATHER:
+            out.append(Finding(
+                "carry", "mis-tagged-phase",
+                f"op {op.op_id} ({op.kind}) is tagged PRE — only "
+                f"ALL_GATHER ops may defer across the step boundary "
+                f"(their shard inputs ride opt_state['pending']); a "
+                f"deferred {op.kind} has no carried input to read",
+                (op.op_id,)))
+
+    pre_ags = [op for op in pre_ops if op.kind == ALL_GATHER]
+    seen: dict[int, int] = {}
+    for op in pre_ags:
+        if op.bucket.bucket_id in seen:
+            out.append(Finding(
+                "carry", "duplicate-pre-gather",
+                f"ops {seen[op.bucket.bucket_id]} and {op.op_id} both "
+                f"defer a gather of bucket {op.bucket.bucket_id} — the "
+                f"carry holds ONE shard per bucket",
+                (seen[op.bucket.bucket_id], op.op_id)))
+        seen.setdefault(op.bucket.bucket_id, op.op_id)
+
+    updates = {op.bucket.bucket_id: op for op in schedule.ops
+               if op.kind == UPDATE and op.phase == POST}
+    by_id = {op.op_id: op for op in schedule.ops}
+
+    for op in pre_ags:
+        upd = updates.get(op.bucket.bucket_id)
+        if upd is None:
+            out.append(Finding(
+                "carry", "orphaned-pre-gather",
+                f"PRE all-gather {op.op_id} reads bucket "
+                f"{op.bucket.bucket_id} from the carry, but no POST "
+                f"UPDATE produces that bucket's shard — "
+                f"opt_state['pending'] would be read uninitialized",
+                (op.op_id,),
+                Witness("deferred gather without a producer:",
+                        (_op_str(op),
+                         f"POST UPDATE buckets: {sorted(updates)}"))))
+            continue
+        if upd.bucket.size != op.bucket.size:
+            out.append(Finding(
+                "carry", "carry-shard-mismatch",
+                f"PRE gather {op.op_id} expects {op.bucket.size} "
+                f"elements of bucket {op.bucket.bucket_id} but UPDATE "
+                f"{upd.op_id} produces {upd.bucket.size}",
+                (op.op_id, upd.op_id)))
+        if (np.dtype(op.bucket.comm_dtype or np.float32)
+                != np.dtype(upd.bucket.comm_dtype or np.float32)):
+            out.append(Finding(
+                "carry", "carry-dtype-mismatch",
+                f"PRE gather {op.op_id} reads bucket "
+                f"{op.bucket.bucket_id} as "
+                f"{np.dtype(op.bucket.comm_dtype or np.float32).name} "
+                f"but UPDATE {upd.op_id} writes "
+                f"{np.dtype(upd.bucket.comm_dtype or np.float32).name}",
+                (op.op_id, upd.op_id)))
+        if upd.bucket.reduce_axes != op.bucket.reduce_axes:
+            out.append(Finding(
+                "carry", "carry-axes-mismatch",
+                f"PRE gather {op.op_id} gathers over "
+                f"{op.bucket.reduce_axes} but UPDATE {upd.op_id}'s "
+                f"shard was scattered over {upd.bucket.reduce_axes}",
+                (op.op_id, upd.op_id)))
+
+    # exact bucket-set equality: once ANY gather defers, every update
+    # shard must cross the boundary — an update consumed by a POST
+    # gather in the same schedule would ALSO be re-applied from the
+    # carry next step (double-apply), and an update with no gather at
+    # all leaves the carry half-written
+    if pre_ags:
+        deferred = {op.bucket.bucket_id for op in pre_ags}
+        for bid, upd in sorted(updates.items()):
+            if bid in deferred:
+                continue
+            post_consumers = [
+                op for op in schedule.ops
+                if op.kind == ALL_GATHER and op.phase == POST
+                and op.bucket.bucket_id == bid
+                and any(by_id[d].kind == UPDATE for d in op.depends_on
+                        if d in by_id)]
+            code = ("mixed-defer" if post_consumers
+                    else "half-written-carry")
+            why = ("is also gathered in-step — the carry would "
+                   "double-apply it next step"
+                   if post_consumers else
+                   "is never gathered (neither in-step nor deferred) — "
+                   "the carry is half-written")
+            out.append(Finding(
+                "carry", code,
+                f"UPDATE {upd.op_id} produces bucket {bid} while other "
+                f"buckets defer, but bucket {bid} {why}",
+                (upd.op_id,),
+                Witness("deferred bucket set mismatch:",
+                        (f"PRE-gathered buckets:  {sorted(deferred)}",
+                         f"UPDATE-produced buckets: "
+                         f"{sorted(updates)}"))))
+    return out
+
+
+# --------------------------------------- pass 4: byte/dtype accounting
+
+def check_accounting(schedule: CommSchedule, *,
+                     plan_comm_dtype=None,
+                     default_reducer: str = "flat") -> list[Finding]:
+    """RS/AG pair symmetry, reducer/dtype legality, byte bookkeeping."""
+    out: list[Finding] = []
+    by_id = {op.op_id: op for op in schedule.ops}
+
+    def eff_dtype(bucket):
+        d = bucket.comm_dtype
+        if d is None:
+            d = plan_comm_dtype
+        return None if d is None else np.dtype(d)
+
+    try:
+        from repro.core.registry import reducer_names
+        known = set(reducer_names())
+    except Exception:        # registry unpopulated in exotic contexts
+        known = None
+
+    consumers: dict[int, list] = {}
+    for op in schedule.ops:
+        for d in op.depends_on:
+            dep = by_id.get(d)
+            if dep is not None and \
+                    dep.bucket.bucket_id == op.bucket.bucket_id:
+                consumers.setdefault(d, []).append(op)
+
+    for op in schedule.ops:
+        if op.reducer:
+            if known is not None and op.reducer not in known:
+                out.append(Finding(
+                    "accounting", "unknown-reducer",
+                    f"op {op.op_id} tagged with unregistered reducer "
+                    f"{op.reducer!r}", (op.op_id,)))
+            if op.kind != ALLREDUCE:
+                out.append(Finding(
+                    "accounting", "ignored-reducer-tag",
+                    f"op {op.op_id} ({op.kind}) carries reducer tag "
+                    f"{op.reducer!r}, but the emitter only honors "
+                    f"reducer tags on ALLREDUCE ops — the tag would be "
+                    f"silently ignored", (op.op_id,)))
+        if op.kind == ALLREDUCE and \
+                _family(op.reducer or default_reducer) == "compressed":
+            d = eff_dtype(op.bucket)
+            if d is not None and d.kind != "f":
+                out.append(Finding(
+                    "accounting", "comm-dtype-illegal",
+                    f"op {op.op_id} uses the compressed reducer family "
+                    f"on a {d.name} wire — block quantization requires "
+                    f"a float comm dtype", (op.op_id,)))
+        if op.kind == UPDATE:
+            d = eff_dtype(op.bucket)
+            if d is None or d != np.dtype(np.float32):
+                out.append(Finding(
+                    "accounting", "update-dtype",
+                    f"UPDATE op {op.op_id} runs on a "
+                    f"{d.name if d is not None else 'unpinned'} bucket "
+                    f"— ZeRO-1 shard math must pin comm_dtype=f32 to "
+                    f"match the monolithic optimizer bit-for-bit",
+                    (op.op_id,)))
+
+        if op.kind == REDUCE_SCATTER:
+            cons = [c for c in consumers.get(op.op_id, ())
+                    if c.kind in (ALL_GATHER, UPDATE)]
+            if not cons:
+                out.append(Finding(
+                    "accounting", "rs-unconsumed",
+                    f"reduce-scatter {op.op_id} produces a shard of "
+                    f"bucket {op.bucket.bucket_id} that no same-bucket "
+                    f"ALL_GATHER/UPDATE consumes — the reduced bytes "
+                    f"are dropped and the leaves keep stale gradients",
+                    (op.op_id,)))
+
+        if op.kind == ALL_GATHER:
+            srcs = [by_id[d] for d in op.depends_on if d in by_id
+                    and by_id[d].bucket.bucket_id == op.bucket.bucket_id
+                    and by_id[d].kind in (REDUCE_SCATTER, UPDATE)]
+            if not srcs and op.phase != PRE:
+                out.append(Finding(
+                    "accounting", "ag-no-producer",
+                    f"all-gather {op.op_id} has no same-bucket "
+                    f"REDUCE_SCATTER/UPDATE dep and is not deferred — "
+                    f"there is no shard to gather", (op.op_id,)))
+            for src in srcs:
+                if src.bucket.size != op.bucket.size or \
+                        src.bucket.reduce_axes != op.bucket.reduce_axes:
+                    out.append(Finding(
+                        "accounting", "rs-ag-asymmetry",
+                        f"all-gather {op.op_id} "
+                        f"(size={op.bucket.size}, "
+                        f"axes={op.bucket.reduce_axes}) does not mirror "
+                        f"its producer {src.op_id} "
+                        f"(size={src.bucket.size}, "
+                        f"axes={src.bucket.reduce_axes})",
+                        (op.op_id, src.op_id)))
+                da, db = eff_dtype(op.bucket), eff_dtype(src.bucket)
+                if da is not None and db is not None and da != db:
+                    out.append(Finding(
+                        "accounting", "rs-ag-dtype",
+                        f"all-gather {op.op_id} ({da.name}) and its "
+                        f"producer {src.op_id} ({db.name}) disagree on "
+                        f"the wire dtype", (op.op_id, src.op_id)))
+
+    # bookkeeping self-consistency: the stats the sim/benchmarks consume
+    itemsize = 4 if plan_comm_dtype is None else \
+        np.dtype(plan_comm_dtype).itemsize
+    if sum(schedule.chain_bytes(itemsize).values()) != \
+            schedule.comm_bytes(itemsize):
+        out.append(Finding(
+            "accounting", "chain-bytes-drift",
+            "chain_bytes does not sum to comm_bytes — the per-channel "
+            "budget and the sim disagree on total payload"))
+    want = sum(op.bucket.size * np_itemsize(op.bucket.comm_dtype, itemsize)
+               for op in schedule.ops if op.phase == PRE)
+    if schedule.deferred_bytes(itemsize) != want:
+        out.append(Finding(
+            "accounting", "deferred-bytes-drift",
+            f"deferred_bytes() = {schedule.deferred_bytes(itemsize)} "
+            f"but the PRE ops carry {want} bytes"))
+    return out
+
+
+# -------------------------------------- pass 5: donation/aliasing hazard
+
+def check_donation(schedule: CommSchedule,
+                   donated_buckets: Iterable[int] = ()) -> list[Finding]:
+    """A staged buffer that is donated in step N and read by a PRE op at
+    the top of step N+1 aliases freed memory — the gather would read a
+    buffer XLA already reused."""
+    donated = frozenset(donated_buckets)
+    out: list[Finding] = []
+    for op in schedule.ops:
+        if op.phase == PRE and op.bucket.bucket_id in donated:
+            out.append(Finding(
+                "donation", "donated-pre-read",
+                f"bucket {op.bucket.bucket_id}'s staged buffer is "
+                f"donated, but PRE op {op.op_id} reads it at the top "
+                f"of the NEXT step — the buffer may be reused before "
+                f"the deferred gather consumes it",
+                (op.op_id,),
+                Witness("donated buffer crossing the step boundary:",
+                        (_op_str(op),
+                         f"donated buckets: {sorted(donated)}"))))
+    return out

@@ -1,0 +1,6 @@
+"""``python -m repro.analyze`` — the static schedule linter
+(see ``repro.analysis.cli`` for what gets checked)."""
+from repro.analysis.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

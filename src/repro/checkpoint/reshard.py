@@ -12,10 +12,10 @@ from typing import Any
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
-from repro.parallel.sharding import ShardingRules, flat_spec_axes
-from repro.utils.trees import flatten_with_names, unflatten_from_names
+from repro.parallel.sharding import ShardingRules
+from repro.utils.trees import flatten_with_names
 
 
 def validate_divisibility(tree: Any, specs: Any, mesh: Mesh) -> None:

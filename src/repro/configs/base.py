@@ -11,7 +11,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import family_of
-from repro.parallel.sharding import flat_spec_axes
 
 
 @dataclasses.dataclass(frozen=True)

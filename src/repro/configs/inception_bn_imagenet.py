@@ -1,7 +1,6 @@
 """inception-bn-imagenet — the paper's Inception-BN ImageNet-1K model
 (§5.2, Fig 14), compact mixed-branch variant.  Pure data-parallel.
 """
-import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec, ShapeSpec
 from repro.models.resnet import InceptionConfig

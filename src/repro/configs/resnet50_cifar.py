@@ -2,7 +2,6 @@
 Pure data-parallel (one worker per device), BatchNorm local per worker —
 the exact setting of paper Figs 13/16.
 """
-import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec, ShapeSpec
 from repro.models.resnet import ResNetConfig

@@ -69,6 +69,11 @@ class GradSyncConfig:
     # auto ranks schedules on comm alone (ComputeModel(0, 0)) and the
     # deferred family has no forward window to hide its gathers under
     sim_compute: Any = None
+    # static analysis (DESIGN.md §11): run the five repro.analysis
+    # passes over the planned schedule and raise ScheduleError (with a
+    # printable witness) instead of deadlocking at run time / failing
+    # at trace time with a cryptic XLA error
+    verify: bool = True
 
 
 class GradSync:
@@ -163,6 +168,18 @@ class GradSync:
                 dp_axes=tuple(cfg.zero1_dp_axes), dp_size=dp_size,
                 clip=cfg.zero1_clip, defer_ag=cfg.zero1_defer_ag)
             self.schedule = self.program.schedule
+
+        if cfg.verify:
+            from repro.analysis import verify_schedule
+
+            verify_schedule(
+                self.schedule,
+                mesh_shape=self.mesh_shape,
+                default_reducer=cfg.reducer,
+                plan_comm_dtype=cfg.comm_dtype,
+                expect_defer=(self.program.defer_ag
+                              if self.program is not None else False),
+            )
 
     def _two_phase_impl(self) -> str:
         # ring-family reducers route the RS/AG ops through the chunked
@@ -389,6 +406,17 @@ class KVStore:
         self._barrier_join = tuple(sorted(self._last_op.values()))
         self._last_op = {}
 
-    def schedule(self) -> CommSchedule:
-        """The IR of every collective this store has emitted so far."""
-        return CommSchedule(tuple(self._ops)).validate()
+    def schedule(self, verify: bool = True) -> CommSchedule:
+        """The IR of every collective this store has emitted so far.
+
+        ``verify`` runs the repro.analysis passes over the trace —
+        pure-Python metadata checks, safe inside a jit/shard_map trace
+        (rank simulation is skipped when ``mesh_shape`` was not given).
+        """
+        s = CommSchedule(tuple(self._ops)).validate()
+        if verify:
+            from repro.analysis import verify_schedule
+
+            verify_schedule(s, mesh_shape=self.mesh_shape,
+                            expect_defer=False)
+        return s

@@ -16,7 +16,6 @@ every scan iteration of the backward emits one in-flight collective.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

@@ -184,24 +184,20 @@ class CommSchedule:
         }
 
     def validate(self) -> "CommSchedule":
-        """Check op_id uniqueness and topological order; returns self so
-        planners can end with ``return CommSchedule(ops).validate()``."""
-        seen: set[int] = set()
-        for op in self.ops:
-            if op.op_id in seen:
-                raise ValueError(f"duplicate op_id {op.op_id}")
-            for d in op.depends_on:
-                if d not in seen:
-                    raise ValueError(
-                        f"op {op.op_id} depends on {d}, which does not "
-                        f"precede it (schedule must be topologically "
-                        f"ordered)")
-            if op.kind not in KINDS:
-                raise ValueError(f"op {op.op_id}: unknown kind {op.kind!r}")
-            if op.phase not in PHASES:
-                raise ValueError(
-                    f"op {op.op_id}: unknown phase {op.phase!r}")
-            seen.add(op.op_id)
+        """Structural soundness: op_id uniqueness, no dangling / forward
+        chain-dep references, known kinds/phases/bucket indices.
+
+        One implementation shared with the static analyzer — this is
+        ``repro.analysis.passes.structural_findings`` (the deadlock
+        pass's first stage), so the shallow planner-exit check and the
+        full verifier cannot drift.  Returns self so planners can end
+        with ``return CommSchedule(ops).validate()``.
+        """
+        from repro.analysis.passes import structural_findings
+
+        findings = structural_findings(self)
+        if findings:
+            raise ValueError(findings[0].message)
         return self
 
     def update_ops(self) -> tuple[CollectiveOp, ...]:

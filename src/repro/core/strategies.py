@@ -65,7 +65,6 @@ from repro.core.registry import (
 )
 from repro.core.schedule import (
     ALL_GATHER,
-    ALLREDUCE,
     REDUCE_SCATTER,
     CollectiveOp,
     CommSchedule,

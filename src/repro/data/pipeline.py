@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Iterator
+from typing import Any, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ lane row); tile = (ROWS, 256) in VMEM, 8×128-aligned.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

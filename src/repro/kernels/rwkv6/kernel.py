@@ -11,7 +11,6 @@ tile is ≤ 64×64 f32).  Grid = (BH,), one program per head-row.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

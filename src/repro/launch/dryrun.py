@@ -29,7 +29,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import (
     decode_state_structs,
@@ -50,7 +50,7 @@ from repro.launch.mesh import make_production_mesh, mesh_shape_dict
 from repro.models.registry import family_of
 from repro.optim import adamw, sgd
 from repro.parallel.sharding import batch_spec, dp_axes_of
-from repro.runtime.train_loop import make_train_step, _batch_specs
+from repro.runtime.train_loop import make_train_step
 
 _COLL_RE = re.compile(
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"

@@ -8,7 +8,6 @@ against a KV cache.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -13,8 +13,7 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

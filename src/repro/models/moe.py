@@ -10,7 +10,6 @@ one-hot cube; kimi-k2 is 384 experts × 64k tokens/device).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ import dataclasses
 from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import resnet as resnet_lib
 from repro.models import rwkv as rwkv_lib

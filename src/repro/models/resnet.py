@@ -13,7 +13,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.models.common import dense_init, split_rngs
 from repro.parallel.sharding import ShardingRules

@@ -12,13 +12,13 @@ state carried by lax.scan.  TP: heads sharded over "model".
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.overlap import scan_layers, sync_in_backward
+from repro.core.overlap import scan_layers
 from repro.models import attention as attn_lib
 from repro.models.common import (
     MODEL_AXIS,

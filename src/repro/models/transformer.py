@@ -13,12 +13,10 @@ kimi-k2 at 61L compiles like 1L).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.overlap import scan_layers, sync_in_backward

@@ -7,8 +7,7 @@ from __future__ import annotations
 
 import dataclasses
 import queue
-import threading
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -13,14 +13,13 @@ auto-tuned winner, all on CPU in seconds (no compile, no hardware).
 """
 
 import argparse
-import json
 
 import repro  # noqa: F401  (jaxcompat shim before jax.sharding imports)
 import jax  # noqa: F401
 
 from repro.configs import get_arch
 from repro.configs.base import param_structs
-from repro.core.registry import fixed_strategy_names, get_strategy
+from repro.core.registry import fixed_strategy_names
 from repro.core.buckets import make_bucket_plan
 from repro.launch.mesh import make_production_mesh, mesh_shape_dict
 from repro.models.registry import family_of

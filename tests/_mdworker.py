@@ -18,7 +18,6 @@ from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
 
 from repro.core import GradSync, GradSyncConfig
 from repro.models import transformer as tf
-from repro.models.moe import MoECfg
 from repro.models.registry import family_of
 from repro.utils.trees import named_leaves
 
@@ -149,21 +148,21 @@ from repro.data import TokenPipeline
 
 
 def one_step(mesh, cfg, *, mode, dp_size=1, clip_norm=0.0,
-             strategy="concom", reducer="flat"):
+             strategy="concom", reducer="flat", verify=True):
     pipe = TokenPipeline(96, 32, 4, seed=3, mesh=mesh)
     params = family_of(cfg).init(jax.random.PRNGKey(2), mk_dense(1))
     b = pipe.batch_at(0)
     if mode == "flat":
         opt = adamw(1e-3)
         sync = GradSyncConfig(strategy=strategy, reducer=reducer,
-                              bucket_bytes=1 << 12)
+                              bucket_bytes=1 << 12, verify=verify)
         ts = make_train_step(cfg, mesh, sync, opt, batch_like=b,
                              params_like=params, clip_norm=clip_norm)
     else:
         opt = zero1(adamw(1e-3), ("data",), dp_size)
         sync = GradSyncConfig(strategy=strategy, reducer=reducer,
                               bucket_bytes=1 << 12,
-                              exclude_axes=("data",))
+                              exclude_axes=("data",), verify=verify)
         ts = make_train_step(cfg, mesh, sync, opt, batch_like=b,
                              params_like=params, zero1_mode=True,
                              zero1_plan=mode, clip_norm=clip_norm)
@@ -464,5 +463,17 @@ _, p_m1, _, m_m1 = run_steps("flat", 2, microbatch=1)
 check("accum-m4-equals-m1-trajectory",
       worst_diff(p_ov, p_m1) < 1e-5
       and abs(float(m_ov["loss"]) - float(m_m1["loss"])) < 1e-5)
+
+# 11. static analyzer (DESIGN.md §11): the verify=True planning hook is
+#     pure analysis over the IR — planning the dp=2 × tp=4 deferred
+#     StepProgram with verification on is bit-exact with verification
+#     off (every other GradSync in this file already planned with
+#     verify=True, the default, so the analyzer blessed all of them)
+_, p_von, _ = one_step(mesh8, mk_dense(4), mode="deferred", dp_size=2,
+                       verify=True)
+_, p_voff, _ = one_step(mesh8, mk_dense(4), mode="deferred", dp_size=2,
+                        verify=False)
+check("analysis-verify-planning-bitexact",
+      worst_diff(p_von, p_voff) == 0.0)
 
 print("DONE", flush=True)

@@ -5,7 +5,6 @@ import warnings
 warnings.filterwarnings("ignore")
 
 import jax
-import numpy as np
 import pytest
 
 jax.config.update("jax_platform_name", "cpu")

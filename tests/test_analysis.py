@@ -1,0 +1,178 @@
+"""Static analyzer (repro.analysis, DESIGN.md §11): every shipping
+schedule passes clean, every corpus mutation is caught by the pass that
+owns its error class, and the verify hooks raise with a witness.
+
+Deterministic counterpart of tests/test_analysis_properties.py — all
+pure Python on static IR, no mesh, no devices.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    PASS_NAMES,
+    ScheduleError,
+    run_passes,
+    structural_findings,
+    verify_schedule,
+)
+from repro.analysis.mutations import (
+    MESH,
+    MUTATIONS,
+    Mutation,
+    synthetic_plan,
+    valid_cases,
+)
+from repro.core.registry import get_strategy
+from repro.core.schedule import CommSchedule
+
+
+# ----------------------------------------- zero false positives (green)
+
+@pytest.mark.parametrize(
+    "name,schedule,ctx", valid_cases(),
+    ids=[name for name, _, _ in valid_cases()])
+def test_shipping_schedules_pass_clean(name, schedule, ctx):
+    report = run_passes(schedule, **ctx)
+    assert report.ok, f"{name}: {report.render()}"
+    assert report.num_ops == len(schedule.ops)
+    # and the raising entry point agrees
+    verify_schedule(schedule, **ctx)
+
+
+def test_kvstore_style_trace_passes_clean():
+    # the IR KVStore records: one op per key, chained per channel, with
+    # a barrier join — mesh_shape present (rank simulation runs)
+    from repro.core.kvstore import KVStore
+
+    kv = KVStore("concom", reduce_axes=("data",), num_channels=2,
+                 mesh_shape=MESH)
+    for key in range(5):
+        kv._shapes[key] = (8,)
+    for key in range(4):
+        kv._record(key, _buf(), "allreduce")
+    kv.barrier()
+    kv._record(4, _buf(), "allreduce")
+    s = kv.schedule()             # verify=True: raises if unsound
+    # post-barrier op depends on every pre-barrier chain tail
+    assert set(s.ops[-1].depends_on) >= {2, 3}
+    assert run_passes(s, mesh_shape=MESH).ok
+
+
+def _buf():
+    return jnp.zeros((8,), jnp.float32)
+
+
+# --------------------------------------- every mutation caught (red)
+
+@pytest.mark.parametrize("mutation", MUTATIONS,
+                         ids=[m.name for m in MUTATIONS])
+def test_mutation_caught_by_owning_pass(mutation: Mutation):
+    schedule, ctx = mutation.build()
+    report = run_passes(schedule, **ctx)
+    assert not report.ok, f"{mutation.name} was not caught at all"
+    owned = [f for f in report.by_pass(mutation.owner)
+             if f.code == mutation.code]
+    assert owned, (
+        f"{mutation.name}: expected {mutation.owner}:{mutation.code}, "
+        f"got {report.error_classes}")
+    # and ONLY via run_passes with that pass enabled — the owning pass
+    # alone must be sufficient to catch its class
+    solo = run_passes(schedule, **ctx, passes=(mutation.owner,))
+    assert any(f.code == mutation.code for f in solo.findings)
+
+
+def test_corpus_covers_every_pass():
+    assert {m.owner for m in MUTATIONS} == set(PASS_NAMES)
+
+
+def test_verify_raises_schedule_error_with_witness():
+    schedule, ctx = next(
+        m for m in MUTATIONS if m.name == "orphaned-pre-gather").build()
+    with pytest.raises(ScheduleError, match="orphaned-pre-gather"):
+        verify_schedule(schedule, **ctx)
+    try:
+        verify_schedule(schedule, **ctx)
+    except ScheduleError as e:
+        assert e.pass_name == "carry"
+        assert e.code == "orphaned-pre-gather"
+        rendered = e.findings[0].render()
+        assert "[carry:orphaned-pre-gather]" in rendered
+        assert "deferred gather without a producer" in rendered
+
+
+def test_gradsync_verify_hook_rejects_bad_reducer_dtype(smoke_mesh):
+    # end-to-end: a GradSyncConfig whose analyzer verdict is bad raises
+    # at PLANNING time (compressed family on an int8 wire)
+    import jax
+
+    from repro.core.kvstore import GradSync, GradSyncConfig
+
+    grads = {"w": jax.ShapeDtypeStruct((64, 64), jnp.float32)}
+    specs = {"w": jax.sharding.PartitionSpec()}
+    cfg = GradSyncConfig(strategy="concom", reducer="compressed",
+                         comm_dtype=jnp.int8)
+    with pytest.raises(ScheduleError, match="comm-dtype-illegal"):
+        GradSync(cfg, smoke_mesh, specs, grads)
+    # verify=False restores the old (unchecked) behavior
+    gs = GradSync(dataclasses.replace(cfg, verify=False),
+                  smoke_mesh, specs, grads)
+    assert gs.schedule.ops
+
+
+# ------------------------------- validate() routes through the analyzer
+
+def test_validate_matches_structural_findings():
+    s = get_strategy("concom").plan(synthetic_plan())
+    assert structural_findings(s) == []
+    s.validate()                                   # no raise
+    bad = CommSchedule(s.ops + (s.ops[0],))        # duplicate op_id
+    findings = structural_findings(bad)
+    assert findings and findings[0].code == "duplicate-op-id"
+    with pytest.raises(ValueError, match="duplicate op_id"):
+        bad.validate()
+
+
+def test_validate_rejects_dangling_and_unknown_bucket():
+    s = get_strategy("concom").plan(synthetic_plan())
+    dangling = CommSchedule(
+        (dataclasses.replace(s.ops[0], depends_on=(999,)),) + s.ops[1:])
+    with pytest.raises(ValueError, match="dangling chain-dep"):
+        dangling.validate()
+    neg = CommSchedule(
+        (dataclasses.replace(
+            s.ops[0],
+            bucket=dataclasses.replace(s.ops[0].bucket, bucket_id=-3)),)
+        + s.ops[1:])
+    with pytest.raises(ValueError, match="negative bucket_id"):
+        neg.validate()
+
+
+# ----------------------------------------------------- CLI cross-product
+
+def test_cli_cross_product_is_clean(capsys):
+    from repro.analysis.cli import main
+
+    assert main([]) == 0
+    out = capsys.readouterr().out
+    assert "0 analyzer errors" in out
+
+
+def test_cli_json_report(tmp_path, capsys):
+    import json
+
+    from repro.analysis.cli import main
+
+    path = tmp_path / "report.json"
+    assert main(["--json", str(path)]) == 0
+    capsys.readouterr()
+    data = json.loads(path.read_text())
+    assert data["summary"]["errors"] == 0
+    assert data["summary"]["total"] == len(data["cells"])
+    # both meshes and every registered strategy appear
+    seen_meshes = {c["mesh"] for c in data["cells"]}
+    assert seen_meshes == {"dp8", "smoke-dp2tp4"}
+    seen = {c["strategy"] for c in data["cells"]}
+    assert {"funnel", "concom", "depcha", "priority", "rsag",
+            "auto"} <= seen

@@ -1,0 +1,82 @@
+"""Property-based tests (hypothesis) for the static analyzer: random
+VALID schedules are accepted, random structure-breaking mutations are
+rejected.  Skips cleanly when hypothesis is absent (requirements-dev)."""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (requirements-dev.txt)")
+
+import dataclasses
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+from hypothesis import given
+
+from repro.analysis import run_passes
+from repro.analysis.mutations import MESH, MUTATIONS, synthetic_plan
+from repro.core.registry import get_strategy
+from repro.core.schedule import CommSchedule
+from repro.core.stepprogram import zero1_schedule
+
+hypothesis.settings.register_profile(
+    "fast", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("fast")
+
+STRATEGIES = ("funnel", "concom", "depcha", "priority", "rsag")
+
+
+@st.composite
+def plans(draw):
+    return synthetic_plan(
+        n_buckets=draw(st.integers(1, 8)),
+        num_channels=draw(st.integers(1, 4)),
+        leaves_per_bucket=draw(st.integers(1, 3)),
+        pin=jnp.float32)
+
+
+@given(plans(), st.sampled_from(STRATEGIES))
+def test_random_valid_plans_accepted(plan, strategy):
+    s = get_strategy(strategy).plan(plan)
+    report = run_passes(s, mesh_shape=MESH, plan_comm_dtype=jnp.float32,
+                        expect_defer=False)
+    assert report.ok, report.render()
+
+
+@given(plans(), st.sampled_from(("concom", "rsag", "funnel")),
+       st.booleans(), st.booleans())
+def test_random_valid_zero1_programs_accepted(plan, strategy, defer, clip):
+    base = get_strategy(strategy).plan(plan)
+    s = zero1_schedule(base, dp_axes=("data",), clip=clip, defer_ag=defer)
+    report = run_passes(s, mesh_shape=MESH, plan_comm_dtype=jnp.float32,
+                        expect_defer=defer)
+    assert report.ok, report.render()
+
+
+@given(st.sampled_from(MUTATIONS))
+def test_every_corpus_mutation_rejected(mutation):
+    schedule, ctx = mutation.build()
+    report = run_passes(schedule, **ctx)
+    assert any(f.pass_name == mutation.owner and f.code == mutation.code
+               for f in report.findings), report.error_classes
+
+
+@given(plans(), st.sampled_from(STRATEGIES), st.data())
+def test_random_dropped_dep_never_accepted_silently(plan, strategy, data):
+    """Removing a dependency edge from a multi-op single-channel chain
+    must trip the analyzer (serialization or data-order loss)."""
+    s = get_strategy(strategy).plan(
+        dataclasses.replace(
+            plan,
+            buckets=tuple(dataclasses.replace(b, channel=0)
+                          for b in plan.buckets)))
+    victims = [op for op in s.ops if op.depends_on]
+    if not victims:
+        return
+    victim = data.draw(st.sampled_from(victims))
+    mutated = CommSchedule(tuple(
+        dataclasses.replace(op, depends_on=())
+        if op.op_id == victim.op_id else op for op in s.ops))
+    report = run_passes(mutated, mesh_shape=MESH,
+                        plan_comm_dtype=jnp.float32, expect_defer=False)
+    assert not report.ok

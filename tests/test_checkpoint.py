@@ -81,7 +81,6 @@ def test_reshard_elastic(tmp_path, smoke_mesh):
 
 
 def test_reshard_divisibility_error(smoke_mesh):
-    from repro.launch.mesh import make_smoke_mesh
 
     rules = ShardingRules(rules=(("w", P(None, "model")),))
     t = {"w": jnp.zeros((4, 7))}   # 7 not divisible by any model axis > 1

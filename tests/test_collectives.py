@@ -6,7 +6,6 @@ donation regression.  Real-process-group ring equivalence
 (ring RS/AG ≡ psum_scatter/all_gather, ring reducer end-to-end) runs on
 the 8-fake-device mesh in tests/_mdworker.py.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

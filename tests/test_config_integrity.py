@@ -1,6 +1,5 @@
 """Config integrity: the FULL assigned configs (via eval_shape only — no
 allocation) must match the assignment table and plausible param counts."""
-import jax
 import numpy as np
 import pytest
 
@@ -72,7 +71,6 @@ def test_full_configs_divisible_for_production_mesh():
     production model axis) — the dry-run proves this end-to-end; this is
     the fast structural check."""
     from repro.models.registry import family_of
-    from repro.parallel.sharding import flat_spec_axes
 
     for aid in EXPECTED_PARAMS:
         cfg = ARCHS[aid].make_config(tp=16, dp_axes=("data",))

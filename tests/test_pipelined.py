@@ -24,7 +24,7 @@ import pytest
 import repro.sim  # noqa: F401  (registers the "auto" strategy)
 from repro.core.buckets import Bucket, BucketPlan, LeafInfo
 from repro.core.registry import fixed_strategy_names, get_strategy
-from repro.core.schedule import ALL_GATHER, POST, PRE, REDUCE_SCATTER
+from repro.core.schedule import ALL_GATHER, POST, PRE
 from repro.core.stepprogram import zero1_schedule
 from repro.sim import (
     ComputeModel,

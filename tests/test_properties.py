@@ -8,7 +8,7 @@ import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from hypothesis import given
 from jax.sharding import PartitionSpec as P
 
 from repro.core.buckets import make_bucket_plan, pack, unpack

@@ -23,8 +23,7 @@ from repro.sim import (
     default_network,
     grid_search,
     last_auto_report,
-    rank_strategies,
-    sim_config_for,
+        sim_config_for,
     simulate,
     simulate_strategy,
 )

@@ -34,7 +34,6 @@ from repro.core.stepprogram import (
 )
 from repro.sim import (
     ComputeModel,
-    SimConfig,
     UpdateModel,
     flat_step_schedule,
     last_auto_report,

@@ -7,9 +7,9 @@ import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.core import GradSyncConfig
-from repro.data import ImagePipeline, Prefetcher, TokenPipeline
+from repro.data import Prefetcher, TokenPipeline
 from repro.models import transformer as tf
-from repro.optim import adamw, cosine_warmup, sgd, zero1
+from repro.optim import adamw, cosine_warmup, zero1
 from repro.runtime import Server, Trainer, make_train_step
 
 
