@@ -1,7 +1,8 @@
 # Convenience targets; `make test` is the tier-1 gate (ROADMAP.md).
 PY ?= python
 
-.PHONY: test test-dev bench bench-smoke schedule dryrun sim-smoke analyze lint
+.PHONY: test test-dev bench bench-smoke schedule dryrun sim-smoke analyze \
+	lint trace-smoke calibrate-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -44,3 +45,17 @@ sim-smoke:
 	PYTHONPATH=src $(PY) -m repro.sim --arch resnet50-cifar --ascii
 	PYTHONPATH=src $(PY) -m repro.sim --arch qwen3-1.7b --shape train_4k \
 		--mesh multi --autotune
+
+# measured per-op replay (DESIGN.md §12) on 8 fake devices: one merged
+# Chrome/Perfetto trace with a simulated AND a measured track for the
+# same schedule, plus the per-op divergence table — a CI artifact
+trace-smoke:
+	mkdir -p results
+	PYTHONPATH=src $(PY) -m repro.obs --trace results/obs_trace.json --diff
+
+# fit the alpha-beta NetworkModel from measured rows (both transport
+# families x three bucket sizes) and persist the per-mesh profile that
+# `auto` prefers over the built-in default — a CI artifact
+calibrate-smoke:
+	PYTHONPATH=src $(PY) -m repro.obs --fit --reps 2 \
+		--profile-dir results/netprofiles

@@ -20,21 +20,14 @@ from __future__ import annotations
 
 import json
 import os
-import time
-
 
 
 def _t(fn, *args, reps=3):
-    fn(*args)  # warmup/compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        r = fn(*args)
-    try:
-        import jax
-        jax.block_until_ready(r)
-    except Exception:
-        pass
-    return (time.perf_counter() - t0) / reps * 1e6
+    """Median host wall time in us — the repro.obs timing convention
+    (untimed warmup, then per-rep ``block_until_ready`` fences)."""
+    from repro.obs import host_time_us
+
+    return host_time_us(fn, *args, reps=reps)
 
 
 def bench_paper_figures(emit):
@@ -547,10 +540,14 @@ def main(argv=None) -> None:
     for name in wanted:
         SECTIONS[name](make_emit(name))
 
+    from repro.obs import bench_metadata
+
+    meta = bench_metadata()
     for section, rows in sections.items():
         path = f"BENCH_{section}.json"
         with open(path, "w") as f:
-            json.dump({"bench": section, "rows": rows}, f, indent=1)
+            json.dump({"bench": section, "meta": meta, "rows": rows},
+                      f, indent=1)
         print(f"[bench] wrote {path} ({len(rows)} rows)")
 
 

@@ -97,7 +97,15 @@ def analyze(strategy: str, zero1: str = "") -> dict:
                       sim=sim_config_for(strategy))
     opt_state = ts.init_opt()
     lowered = ts.fn.lower(params, opt_state, batch, jnp.int32(0))
-    hlo = lowered.compile().as_text()
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    # measured wall time of the compiled step (8 fake CPU devices —
+    # orders overhead, not network) next to the sim prediction
+    from repro.obs import host_time_us
+
+    step0 = jnp.int32(0)
+    measured_us = host_time_us(
+        lambda: compiled(params, opt_state, batch, step0), reps=3)
 
     total = len(re.findall(rf"= [^=\n]*{_COLL}\(", hlo))
     # collectives inside while-loop bodies (depcha: per-layer in-scan psums)
@@ -125,7 +133,9 @@ def analyze(strategy: str, zero1: str = "") -> dict:
             "loop_trip_multiplied": in_loop * 4,   # n_layers=4
             "sim_step_us": tl.step_time * 1e6,
             "sim_exposed_us": tl.exposed_comm * 1e6,
-            "sim_overlap": tl.overlap_fraction}
+            "sim_overlap": tl.overlap_fraction,
+            "measured_us": measured_us,
+            "measured_vs_sim": measured_us / (tl.step_time * 1e6)}
 
 
 def main():
@@ -136,7 +146,8 @@ def main():
     print("strategy,analyzer,ir_ops,ir_chains,ir_max_chain,ir_update_ops,"
           "ir_pre_ops,ir_post_ops,deferred_kb,"
           "collective_ops_static,in_loop_body,runtime_collectives(~),"
-          "sim_step_us,sim_exposed_us,sim_overlap")
+          "sim_step_us,sim_exposed_us,sim_overlap,"
+          "measured_us,measured_vs_sim")
     for s in strategy_names():
         for zero1 in ("", "scheduled", "deferred"):
             r = analyze(s, zero1=zero1)
@@ -150,7 +161,8 @@ def main():
                   f"{r['collective_ops']},"
                   f"{r['in_loop_body']},{runtime},"
                   f"{r['sim_step_us']:.1f},{r['sim_exposed_us']:.1f},"
-                  f"{r['sim_overlap']:.2f}")
+                  f"{r['sim_overlap']:.2f},"
+                  f"{r['measured_us']:.1f},{r['measured_vs_sim']:.2f}")
 
 
 if __name__ == "__main__":

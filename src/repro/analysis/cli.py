@@ -158,8 +158,11 @@ def main(argv: list[str] | None = None) -> int:
           f"{n_rej} rejected by contract, {len(bad)} analyzer errors")
 
     if args.json:
+        from repro.obs import bench_metadata
+
         with open(args.json, "w") as f:
-            json.dump({"cells": cells,
+            json.dump({"meta": bench_metadata(),
+                       "cells": cells,
                        "summary": {"total": len(cells), "ok": n_ok,
                                    "rejected": n_rej,
                                    "errors": len(bad)}}, f, indent=2)

@@ -89,6 +89,11 @@ class GradSync:
         in_scan_names: frozenset[str] = frozenset(),
     ):
         self.cfg = cfg
+        # kept for the measured per-op replay (repro.obs.measure), which
+        # re-dispatches the planned schedule op-by-op over this mesh with
+        # these specs
+        self.mesh = mesh
+        self.param_specs = param_specs
         self.info: StrategyInfo = get_strategy(cfg.strategy)  # fail fast
         if self.info.two_phase and cfg.reducer not in ("flat", "ring"):
             # "flat" → psum_scatter/all_gather; "ring" → the chunked ring

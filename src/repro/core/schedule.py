@@ -286,6 +286,262 @@ def _join(tokens: list[jax.Array]) -> jax.Array:
     return dep.update(dep.new_token(), *tokens)
 
 
+def op_scope_name(op: CollectiveOp) -> str:
+    """XLA named-scope / profiler annotation label for one op.  Shared by
+    the full emitter and the per-op measured replay (``repro.obs``) so a
+    device profile and a measured Timeline name ops identically."""
+    return (f"comm.{op.kind}.b{op.bucket.bucket_id}"
+            f".op{op.op_id}.{op.phase}")
+
+
+class _OpEmitter:
+    """Per-op emission engine behind ``execute``.
+
+    Holds the cross-op state a schedule threads between ops — completion
+    tokens, reduce-scatter/update shards, NORM clip multipliers — and
+    emits ONE op at a time into a flat leaf list.  ``execute`` drives it
+    over a whole schedule inside one traced program; the measured replay
+    (``repro.obs.measure``) drives the same emitter one op per jitted
+    dispatch, injecting the carried state explicitly, so the profiled
+    path cannot drift from the production path.
+    """
+
+    def __init__(
+        self,
+        schedule: CommSchedule,
+        plan: BucketPlan,
+        *,
+        reducer: Reducer,
+        reducers: Mapping[str, Reducer] | None = None,
+        mesh_shape: Mapping[str, int] | None = None,
+        mean_axes: tuple[str, ...] = (),
+        use_fused_staging: bool = True,
+        loss_scale: float = 1.0,
+        two_phase_impl: str = "psum",
+        update_fn: Callable[[CollectiveOp, jax.Array], jax.Array] | None = None,
+        clip_norm: float = 0.0,
+        aux: dict | None = None,
+        pending: Mapping[int, jax.Array] | None = None,
+    ):
+        if two_phase_impl not in ("psum", "ring"):
+            raise ValueError(f"unknown two_phase_impl {two_phase_impl!r}")
+        self.plan = plan
+        self.reducer = reducer
+        self.reducers = dict(reducers or {})
+        self.mesh_shape = mesh_shape
+        self.mean_axes = mean_axes
+        self.use_fused_staging = use_fused_staging
+        self.loss_scale = loss_scale
+        self.two_phase_impl = two_phase_impl
+        self.update_fn = update_fn
+        self.clip_norm = clip_norm
+        self.aux = aux
+        self.pending = pending
+        self.by_id = {op.op_id: op for op in schedule.ops}
+        # carried state (op_id-keyed); the replay swaps these between
+        # per-op dispatches
+        self.tokens: dict[int, jax.Array] = {}
+        self.shards: dict[int, tuple[jax.Array, int]] = {}
+        self.clip_scales: dict[int, jax.Array] = {}
+
+    # -- staging helpers ---------------------------------------------
+
+    def _dtype_of(self, bucket: Bucket):
+        return (bucket.comm_dtype if bucket.comm_dtype is not None
+                else self.plan.comm_dtype)
+
+    def _fused_ok(self, bucket: Bucket) -> bool:
+        return self.use_fused_staging and coll_ops.staging_supported(
+            (l.dtype for l in bucket.leaves), self._dtype_of(bucket))
+
+    def _stage_in(self, bucket: Bucket, flat_out: list) -> jax.Array:
+        """CopyFromTo(g, comm_buf): pack + cast (+ loss-scale), fused."""
+        if self._fused_ok(bucket):
+            return coll_ops.fused_pack(
+                bucket, flat_out, self._dtype_of(bucket),
+                scale=self.loss_scale)
+        if self.loss_scale != 1.0:
+            # the ref impl scales in f32 BEFORE the comm-dtype cast —
+            # scaling after would defeat the underflow protection the
+            # loss scale exists for (and diverge from the fused path)
+            return coll_ops.fused_pack(
+                bucket, flat_out, self._dtype_of(bucket),
+                scale=self.loss_scale, impl="leafwise")
+        return pack(bucket, flat_out, self._dtype_of(bucket))
+
+    def _stage_out(self, bucket: Bucket, buf: jax.Array,
+                   inv_scale: float, flat_out: list) -> None:
+        """CopyFromTo(recv_buf, g): unscale + cast back + scatter, fused."""
+        if self._fused_ok(bucket):
+            coll_ops.fused_unpack(bucket, buf, flat_out, scale=inv_scale)
+            return
+        if inv_scale != 1.0:
+            coll_ops.fused_unpack(bucket, buf, flat_out, scale=inv_scale,
+                                  impl="leafwise")
+            return
+        unpack(bucket, buf, flat_out)
+
+    def _group_of(self, bucket: Bucket) -> int:
+        if self.mesh_shape is None:
+            raise ValueError(
+                "mesh_shape is required to execute reduce_scatter/"
+                "all_gather ops (group size)")
+        return group_size(bucket.reduce_axes, self.mesh_shape)
+
+    def _scale_of(self, bucket: Bucket) -> float:
+        if self.mesh_shape is None:
+            return 1.0
+        return mean_scale(bucket.reduce_axes, self.mesh_shape,
+                          self.mean_axes)
+
+    def _shard_src(self, op: CollectiveOp, want: str,
+                   optional: bool = False) -> int | None:
+        """The dep producing this op's same-bucket shard — deps may also
+        carry chain-ordering edges to other buckets' ops.  ``optional``
+        returns None instead of raising (a deferred gather whose shard
+        arrives via ``pending`` has no in-schedule producer)."""
+        srcs = [d for d in op.depends_on if d in self.shards
+                and self.by_id[d].bucket.bucket_id == op.bucket.bucket_id]
+        if not srcs:
+            if optional:
+                return None
+            raise ValueError(
+                f"{op.kind} op {op.op_id} has no {want} dep for "
+                f"bucket {op.bucket.bucket_id}")
+        return srcs[0]
+
+    # -- the per-op body ---------------------------------------------
+
+    def emit(self, op: CollectiveOp, flat_out: list) -> None:
+        """Emit one op, reading/writing leaves in ``flat_out`` and the
+        carried token/shard/clip state on self.  Deps whose tokens are
+        absent gate on a fresh token: in full execution every dep's
+        token exists (topological order); in the per-op replay the dep
+        already completed in an earlier dispatch, so its data edge is
+        the real array handed in and no token is needed."""
+        token = _join([self.tokens[d] for d in op.depends_on
+                       if d in self.tokens])
+        bucket = op.bucket
+        mesh_shape = self.mesh_shape
+        two_phase_impl = self.two_phase_impl
+
+        if op.kind == ALLREDUCE:
+            red = (self.reducers.get(op.reducer, self.reducer)
+                   if op.reducer else self.reducer)
+            send_buf = self._stage_in(bucket, flat_out)
+            recv_buf, self.tokens[op.op_id] = emit_gated(
+                send_buf, token, lambda b, _r=red, _bk=bucket: _r(b, _bk))
+            self._stage_out(bucket, recv_buf, 1.0 / self.loss_scale,
+                            flat_out)
+
+        elif op.kind == REDUCE_SCATTER:
+            group = self._group_of(bucket)
+            send_buf = self._stage_in(bucket, flat_out)
+            n = send_buf.shape[0]
+            if (-n) % group:
+                send_buf = jnp.pad(send_buf, (0, (-n) % group))
+
+            def rs(b, _bk=bucket, _g=group):
+                if _g == 1:
+                    return b
+                if two_phase_impl == "ring":
+                    return coll_ops.ring_reduce_scatter(
+                        b, _bk.reduce_axes, mesh_shape)
+                return jax.lax.psum_scatter(
+                    b, _bk.reduce_axes, scatter_dimension=0, tiled=True)
+
+            shard, self.tokens[op.op_id] = emit_gated(send_buf, token, rs)
+            self.shards[op.op_id] = (shard, n)
+
+        elif op.kind == NORM:
+            # local sum of squares over every producing RS shard (each
+            # gradient element lives in exactly one shard across the
+            # reduce group, so the psum is the true global squared norm).
+            # The shards are still loss-scaled and pre-mean (UPDATE folds
+            # scale_of/loss_scale in later) — undo both here so the norm
+            # and the clip threshold see the TRUE gradients.
+            sq = jnp.float32(0.0)
+            for d in op.depends_on:
+                if d in self.shards and self.by_id[d].kind == REDUCE_SCATTER:
+                    s, _ = self.shards[d]
+                    g_scale = (self._scale_of(self.by_id[d].bucket)
+                               / self.loss_scale)
+                    sq = sq + g_scale * g_scale * jnp.sum(
+                        jnp.square(s.astype(jnp.float32)))
+            red, self.tokens[op.op_id] = emit_gated(
+                sq, token,
+                lambda v, _ax=bucket.reduce_axes: jax.lax.psum(v, _ax))
+            norm = jnp.sqrt(red)
+            if self.clip_norm > 0:
+                self.clip_scales[op.op_id] = jnp.minimum(
+                    1.0, self.clip_norm / (norm + 1e-9))
+            if self.aux is not None:
+                self.aux["grad_norm"] = norm
+
+        elif op.kind == UPDATE:
+            if self.update_fn is None:
+                raise ValueError(
+                    f"schedule contains UPDATE op {op.op_id} but no "
+                    f"update_fn was supplied")
+            src = self._shard_src(op, "reduce_scatter")
+            g_shard, n = self.shards[src]
+            g_shard = g_shard.astype(jnp.float32)
+            # dp mean + loss unscale
+            s = self._scale_of(bucket) / self.loss_scale
+            if s != 1.0:
+                g_shard = g_shard * s
+            for d in op.depends_on:             # clip on shards, pre-update
+                if d in self.clip_scales:
+                    g_shard = g_shard * self.clip_scales[d]
+            upd, self.tokens[op.op_id] = emit_gated(
+                g_shard, token, lambda v, _op=op: self.update_fn(_op, v))
+            self.shards[op.op_id] = (upd, n)
+            if self.aux is not None:
+                self.aux.setdefault(
+                    "update_shards", {})[bucket.bucket_id] = upd
+
+        elif op.kind == ALL_GATHER:
+            has_pending = (self.pending is not None
+                           and bucket.bucket_id in self.pending)
+            src = self._shard_src(op, "reduce_scatter", optional=has_pending)
+            if src is not None:
+                shard, n = self.shards[src]
+                gathers_updates = self.by_id[src].kind == UPDATE
+            else:
+                # PRE program: the shard was produced by LAST step's
+                # UPDATE op and carried across the boundary — always an
+                # update shard (dp mean + loss unscale already applied)
+                shard, n = self.pending[bucket.bucket_id], bucket.size
+                gathers_updates = True
+            group = self._group_of(bucket)
+
+            def ag(b, _bk=bucket, _g=group):
+                if _g == 1:
+                    return b
+                if two_phase_impl == "ring":
+                    return coll_ops.ring_all_gather(
+                        b, _bk.reduce_axes, mesh_shape)
+                return jax.lax.all_gather(
+                    b, _bk.reduce_axes, axis=0, tiled=True)
+
+            full, self.tokens[op.op_id] = emit_gated(shard, token, ag)
+            if full.shape[0] != n:
+                full = full[:n]
+            if gathers_updates:
+                # gathering optimizer updates: the dp mean and loss
+                # unscale were already applied to the grad shard
+                self._stage_out(bucket, full, 1.0, flat_out)
+            else:
+                s = self._scale_of(bucket)
+                if s != 1.0:
+                    full = full * s
+                self._stage_out(bucket, full, 1.0 / self.loss_scale,
+                                flat_out)
+
+        else:
+            raise ValueError(f"unknown op kind {op.kind!r}")
+
+
 def execute(
     schedule: CommSchedule,
     grads: Any,
@@ -346,193 +602,21 @@ def execute(
       UPDATE ops record their output shard in ``aux["update_shards"]``
         (bucket_id-keyed) when ``aux`` is given, so a POST program with
         deferred all-gathers can hand the shards to the next step.
+
+    Each op is emitted under a ``jax.named_scope`` (``op_scope_name``) so
+    device profiles attribute time to IR ops; the opt-in per-op measured
+    replay lives in ``repro.obs.measure`` and drives the same emitter.
     """
-    if two_phase_impl not in ("psum", "ring"):
-        raise ValueError(f"unknown two_phase_impl {two_phase_impl!r}")
     flat_out: list[jax.Array] = list(jax.tree_util.tree_leaves(grads))
     assert len(flat_out) == plan.num_leaves, (
         f"plan built for {plan.num_leaves} leaves, got {len(flat_out)}")
-    reducers = dict(reducers or {})
-    by_id = {op.op_id: op for op in schedule.ops}
-
-    def dtype_of(bucket: Bucket):
-        return (bucket.comm_dtype if bucket.comm_dtype is not None
-                else plan.comm_dtype)
-
-    def fused_ok(bucket: Bucket) -> bool:
-        return use_fused_staging and coll_ops.staging_supported(
-            (l.dtype for l in bucket.leaves), dtype_of(bucket))
-
-    def stage_in(bucket: Bucket) -> jax.Array:
-        """CopyFromTo(g, comm_buf): pack + cast (+ loss-scale), fused."""
-        if fused_ok(bucket):
-            return coll_ops.fused_pack(
-                bucket, flat_out, dtype_of(bucket), scale=loss_scale)
-        if loss_scale != 1.0:
-            # the ref impl scales in f32 BEFORE the comm-dtype cast —
-            # scaling after would defeat the underflow protection the
-            # loss scale exists for (and diverge from the fused path)
-            return coll_ops.fused_pack(
-                bucket, flat_out, dtype_of(bucket), scale=loss_scale,
-                impl="leafwise")
-        return pack(bucket, flat_out, dtype_of(bucket))
-
-    def stage_out(bucket: Bucket, buf: jax.Array,
-                  inv_scale: float) -> None:
-        """CopyFromTo(recv_buf, g): unscale + cast back + scatter, fused."""
-        if fused_ok(bucket):
-            coll_ops.fused_unpack(bucket, buf, flat_out, scale=inv_scale)
-            return
-        if inv_scale != 1.0:
-            coll_ops.fused_unpack(bucket, buf, flat_out, scale=inv_scale,
-                                  impl="leafwise")
-            return
-        unpack(bucket, buf, flat_out)
-
-    def group_of(bucket: Bucket) -> int:
-        if mesh_shape is None:
-            raise ValueError(
-                "mesh_shape is required to execute reduce_scatter/"
-                "all_gather ops (group size)")
-        return group_size(bucket.reduce_axes, mesh_shape)
-
-    def scale_of(bucket: Bucket) -> float:
-        if mesh_shape is None:
-            return 1.0
-        return mean_scale(bucket.reduce_axes, mesh_shape, mean_axes)
-
-    def shard_src(op: CollectiveOp, want: str,
-                  optional: bool = False) -> int | None:
-        """The dep producing this op's same-bucket shard — deps may also
-        carry chain-ordering edges to other buckets' ops.  ``optional``
-        returns None instead of raising (a deferred gather whose shard
-        arrives via ``pending`` has no in-schedule producer)."""
-        srcs = [d for d in op.depends_on if d in shards
-                and by_id[d].bucket.bucket_id == op.bucket.bucket_id]
-        if not srcs:
-            if optional:
-                return None
-            raise ValueError(
-                f"{op.kind} op {op.op_id} has no {want} dep for "
-                f"bucket {op.bucket.bucket_id}")
-        return srcs[0]
-
-    tokens: dict[int, jax.Array] = {}       # op_id -> token after that op
-    shards: dict[int, tuple[jax.Array, int]] = {}   # RS/UPD op -> (shard, n)
-    clip_scales: dict[int, jax.Array] = {}  # NORM op -> clip multiplier
-
+    em = _OpEmitter(
+        schedule, plan, reducer=reducer, reducers=reducers,
+        mesh_shape=mesh_shape, mean_axes=mean_axes,
+        use_fused_staging=use_fused_staging, loss_scale=loss_scale,
+        two_phase_impl=two_phase_impl, update_fn=update_fn,
+        clip_norm=clip_norm, aux=aux, pending=pending)
     for op in schedule.ops:
-        token = _join([tokens[d] for d in op.depends_on])
-        bucket = op.bucket
-
-        if op.kind == ALLREDUCE:
-            red = reducers.get(op.reducer, reducer) if op.reducer else reducer
-            send_buf = stage_in(bucket)
-            recv_buf, tokens[op.op_id] = emit_gated(
-                send_buf, token, lambda b, _r=red, _bk=bucket: _r(b, _bk))
-            stage_out(bucket, recv_buf, 1.0 / loss_scale)
-
-        elif op.kind == REDUCE_SCATTER:
-            group = group_of(bucket)
-            send_buf = stage_in(bucket)
-            n = send_buf.shape[0]
-            if (-n) % group:
-                send_buf = jnp.pad(send_buf, (0, (-n) % group))
-
-            def rs(b, _bk=bucket, _g=group):
-                if _g == 1:
-                    return b
-                if two_phase_impl == "ring":
-                    return coll_ops.ring_reduce_scatter(
-                        b, _bk.reduce_axes, mesh_shape)
-                return jax.lax.psum_scatter(
-                    b, _bk.reduce_axes, scatter_dimension=0, tiled=True)
-
-            shard, tokens[op.op_id] = emit_gated(send_buf, token, rs)
-            shards[op.op_id] = (shard, n)
-
-        elif op.kind == NORM:
-            # local sum of squares over every producing RS shard (each
-            # gradient element lives in exactly one shard across the
-            # reduce group, so the psum is the true global squared norm).
-            # The shards are still loss-scaled and pre-mean (UPDATE folds
-            # scale_of/loss_scale in later) — undo both here so the norm
-            # and the clip threshold see the TRUE gradients.
-            sq = jnp.float32(0.0)
-            for d in op.depends_on:
-                if d in shards and by_id[d].kind == REDUCE_SCATTER:
-                    s, _ = shards[d]
-                    g_scale = scale_of(by_id[d].bucket) / loss_scale
-                    sq = sq + g_scale * g_scale * jnp.sum(
-                        jnp.square(s.astype(jnp.float32)))
-            red, tokens[op.op_id] = emit_gated(
-                sq, token,
-                lambda v, _ax=bucket.reduce_axes: jax.lax.psum(v, _ax))
-            norm = jnp.sqrt(red)
-            if clip_norm > 0:
-                clip_scales[op.op_id] = jnp.minimum(
-                    1.0, clip_norm / (norm + 1e-9))
-            if aux is not None:
-                aux["grad_norm"] = norm
-
-        elif op.kind == UPDATE:
-            if update_fn is None:
-                raise ValueError(
-                    f"schedule contains UPDATE op {op.op_id} but no "
-                    f"update_fn was supplied")
-            src = shard_src(op, "reduce_scatter")
-            g_shard, n = shards[src]
-            g_shard = g_shard.astype(jnp.float32)
-            s = scale_of(bucket) / loss_scale   # dp mean + loss unscale
-            if s != 1.0:
-                g_shard = g_shard * s
-            for d in op.depends_on:             # clip on shards, pre-update
-                if d in clip_scales:
-                    g_shard = g_shard * clip_scales[d]
-            upd, tokens[op.op_id] = emit_gated(
-                g_shard, token, lambda v, _op=op: update_fn(_op, v))
-            shards[op.op_id] = (upd, n)
-            if aux is not None:
-                aux.setdefault("update_shards", {})[bucket.bucket_id] = upd
-
-        elif op.kind == ALL_GATHER:
-            has_pending = (pending is not None
-                           and bucket.bucket_id in pending)
-            src = shard_src(op, "reduce_scatter", optional=has_pending)
-            if src is not None:
-                shard, n = shards[src]
-                gathers_updates = by_id[src].kind == UPDATE
-            else:
-                # PRE program: the shard was produced by LAST step's
-                # UPDATE op and carried across the boundary — always an
-                # update shard (dp mean + loss unscale already applied)
-                shard, n = pending[bucket.bucket_id], bucket.size
-                gathers_updates = True
-            group = group_of(bucket)
-
-            def ag(b, _bk=bucket, _g=group):
-                if _g == 1:
-                    return b
-                if two_phase_impl == "ring":
-                    return coll_ops.ring_all_gather(
-                        b, _bk.reduce_axes, mesh_shape)
-                return jax.lax.all_gather(
-                    b, _bk.reduce_axes, axis=0, tiled=True)
-
-            full, tokens[op.op_id] = emit_gated(shard, token, ag)
-            if full.shape[0] != n:
-                full = full[:n]
-            if gathers_updates:
-                # gathering optimizer updates: the dp mean and loss
-                # unscale were already applied to the grad shard
-                stage_out(bucket, full, 1.0)
-            else:
-                s = scale_of(bucket)
-                if s != 1.0:
-                    full = full * s
-                stage_out(bucket, full, 1.0 / loss_scale)
-
-        else:
-            raise ValueError(f"unknown op kind {op.kind!r}")
-
+        with jax.named_scope(op_scope_name(op)):
+            em.emit(op, flat_out)
     return jax.tree_util.tree_unflatten(plan.treedef, flat_out)

@@ -65,6 +65,11 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--events-jsonl", default="",
+                    help="append per-step JSONL telemetry (repro.obs "
+                         "EventLog) to this path")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the final metrics snapshot here")
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -118,7 +123,8 @@ def main():
                          donate=not args.smoke)
     ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) \
         if args.ckpt_dir else None
-    trainer = Trainer(ts, pipe, ckpt, log_every=10)
+    trainer = Trainer(ts, pipe, ckpt, log_every=10,
+                      events_path=args.events_jsonl or None)
     # init_opt derives zero1 shard sizes from the step's LOCAL shapes
     # (opt.init on global TP-sharded params would size them wrong)
     opt_state = ts.init_opt() if args.zero1 else opt.init(params)
@@ -128,6 +134,19 @@ def main():
     _, _, hist = trainer.run(params, opt_state, args.steps)
     print(f"[train] {args.arch} {args.strategy}: "
           f"loss {hist['losses'][0]:.3f} -> {hist['losses'][-1]:.3f}")
+    snap = hist.get("metrics", {})
+    compile_s = hist.get("compile_time")
+    tps = snap.get("tokens_per_s")
+    if compile_s is not None:
+        print(f"[train] compile {compile_s:.2f}s (excluded from "
+              f"throughput)"
+              + (f", {tps:,.0f} tokens/s" if tps else ""))
+    if args.metrics_json:
+        import json
+
+        with open(args.metrics_json, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"[train] metrics snapshot -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,12 @@
+"""Entry point: force 8 fake CPU devices BEFORE jax loads (same pattern
+as ``python -m repro.sim``) so the 2x4 (data, model) mesh exists on any
+host, then hand off to the CLI."""
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import repro  # noqa: F401,E402  (jax compat shim before jax imports)
+from repro.obs.cli import main  # noqa: E402
+
+main()

@@ -1,0 +1,169 @@
+"""``python -m repro.obs`` — measure, diff, trace, and fit (DESIGN.md §12).
+
+Builds a small sharded param stack on a 2x4 (data, model) mesh of fake
+CPU devices (``__main__`` forces 8 via XLA_FLAGS, same pattern as
+``python -m repro.sim``), plans the configured strategy's schedule, then:
+
+  --diff         per-op sim-vs-measured table, largest divergence first
+  --trace PATH   one merged Chrome/Perfetto trace: a simulated and a
+                 measured track for the SAME schedule (`make trace-smoke`)
+  --fit          measure across bucket sizes, fit the alpha-beta
+                 NetworkModel, write the per-mesh profile `auto` prefers
+                 (`make calibrate-smoke`)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any
+
+
+def build_setup(strategy: str, reducer: str, bucket_kib: int):
+    """A GradSync + random global grads over a synthetic 4-layer param
+    stack (TP-sharded matmuls + replicated norms — all three grad
+    reduce-axis groups appear)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.kvstore import GradSync, GradSyncConfig
+    from repro.parallel.sharding import localize_structs
+
+    if jax.device_count() < 8:
+        raise SystemExit(
+            "need 8 devices — run as `python -m repro.obs` (which sets "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    d_model, d_ff = 128, 512
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    for i in range(4):
+        params[f"layer{i}.wi"] = jnp.zeros((d_model, d_ff), jnp.float32)
+        specs[f"layer{i}.wi"] = P(None, "model")
+        params[f"layer{i}.wo"] = jnp.zeros((d_ff, d_model), jnp.float32)
+        specs[f"layer{i}.wo"] = P("model", None)
+        params[f"layer{i}.scale"] = jnp.zeros((d_model,), jnp.float32)
+        specs[f"layer{i}.scale"] = P()
+    cfg = GradSyncConfig(strategy=strategy, reducer=reducer,
+                         mean_axes=("data",),
+                         bucket_bytes=bucket_kib << 10)
+    structs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    gs = GradSync(cfg, mesh, specs, localize_structs(structs, specs, mesh))
+    key = jax.random.PRNGKey(0)
+    grads = {k: jax.random.normal(jax.random.fold_in(key, i),
+                                  v.shape, v.dtype)
+             for i, (k, v) in enumerate(sorted(params.items()))}
+    return gs, grads
+
+
+def _sim_timeline(gs):
+    import numpy as np
+
+    from repro.sim.engine import SimConfig, simulate
+
+    return simulate(
+        gs.schedule, gs.mesh_shape,
+        sim=SimConfig(itemsize=np.dtype(gs.cfg.comm_dtype).itemsize,
+                      reducer=gs.cfg.reducer,
+                      fused_staging=gs.cfg.use_fused_staging))
+
+
+def _measure(gs, grads, reps: int):
+    from repro.obs.measure import measured_gradsync
+
+    _, timeline, info = measured_gradsync(gs, grads, reps=reps)
+    return timeline, info
+
+
+def cmd_diff(gs, sim_tl, meas_tl) -> None:
+    """Op-by-op divergence table, largest |log ratio| first."""
+    sim_by = {e.op_id: e for e in sim_tl.events}
+    rows = []
+    for ev in meas_tl.events:
+        se = sim_by[ev.op_id]
+        sim_us = se.duration * 1e6
+        meas_us = ev.duration * 1e6
+        ratio = meas_us / sim_us if sim_us > 0 else float("inf")
+        rows.append((ev.op_id, ev.kind, ev.bucket_id, sim_us, meas_us,
+                     ratio))
+    rows.sort(key=lambda r: abs(__import__("math").log(max(r[5], 1e-12))),
+              reverse=True)
+    print(f"{'op':>4} {'kind':<16} {'bucket':>6} {'sim_us':>10} "
+          f"{'meas_us':>10} {'meas/sim':>9}")
+    for op_id, kind, bid, s, m, r in rows:
+        print(f"{op_id:>4} {kind:<16} {bid:>6} {s:>10.1f} {m:>10.1f} "
+              f"{r:>9.2f}")
+    print(f"total sim {sim_tl.step_time * 1e6:.1f}us  "
+          f"measured(serial) {meas_tl.step_time * 1e6:.1f}us  "
+          f"largest divergence: op {rows[0][0]} ({rows[0][1]}) "
+          f"x{rows[0][5]:.2f}" if rows else "no events")
+
+
+def cmd_trace(gs, sim_tl, meas_tl, path: str, strategy: str) -> None:
+    from repro.sim.trace import write_chrome_trace
+
+    write_chrome_trace(path, {
+        f"measured:{strategy}": meas_tl,
+        f"simulated:{strategy}": sim_tl,
+    })
+    ok = len(sim_tl.events) == len(meas_tl.events) == len(gs.schedule.ops)
+    print(f"wrote {path}: simulated track {len(sim_tl.events)} ops, "
+          f"measured track {len(meas_tl.events)} ops, IR "
+          f"{len(gs.schedule.ops)} ops — "
+          f"{'match' if ok else 'MISMATCH'}")
+
+
+def cmd_fit(args) -> str:
+    """Measure across bucket sizes and both transport families, fit the
+    NetworkModel, persist the per-mesh profile."""
+    from repro.obs.calibrate import fit_network, save_profile
+    from repro.obs.measure import measurement_rows
+
+    rows: list[dict] = []
+    mesh_shape = None
+    for strategy in ("concom", "rsag"):     # allreduce rows + RS/AG rows
+        for kib in (16, 64, 256):
+            gs, grads = build_setup(strategy, args.reducer, kib)
+            mesh_shape = gs.mesh_shape
+            meas_tl, _ = _measure(gs, grads, args.reps)
+            rows.extend(measurement_rows(gs.schedule, meas_tl, mesh_shape))
+    model, info = fit_network(rows)
+    path = save_profile(model, mesh_shape, dir=args.profile_dir, info=info)
+    print(f"fitted {len(rows)} rows -> {path}")
+    print(json.dumps(info["axes"], indent=1, sort_keys=True))
+    print(f"rms residual {info['rms_residual_s'] * 1e6:.2f}us")
+    return path
+
+
+def main(argv: list[str] | None = None) -> None:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="measured per-op telemetry: diff/trace/fit")
+    p.add_argument("--strategy", default="concom")
+    p.add_argument("--reducer", default="flat")
+    p.add_argument("--bucket-kib", type=int, default=64)
+    p.add_argument("--reps", type=int, default=3,
+                   help="timed dispatches per op (min taken)")
+    p.add_argument("--diff", action="store_true",
+                   help="print the per-op sim-vs-measured table")
+    p.add_argument("--trace", metavar="PATH",
+                   help="write a merged sim+measured Chrome trace")
+    p.add_argument("--fit", action="store_true",
+                   help="fit the NetworkModel and write the profile")
+    p.add_argument("--profile-dir", default=None,
+                   help="profile output dir (default "
+                        "$REPRO_NETPROFILE_DIR or results/netprofiles)")
+    args = p.parse_args(argv)
+
+    if args.fit:
+        cmd_fit(args)
+        return
+
+    gs, grads = build_setup(args.strategy, args.reducer, args.bucket_kib)
+    sim_tl = _sim_timeline(gs)
+    meas_tl, info = _measure(gs, grads, args.reps)
+    if args.trace:
+        cmd_trace(gs, sim_tl, meas_tl, args.trace, args.strategy)
+    if args.diff or not args.trace:
+        cmd_diff(gs, sim_tl, meas_tl)

@@ -1,0 +1,252 @@
+"""Measured per-op replay: host-timed execution of a CommSchedule, one
+jitted dispatch per op, emitting the SAME ``Timeline`` structure the
+simulator produces (DESIGN.md §12).
+
+The production path runs the whole schedule inside one jitted shard_map
+program — XLA may overlap ops, so per-op time is invisible from the
+host.  The replay drives the identical ``_OpEmitter`` one op at a time:
+each op becomes its own compiled program whose carried state (gradient
+tree, RS/UPDATE shards, NORM clip scales) is passed explicitly between
+dispatches as sharded global arrays.  Compilation happens untimed
+(``lower().compile()``); each op then executes exactly once under
+``time.perf_counter`` + ``block_until_ready`` — so at ``reps=1`` the
+replayed outputs are bit-exact with the single-program execution (the
+profile-on ≡ profile-off guarantee ``tests/test_obs.py`` asserts).
+
+The resulting ``Timeline`` lays ops end-to-end on a serial clock: it
+deliberately measures per-op cost, not overlap (overlap is what the
+simulator models; diffing the two is the point — ``python -m repro.obs
+--diff``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.schedule import (
+    ALL_GATHER,
+    ALLREDUCE,
+    NORM,
+    REDUCE_SCATTER,
+    UPDATE,
+    CommSchedule,
+    _OpEmitter,
+    np_itemsize,
+    op_scope_name,
+)
+from repro.sim.engine import OpEvent, Timeline
+
+
+def _shard_pspec(axes: tuple[str, ...]) -> P:
+    """PartitionSpec of an RS/UPDATE shard: dim 0 split over the op's
+    reduce axes, in axis order — the same tiling ``psum_scatter(...,
+    tiled=True)`` produces and the ZeRO-1 opt-state specs use."""
+    axes = tuple(axes)
+    return P(axes) if axes else P()
+
+
+def _is_pspec(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def measured_timeline(
+    schedule: CommSchedule,
+    grads: Any,
+    plan: Any,
+    *,
+    mesh,
+    param_specs: Any,
+    reducer: Callable,
+    reducers: Mapping[str, Callable] | None = None,
+    mesh_shape: Mapping[str, int] | None = None,
+    mean_axes: tuple[str, ...] = (),
+    use_fused_staging: bool = True,
+    loss_scale: float = 1.0,
+    two_phase_impl: str = "psum",
+    update_fn: Callable | None = None,
+    clip_norm: float = 0.0,
+    pending: Mapping[int, jax.Array] | None = None,
+    reps: int = 1,
+) -> tuple[Any, Timeline, dict[str, Any]]:
+    """Replay ``schedule`` over ``grads`` one op per dispatch.
+
+    ``grads`` / ``pending`` are GLOBAL arrays (or host values); each op
+    runs as its own ``jit(shard_map(...))`` program over ``mesh``.
+    Returns ``(out_tree, timeline, info)`` where ``out_tree`` matches
+    what ``execute`` would return, ``timeline`` is a
+    ``repro.sim.engine.Timeline`` with one measured ``OpEvent`` per IR
+    op (serial clock), and ``info`` carries ``grad_norm`` /
+    ``update_shards`` / per-op seconds.
+
+    ``reps > 1`` re-dispatches each (pure) op program and keeps the
+    minimum time — outputs are unchanged, only the clock steadies.
+    """
+    if mesh_shape is None:
+        mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    itemsize = (np.dtype(plan.comm_dtype).itemsize
+                if plan.comm_dtype is not None else 4)
+    by_id = {op.op_id: op for op in schedule.ops}
+
+    em_kwargs = dict(
+        reducer=reducer, reducers=reducers, mesh_shape=mesh_shape,
+        mean_axes=mean_axes, use_fused_staging=use_fused_staging,
+        loss_scale=loss_scale, two_phase_impl=two_phase_impl,
+        update_fn=update_fn, clip_norm=clip_norm)
+
+    # commit the tree to its train-time shardings so every per-op
+    # program lowers against the real layout
+    flat_g, gdef = jax.tree_util.tree_flatten(grads)
+    flat_s = jax.tree_util.tree_leaves(param_specs, is_leaf=_is_pspec)
+    tree = jax.tree_util.tree_unflatten(gdef, [
+        jax.device_put(g, NamedSharding(mesh, s))
+        for g, s in zip(flat_g, flat_s)])
+
+    shard_vals: dict[int, jax.Array] = {}
+    shard_n: dict[int, int] = {}          # host-side unpadded sizes
+    clip_vals: dict[int, jax.Array] = {}
+    update_shards: dict[int, jax.Array] = {}
+    grad_norm = None
+    per_op_s: dict[int, float] = {}
+    events: list[OpEvent] = []
+    cursor = 0.0
+
+    for op in schedule.ops:
+        dshard_ids = sorted(d for d in op.depends_on if d in shard_vals)
+        dclip_ids = sorted(d for d in op.depends_on if d in clip_vals)
+        pend_arr = None
+        if op.kind == ALL_GATHER and pending is not None:
+            has_src = any(
+                d in shard_vals
+                and by_id[d].bucket.bucket_id == op.bucket.bucket_id
+                for d in op.depends_on)
+            if not has_src and op.bucket.bucket_id in pending:
+                pend_arr = pending[op.bucket.bucket_id]
+
+        args = (tree,
+                {d: shard_vals[d] for d in dshard_ids},
+                {d: clip_vals[d] for d in dclip_ids},
+                {0: pend_arr} if pend_arr is not None else {})
+        in_specs = (
+            param_specs,
+            {d: _shard_pspec(by_id[d].bucket.reduce_axes)
+             for d in dshard_ids},
+            {d: P() for d in dclip_ids},
+            ({0: _shard_pspec(op.bucket.reduce_axes)}
+             if pend_arr is not None else {}))
+
+        def one(tree_in, dshards, dclips, dpend, _op=op):
+            em = _OpEmitter(schedule, plan, aux={}, pending=None,
+                            **em_kwargs)
+            em.shards = {d: (a, shard_n[d]) for d, a in dshards.items()}
+            em.clip_scales = dict(dclips)
+            if dpend:
+                em.pending = {_op.bucket.bucket_id: dpend[0]}
+            flat = list(jax.tree_util.tree_leaves(tree_in))
+            with jax.named_scope(op_scope_name(_op)):
+                em.emit(_op, flat)
+            out_tree = jax.tree_util.tree_unflatten(plan.treedef, flat)
+            if _op.kind in (REDUCE_SCATTER, UPDATE):
+                return em.shards[_op.op_id][0]
+            if _op.kind == NORM:
+                norm = em.aux["grad_norm"]
+                if _op.op_id in em.clip_scales:
+                    return norm, em.clip_scales[_op.op_id]
+                return norm
+            return out_tree                 # ALLREDUCE / ALL_GATHER
+
+        if op.kind in (REDUCE_SCATTER, UPDATE):
+            out_specs: Any = _shard_pspec(op.bucket.reduce_axes)
+        elif op.kind == NORM:
+            out_specs = (P(), P()) if clip_norm > 0 else P()
+        else:
+            out_specs = param_specs
+
+        jitted = jax.jit(jax.shard_map(
+            one, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False))
+        compiled = jitted.lower(*args).compile()   # untimed warmup
+
+        with jax.profiler.TraceAnnotation(op_scope_name(op)):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(compiled(*args))
+            dt = time.perf_counter() - t0
+        for _ in range(reps - 1):                  # pure → idempotent
+            t0 = time.perf_counter()
+            jax.block_until_ready(compiled(*args))
+            dt = min(dt, time.perf_counter() - t0)
+
+        if op.kind == REDUCE_SCATTER:
+            shard_vals[op.op_id] = out
+            shard_n[op.op_id] = op.bucket.size
+        elif op.kind == UPDATE:
+            srcs = [d for d in op.depends_on if d in shard_vals
+                    and by_id[d].bucket.bucket_id == op.bucket.bucket_id]
+            shard_vals[op.op_id] = out
+            shard_n[op.op_id] = shard_n[srcs[0]]
+            update_shards[op.bucket.bucket_id] = out
+        elif op.kind == NORM:
+            if clip_norm > 0:
+                grad_norm, clip_vals[op.op_id] = out
+            else:
+                grad_norm = out
+        else:
+            tree = out
+
+        nb = op.bucket.size * np_itemsize(op.bucket.comm_dtype, itemsize)
+        per_op_s[op.op_id] = dt
+        events.append(OpEvent(
+            op_id=op.op_id, bucket_id=op.bucket.bucket_id, chain=op.chain,
+            kind=op.kind, nbytes=nb, release=cursor, start=cursor,
+            end=cursor + dt))
+        cursor += dt
+
+    info = {"grad_norm": grad_norm, "update_shards": update_shards,
+            "per_op_s": per_op_s}
+    return tree, Timeline(events=tuple(events), t_fwd=0.0, t_bwd=0.0), info
+
+
+def measured_gradsync(
+    gs, grads: Any, *, update_fn: Callable | None = None,
+    clip_norm: float = 0.0, schedule: CommSchedule | None = None,
+    pending: Mapping[int, jax.Array] | None = None, reps: int = 1,
+) -> tuple[Any, Timeline, dict[str, Any]]:
+    """``measured_timeline`` wired from a configured ``GradSync`` — the
+    measured twin of ``gs(grads)``."""
+    return measured_timeline(
+        schedule if schedule is not None else gs.schedule,
+        grads, gs.plan, mesh=gs.mesh, param_specs=gs.param_specs,
+        reducer=gs.reducer, mesh_shape=gs.mesh_shape,
+        mean_axes=gs.cfg.mean_axes,
+        use_fused_staging=gs.cfg.use_fused_staging,
+        loss_scale=gs.cfg.loss_scale,
+        two_phase_impl=gs._two_phase_impl(),
+        update_fn=update_fn, clip_norm=clip_norm,
+        pending=pending, reps=reps)
+
+
+def measurement_rows(
+    schedule: CommSchedule, timeline: Timeline,
+    mesh_shape: Mapping[str, int],
+) -> list[dict[str, Any]]:
+    """Flatten a measured Timeline into calibration rows (one dict per
+    wire op) for ``repro.obs.calibrate.fit_network``."""
+    by_id = {op.op_id: op for op in schedule.ops}
+    rows = []
+    for ev in timeline.events:
+        op = by_id[ev.op_id]
+        if op.kind not in (ALLREDUCE, REDUCE_SCATTER, ALL_GATHER):
+            continue
+        rows.append({
+            "kind": op.kind,
+            "nbytes": ev.nbytes,
+            "axes": tuple(op.bucket.reduce_axes),
+            "mesh_shape": dict(mesh_shape),
+            "num_leaves": len(op.bucket.leaves),
+            "t": ev.duration,
+        })
+    return rows

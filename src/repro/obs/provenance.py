@@ -1,0 +1,47 @@
+"""Shared provenance metadata for every artifact the repo writes
+(BENCH_*.json, fitted network profiles, traces) — DESIGN.md §12.
+
+Calibration fits a cost model FROM these artifacts, so it must be able
+to trust where a row came from: which mesh, which jax/jaxlib, which
+platform, when.  One helper, one schema version, every writer.
+"""
+from __future__ import annotations
+
+import platform
+from typing import Any, Mapping
+
+from repro.obs.events import utc_now
+
+SCHEMA_VERSION = 1
+
+
+def bench_metadata(
+    mesh_shape: Mapping[str, int] | None = None,
+    **extra: Any,
+) -> dict[str, Any]:
+    """The metadata header embedded in every BENCH_*.json / profile.
+
+    jax/jaxlib versions and the backend are best-effort: the analysis
+    CLI writes BENCH_analyze.json without importing jax, and a header
+    must never be the reason an artifact fails to write.
+    """
+    meta: dict[str, Any] = {
+        "schema_version": SCHEMA_VERSION,
+        "utc": utc_now(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+    }
+    try:
+        import jax
+        import jaxlib
+
+        meta["jax_version"] = jax.__version__
+        meta["jaxlib_version"] = jaxlib.__version__
+        meta["backend"] = jax.default_backend()
+        meta["device_count"] = jax.device_count()
+    except Exception:
+        meta["jax_version"] = None
+    if mesh_shape is not None:
+        meta["mesh_shape"] = dict(mesh_shape)
+    meta.update(extra)
+    return meta

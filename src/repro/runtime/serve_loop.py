@@ -45,7 +45,11 @@ class Server:
     """Batched greedy-decoding server for any family with serve hooks."""
 
     def __init__(self, cfg, mesh: Mesh, params, *, max_len: int = 256,
-                 batch: int | None = None):
+                 batch: int | None = None,
+                 metrics: "MetricsRegistry | None" = None):
+        from repro.obs import MetricsRegistry
+
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.cfg = cfg
         self.mesh = mesh
         self.api = family_of(cfg)
@@ -104,10 +108,13 @@ class Server:
 
     def generate(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
         """prompts: (B, S) int32 → (B, max_new) greedy continuations."""
+        import time
+
         B, S = prompts.shape
         if B not in self._fns:
             self._fns[B] = self._build(B)
         fns = self._fns[B]
+        t_start = time.perf_counter()
         toks = jax.device_put(
             jnp.asarray(prompts, jnp.int32),
             NamedSharding(self.mesh, batch_spec(self.mesh)))
@@ -120,12 +127,23 @@ class Server:
             cache = jax.device_put(
                 cache, jax.tree.map(
                     lambda s: NamedSharding(self.mesh, s), fns.cache_specs))
+        t_prefill = time.perf_counter()
         out = [np.asarray(tok)]
         pos = S
         for _ in range(max_new - 1):
             tok, cache = fns.decode(self.params, cache, tok, jnp.int32(pos))
             out.append(np.asarray(tok))
             pos += 1
+        t_end = time.perf_counter()
+        self.metrics.counter("serve.requests_total").inc(B)
+        self.metrics.counter("serve.tokens_generated").inc(B * max_new)
+        self.metrics.histogram("serve.prefill_s").observe(
+            t_prefill - t_start)
+        if max_new > 1:
+            self.metrics.histogram("serve.decode_per_token_s").observe(
+                (t_end - t_prefill) / (max_new - 1))
+        self.metrics.gauge("serve.tokens_per_s").set(
+            B * max_new / max(t_end - t_start, 1e-9))
         return np.stack(out, axis=1)
 
 
@@ -158,6 +176,9 @@ class RequestQueue:
         max_len = max(r[0].shape[0] for r in reqs)
         max_new = max(r[1] for r in reqs)
         n = len(reqs)
+        m = self.server.metrics
+        m.counter("serve.batches_total").inc()
+        m.gauge("serve.batch_fill").set(n / self.batch)
         pad_to = self.batch
         toks = np.zeros((pad_to, max_len), np.int32)
         for i, (p, _, _) in enumerate(reqs):

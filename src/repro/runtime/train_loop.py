@@ -382,7 +382,12 @@ class Trainer:
                  straggler_factor: float = 3.0,
                  straggler_patience: int = 3,
                  log_every: int = 10,
-                 printer: Callable[[str], None] = print):
+                 printer: Callable[[str], None] = print,
+                 metrics: "MetricsRegistry | None" = None,
+                 events_path: str | None = None,
+                 loss_window: int = 10_000):
+        from repro.obs import EventLog, MetricsRegistry
+
         self.step_fn = step_fn
         self.pipeline = pipeline
         self.ckpt = ckpt
@@ -393,9 +398,57 @@ class Trainer:
         self.printer = printer
         self.step_times: list[float] = []
         self.events: list[dict] = []
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.event_log = EventLog(events_path)
+        self.loss_window = loss_window
+        # first executed step spans the jit warmup compile — reported
+        # separately, excluded from step_times / throughput stats
+        self.compile_time: float | None = None
+
+    def _event(self, kind: str, **fields) -> None:
+        """Record a lifecycle event in-memory AND on the JSONL stream."""
+        self.events.append({"kind": kind, **fields})
+        self.event_log.emit(kind, **fields)
+
+    def _account_static(self, params, opt_state) -> None:
+        """One-time gauges/counters that don't change per step: comm
+        bytes per step by op kind/reducer/phase (from the planned
+        schedule), a peak-memory proxy (resident params + opt state),
+        and the simulator's exposed-comm estimate for this plan."""
+        from repro.obs import comm_byte_counters
+
+        state_bytes = sum(
+            int(np.prod(x.shape)) * x.dtype.itemsize
+            for x in jax.tree_util.tree_leaves((params, opt_state))
+            if hasattr(x, "shape"))
+        self.metrics.gauge("mem.state_bytes").set(state_bytes)
+        gs = getattr(self.step_fn, "gradsync", None)
+        if gs is None:
+            return
+        comm_byte_counters(
+            gs.schedule, self.metrics,
+            itemsize=np.dtype(gs.cfg.comm_dtype).itemsize)
+        try:
+            from repro.sim.engine import SimConfig, simulate
+
+            tl = simulate(
+                gs.schedule, gs.mesh_shape,
+                compute=gs.cfg.sim_compute,
+                sim=SimConfig(
+                    itemsize=np.dtype(gs.cfg.comm_dtype).itemsize,
+                    reducer=gs.cfg.reducer,
+                    fused_staging=gs.cfg.use_fused_staging))
+            self.metrics.gauge("sim.step_time_s").set(tl.step_time)
+            self.metrics.gauge("sim.exposed_comm_s").set(tl.exposed_comm)
+        except Exception:
+            pass    # an estimate must never take down training
 
     def run(self, params, opt_state, num_steps: int,
             start_step: int = 0) -> tuple[Any, Any, dict]:
+        from collections import deque
+
+        from repro.obs import heartbeat_line
+
         step = start_step
         if self.ckpt is not None and self.ckpt.latest() is not None:
             step, state = self.ckpt.restore(
@@ -405,13 +458,18 @@ class Trainer:
                     self.step_fn.param_specs))
             opt_state = jax.device_put(
                 state["opt"], self.step_fn.shardings(self.step_fn.opt_specs))
-            self.events.append({"kind": "restore", "step": step})
+            self._event("restore", step=step)
             self.printer(f"[trainer] restored checkpoint at step {step}")
 
-        losses = []
+        self._account_static(params, opt_state)
+        losses = deque(maxlen=self.loss_window)
         consec_slow = 0
+        first_timed = self.compile_time is None
         while step < num_steps:
             batch = self.pipeline.batch_at(step)
+            tokens = sum(
+                int(np.prod(v.shape)) for k, v in batch.items()
+                if k == "tokens") if isinstance(batch, dict) else 0
             t0 = time.perf_counter()
             try:
                 if step in self.fail_at:
@@ -421,7 +479,7 @@ class Trainer:
                     params, opt_state, batch, jnp.int32(step))
                 jax.block_until_ready(metrics["loss"])
             except SimulatedFailure as e:
-                self.events.append({"kind": "failure", "step": step})
+                self._event("failure", step=step)
                 self.printer(f"[trainer] {e}; recovering from checkpoint")
                 if self.ckpt is None or self.ckpt.latest() is None:
                     self.printer("[trainer] no checkpoint; restart from 0")
@@ -436,33 +494,60 @@ class Trainer:
                     state["opt"],
                     self.step_fn.shardings(self.step_fn.opt_specs))
                 step = s
-                self.events.append({"kind": "recover", "step": s})
+                self._event("recover", step=s)
                 continue
 
             dt = time.perf_counter() - t0
-            if len(self.step_times) >= 5:
-                med = statistics.median(self.step_times[-50:])
-                if dt > self.straggler_factor * med:
-                    consec_slow += 1
-                    self.events.append(
-                        {"kind": "straggler", "step": step, "dt": dt,
-                         "median": med})
-                    if consec_slow >= self.straggler_patience:
-                        self.events.append(
-                            {"kind": "remesh_requested", "step": step})
-                        self.printer(
-                            f"[trainer] {consec_slow} consecutive straggler "
-                            f"steps — requesting re-shard / hot-spare swap")
+            if first_timed:
+                # the first executed step spans the jit warmup compile:
+                # report it separately, keep it out of every throughput
+                # stat (step_times, histograms, tokens/s, stragglers)
+                first_timed = False
+                self.compile_time = dt
+                self.metrics.gauge("compile_time_s").set(dt)
+                self._event("compile", step=step, dt=dt)
+            else:
+                if len(self.step_times) >= 5:
+                    med = statistics.median(self.step_times[-50:])
+                    if dt > self.straggler_factor * med:
+                        consec_slow += 1
+                        self._event("straggler", step=step, dt=dt,
+                                    median=med)
+                        if consec_slow >= self.straggler_patience:
+                            self._event("remesh_requested", step=step)
+                            self.printer(
+                                f"[trainer] {consec_slow} consecutive "
+                                f"straggler steps — requesting re-shard / "
+                                f"hot-spare swap")
+                            consec_slow = 0
+                    else:
                         consec_slow = 0
-                else:
-                    consec_slow = 0
-            self.step_times.append(dt)
+                self.step_times.append(dt)
+                self.metrics.histogram("step_time_s").observe(dt)
+                if tokens:
+                    self.metrics.counter("tokens_total").inc(tokens)
+                    self.metrics.gauge("tokens_per_s").set(tokens / dt)
 
-            losses.append(float(metrics["loss"]))
+            loss = float(metrics["loss"])
+            gnorm = float(metrics.get("grad_norm", 0.0))
+            losses.append(loss)
+            self.metrics.counter("steps_total").inc()
+            self.metrics.gauge("loss").set(loss)
+            self.metrics.gauge("grad_norm").set(gnorm)
+            self.event_log.emit(
+                "step", step=step, loss=loss, dt=dt, grad_norm=gnorm,
+                tokens=tokens, compile_step=self.compile_time == dt)
             if step % self.log_every == 0:
                 self.printer(
                     f"[trainer] step {step} loss {losses[-1]:.4f} "
                     f"({dt*1e3:.1f} ms)")
+                avg = (sum(self.step_times[-50:])
+                       / max(len(self.step_times[-50:]), 1) * 1e3
+                       if self.step_times else None)
+                self.printer(heartbeat_line(
+                    step, loss=loss, step_ms=dt * 1e3, avg_ms=avg,
+                    tokens_per_s=(tokens / dt if tokens else None),
+                    grad_norm=gnorm, compile_s=self.compile_time))
             step += 1
             if self.ckpt is not None:
                 self.ckpt.maybe_save(
@@ -470,4 +555,9 @@ class Trainer:
 
         if self.ckpt is not None:
             self.ckpt.wait()
-        return params, opt_state, {"losses": losses, "events": self.events}
+        return params, opt_state, {
+            "losses": list(losses),
+            "events": self.events,
+            "compile_time": self.compile_time,
+            "metrics": self.metrics.snapshot(),
+        }

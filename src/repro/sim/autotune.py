@@ -202,6 +202,28 @@ def last_auto_report() -> dict[str, Any]:
     return dict(_LAST_AUTO)
 
 
+def _resolve_network(ctx: Mapping[str, Any],
+                     mesh_shape: Mapping[str, int]):
+    """The NetworkModel ``auto`` ranks with, by preference: one passed
+    in the context, else a calibrated per-mesh profile fitted from
+    measured runs (``repro.obs.calibrate``, ``python -m repro.obs
+    --fit``), else the built-in defaults.  Returns (net_or_None,
+    source_tag) — the tag lands in ``last_auto_report()["net"]`` so a
+    plan is auditable about which cost model chose its winner."""
+    net = ctx.get("net")
+    if net is not None:
+        return net, "context"
+    try:
+        from repro.obs.calibrate import fitted_network
+
+        net, path = fitted_network(mesh_shape)
+    except Exception:
+        net, path = None, None
+    if net is not None:
+        return net, f"fitted:{path}"
+    return None, "default"
+
+
 def _candidates(reducer: str) -> tuple[str, ...]:
     # two-phase strategies emit raw RS/AG ops that would silently ignore
     # a non-flat reducer (same rule GradSync enforces) — not candidates
@@ -240,12 +262,13 @@ def plan_auto(
     reducer = ctx.get("reducer", "flat")
     sim = SimConfig(itemsize=int(ctx.get("itemsize", 4)), reducer=reducer,
                     fused_staging=bool(ctx.get("fused_staging", True)))
+    net, net_source = _resolve_network(ctx, mesh_shape)
     zero1 = ctx.get("zero1")
     if zero1 is not None:
         ranked = rank_step_plans(
             plan, mesh_shape, dp_axes=tuple(zero1["dp_axes"]),
             clip=bool(zero1.get("clip", False)),
-            compute=ctx.get("compute"), net=ctx.get("net"), sim=sim,
+            compute=ctx.get("compute"), net=net, sim=sim,
             accum=int(zero1.get("accum", 1)),
             accum_overlap=bool(zero1.get("accum_overlap", True)))
         # the winner must come from the family the caller will EXECUTE
@@ -261,6 +284,7 @@ def plan_auto(
             "plan": family,
             "ranking": [(n, tl.step_time) for n, tl in ranked],
             "zero1": True,
+            "net": net_source,
         })
         return get_strategy(winner).plan(plan, skip_names=skip_names)
     # in-scan psums are keyed on the CONFIGURED strategy, so a delegated
@@ -269,7 +293,7 @@ def plan_auto(
     # the caller really dropped in-scan leaves from this plan)
     ranked = rank_strategies(
         plan, mesh_shape,
-        compute=ctx.get("compute"), net=ctx.get("net"), sim=sim,
+        compute=ctx.get("compute"), net=net, sim=sim,
         skip_names=skip_names,
         strategies=_candidates(reducer),
         in_scan_active=bool(skip_names))
@@ -279,6 +303,7 @@ def plan_auto(
         "winner": winner,
         "ranking": [(n, tl.step_time) for n, tl in ranked],
         "zero1": False,
+        "net": net_source,
     })
     return get_strategy(winner).plan(plan, skip_names=skip_names)
 

@@ -476,4 +476,32 @@ _, p_voff, _ = one_step(mesh8, mk_dense(4), mode="deferred", dp_size=2,
 check("analysis-verify-planning-bitexact",
       worst_diff(p_von, p_voff) == 0.0)
 
+# 12. measured per-op replay (DESIGN.md §12) on the real 2×4 mesh: the
+#     one-op-per-dispatch replay must be BIT-exact with the single
+#     shard_map program (profile-on ≡ profile-off) and emit exactly one
+#     measured OpEvent per IR op.
+from repro.obs.cli import build_setup
+from repro.obs.measure import measured_gradsync
+
+for strat in ("concom", "rsag"):
+    gs_o, grads_o = build_setup(strat, "flat", 64)
+    pspecs_o = gs_o.param_specs
+    flat_g, gdef = jax.tree_util.tree_flatten(grads_o)
+    flat_s = jax.tree_util.tree_leaves(
+        pspecs_o, is_leaf=lambda x: isinstance(x, P))
+    gput = jax.tree_util.tree_unflatten(gdef, [
+        jax.device_put(g, NamedSharding(gs_o.mesh, s))
+        for g, s in zip(flat_g, flat_s)])
+    ref = jax.jit(lambda g, _gs=gs_o, _ps=pspecs_o: jax.shard_map(
+        _gs, mesh=_gs.mesh, in_specs=(_ps,), out_specs=_ps,
+        check_vma=False)(g))(gput)
+    out_m, tl_m, _ = measured_gradsync(gs_o, grads_o, reps=1)
+    check(f"obs-measured-opcount[{strat}]",
+          len(tl_m.events) == len(gs_o.schedule.ops) > 0)
+    check(f"obs-measured-equals-execute-bitexact[{strat}]",
+          worst_diff(out_m, ref) == 0.0)
+    check(f"obs-measured-serial-clock[{strat}]",
+          abs(tl_m.step_time - sum(e.duration for e in tl_m.events))
+          < 1e-9)
+
 print("DONE", flush=True)
