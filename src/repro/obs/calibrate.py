@@ -38,6 +38,15 @@ _WIRE_KINDS = ("allreduce", "reduce_scatter", "all_gather")
 DEFAULT_PROFILE_DIR = "results/netprofiles"
 PROFILE_DIR_ENV = "REPRO_NETPROFILE_DIR"
 
+# Quality gate: a fit whose rms residual exceeds this fraction of the
+# rms measured (staging-subtracted) row time explains too little of the
+# data to rank plans with — e.g. a CPU-host smoke run, where dispatch
+# jitter dwarfs the wire terms.  Such profiles are still persisted
+# (quality: "poor" recorded in the doc, useful as a CI artifact and for
+# --diff forensics) but `fitted_network` treats them as absent, so a
+# bad calibration can never silently distort `auto`'s ranking.
+REL_RESIDUAL_MAX = 0.25
+
 
 def mesh_key(mesh_shape: Mapping[str, int]) -> str:
     return "_".join(f"{a}{n}" for a, n in sorted(mesh_shape.items()))
@@ -162,7 +171,14 @@ def fit_network(
         model, params, residual = solve(model)
         if residual >= prev * (1.0 - 1e-9):   # ordering stabilized
             break
+    # the target vector is staging-subtracted row time — independent of
+    # the axis ordering, so computed once for the quality verdict
+    target_rms = float(np.sqrt(np.mean(
+        [(row["t"] - _staging_of(row, st)) ** 2 for row in rows])))
+    rel = residual / target_rms if target_rms > 0 else float("inf")
     info = {"axes": params, "rms_residual_s": residual,
+            "rel_residual": rel,
+            "quality": "ok" if rel <= REL_RESIDUAL_MAX else "poor",
             "n_rows": len(rows)}
     return model, info
 
@@ -192,8 +208,12 @@ def fit_staging(
                          fused_passes=ref.fused_passes,
                          leafwise_passes=ref.leafwise_passes)
     residual = float(np.sqrt(np.mean((A @ x - b) ** 2))) if len(rows) else 0.0
+    target_rms = float(np.sqrt(np.mean(b ** 2))) if len(rows) else 0.0
+    rel = residual / target_rms if target_rms > 0 else float("inf")
     info = {"hbm_bw": model.hbm_bw, "leaf_overhead": leaf,
-            "rms_residual_s": residual, "n_rows": len(rows)}
+            "rms_residual_s": residual, "rel_residual": rel,
+            "quality": "ok" if rel <= REL_RESIDUAL_MAX else "poor",
+            "n_rows": len(rows)}
     return model, info
 
 
@@ -255,11 +275,19 @@ def fitted_network(
 ) -> tuple[NetworkModel | None, str | None]:
     """The fitted profile for this mesh if one exists — ``(model, path)``
     or ``(None, None)``.  Unreadable/corrupt profiles are treated as
-    absent: a stale artifact must never break planning."""
+    absent (a stale artifact must never break planning), and so are
+    profiles whose recorded fit ``quality`` is ``"poor"`` (residual >
+    ``REL_RESIDUAL_MAX`` of the measured signal): ranking plans against
+    a fit that does not explain its own calibration data is worse than
+    the built-in defaults."""
     path = profile_path(mesh_shape, dir)
     if not os.path.exists(path):
         return None, None
     try:
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("fit", {}).get("quality", "ok") != "ok":
+            return None, None
         return load_profile(path), path
     except Exception:
         return None, None

@@ -117,7 +117,11 @@ def cmd_trace(gs, sim_tl, meas_tl, path: str, strategy: str) -> None:
 def cmd_fit(args) -> str:
     """Measure across bucket sizes and both transport families, fit the
     NetworkModel, persist the per-mesh profile."""
-    from repro.obs.calibrate import fit_network, save_profile
+    from repro.obs.calibrate import (
+        REL_RESIDUAL_MAX,
+        fit_network,
+        save_profile,
+    )
     from repro.obs.measure import measurement_rows
 
     rows: list[dict] = []
@@ -132,7 +136,13 @@ def cmd_fit(args) -> str:
     path = save_profile(model, mesh_shape, dir=args.profile_dir, info=info)
     print(f"fitted {len(rows)} rows -> {path}")
     print(json.dumps(info["axes"], indent=1, sort_keys=True))
-    print(f"rms residual {info['rms_residual_s'] * 1e6:.2f}us")
+    print(f"rms residual {info['rms_residual_s'] * 1e6:.2f}us "
+          f"({info['rel_residual'] * 100:.0f}% of signal) — "
+          f"quality {info['quality']}")
+    if info["quality"] != "ok":
+        print("WARNING: poor fit (residual exceeds "
+              f"{REL_RESIDUAL_MAX * 100:.0f}% of the measured signal) — "
+              "profile saved for inspection, but `auto` will ignore it")
     return path
 
 

@@ -203,6 +203,27 @@ def test_fit_network_subtracts_staging_share():
             true.link(axis).bandwidth, rel=1e-6)
 
 
+def test_fit_network_quality_gate():
+    """A clean synthetic fit is quality "ok"; the same rows with large
+    multiplicative noise blow the relative-residual gate to "poor"."""
+    from repro.obs.calibrate import REL_RESIDUAL_MAX, fit_network
+
+    true = _true_network()
+    mesh_shape = {"data": 4, "model": 8}
+    rows = _wire_rows(true, mesh_shape)
+    _, info = fit_network(rows)
+    assert info["quality"] == "ok"
+    assert info["rel_residual"] <= REL_RESIDUAL_MAX
+
+    # deterministic "noise": alternate rows 4x slower / 4x faster, the
+    # kind of dispatch jitter a CPU-host smoke run produces
+    noisy = [dict(r, t=r["t"] * (4.0 if i % 2 else 0.25))
+             for i, r in enumerate(rows)]
+    _, bad = fit_network(noisy)
+    assert bad["quality"] == "poor"
+    assert bad["rel_residual"] > REL_RESIDUAL_MAX
+
+
 def test_fit_network_needs_fittable_rows():
     from repro.obs.calibrate import fit_network
 
@@ -261,6 +282,19 @@ def test_profile_save_load_round_trip(tmp_path):
     assert got.link("data").bandwidth == true.link("data").bandwidth
     # a different mesh has no profile
     assert fitted_network({"data": 16}, str(tmp_path)) == (None, None)
+
+
+def test_poor_quality_profile_treated_as_absent(tmp_path):
+    """A persisted profile whose recorded fit quality is "poor" must
+    never reach `auto` — `fitted_network` skips it (load_profile still
+    reads it for forensics)."""
+    from repro.obs.calibrate import fitted_network, load_profile, save_profile
+
+    mesh_shape = {"data": 2, "model": 4}
+    path = save_profile(_true_network(), mesh_shape, dir=str(tmp_path),
+                        info={"quality": "poor", "rel_residual": 1.1})
+    assert fitted_network(mesh_shape, str(tmp_path)) == (None, None)
+    assert load_profile(path) is not None
 
 
 def test_corrupt_profile_treated_as_absent(tmp_path):
