@@ -2,7 +2,7 @@
 PY ?= python
 
 .PHONY: test test-dev bench bench-smoke schedule dryrun sim-smoke analyze \
-	lint trace-smoke calibrate-smoke
+	lint trace-smoke calibrate-smoke elastic-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -59,3 +59,10 @@ trace-smoke:
 calibrate-smoke:
 	PYTHONPATH=src $(PY) -m repro.obs --fit --reps 2 \
 		--profile-dir results/netprofiles
+
+# full elastic cycle on 8 fake devices (DESIGN.md §13): fault-injected
+# supervisor run (rank loss + ckpt-I/O faults) shrinks tp4→tp2 and grows
+# back, bit-exact vs a clean scripted replay for scheduled AND deferred
+# ZeRO-1; seeded reshard-pass mutation must be caught → BENCH_elastic.json
+elastic-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.elastic_smoke

@@ -2,7 +2,7 @@
 
 The paper's central hazard — "incorrect designs can easily lead to
 deadlocks or program crashes" when collectives are embedded in a
-training DAG — becomes *checkable* here: five pure-Python analysis
+training DAG — becomes *checkable* here: six pure-Python analysis
 passes run over any ``CommSchedule``/``StepProgram`` BEFORE anything is
 traced, and reject malformed schedules with a printable witness instead
 of a cryptic XLA error (or silent wrong numbers).
@@ -26,6 +26,10 @@ Passes (``repro.analysis.passes``):
                 reducer family, deferred-bytes consistency.
   donation    — staged buffers both donated and read by a PRE op of the
                 next step.
+  reshard     — elastic-transition soundness (DESIGN.md §13): RESHARD
+                ops bracketed by a REGROUP barrier, no PRE op crossing
+                the regroup, byte conservation per leaf across the old
+                and new meshes, static divisibility on the new mesh.
 
 Entry points:
   ``verify_schedule``  — raise ``ScheduleError`` on the first finding
@@ -44,6 +48,7 @@ from repro.analysis.passes import (
     check_carry,
     check_deadlock,
     check_donation,
+    check_reshard,
     check_spmd,
     structural_findings,
 )
@@ -63,6 +68,7 @@ __all__ = [
     "check_carry",
     "check_deadlock",
     "check_donation",
+    "check_reshard",
     "check_spmd",
     "run_passes",
     "structural_findings",

@@ -29,12 +29,16 @@ from repro.core.schedule import (
     POST,
     PRE,
     REDUCE_SCATTER,
+    REGROUP,
+    RESHARD,
     CollectiveOp,
     CommSchedule,
 )
 from repro.core.stepprogram import zero1_schedule
 
 MESH = {"data": 8}
+OLD_MESH_RS = {"data": 2, "model": 4}
+NEW_MESH_RS = {"data": 2, "model": 2}
 
 
 def synthetic_plan(n_buckets: int = 4, num_channels: int = 2,
@@ -224,6 +228,71 @@ def _unknown_reducer():
             {"mesh_shape": MESH})
 
 
+def synthetic_reshard_schedule(
+        streams: tuple[str, ...] = ("param", "inner/m"),
+) -> CommSchedule:
+    """A hand-rolled elastic transition like ``plan_reshard`` emits:
+    per-stream gather RESHARDs (old mesh), ONE REGROUP barrier joining
+    them all, then per-stream scatter RESHARDs (new mesh)."""
+    def bucket(bid: int, stream: str) -> Bucket:
+        leaves = tuple(
+            LeafInfo(name=f"{stream}:w{j}", index=j, shape=(16,),
+                     dtype=jnp.float32, size=16)
+            for j in range(2))
+        return Bucket(leaves=leaves, reduce_axes=("data",),
+                      channel=0, bucket_id=bid, comm_dtype=jnp.float32)
+
+    ops: list[CollectiveOp] = []
+    for si, stream in enumerate(streams):
+        ops.append(CollectiveOp(
+            op_id=si, bucket=bucket(si, stream), chain=si,
+            kind=RESHARD))
+    rg_id = len(streams)
+    regroup_bucket = Bucket(
+        leaves=(LeafInfo(name="__regroup", index=0, shape=(),
+                         dtype=jnp.float32, size=1),),
+        reduce_axes=("data", "model"), channel=0, bucket_id=rg_id,
+        comm_dtype=jnp.float32)
+    ops.append(CollectiveOp(
+        op_id=rg_id, bucket=regroup_bucket, chain=0,
+        depends_on=tuple(range(len(streams))), kind=REGROUP))
+    for si, stream in enumerate(streams):
+        oid = rg_id + 1 + si
+        ops.append(CollectiveOp(
+            op_id=oid, bucket=bucket(oid, stream), chain=si,
+            depends_on=(rg_id,), kind=RESHARD))
+    return CommSchedule(tuple(ops))
+
+
+_RS_CTX = {"old_mesh_shape": OLD_MESH_RS, "new_mesh_shape": NEW_MESH_RS}
+
+
+def _pre_crosses_regroup():
+    # the acceptance-criteria mutation: a deferred op inside a
+    # transition schedule reads a carry of the mesh being dissolved
+    s = synthetic_reshard_schedule()
+    victim = s.ops[-1].op_id
+    return _replace_op(s, victim, phase=PRE), dict(_RS_CTX)
+
+
+def _reshard_leaf_lost():
+    # one stream gathered off the old mesh but never scattered onto
+    # the new one — state silently dropped across the transition
+    s = synthetic_reshard_schedule()
+    ops = s.ops[:-1]
+    return CommSchedule(ops), dict(_RS_CTX)
+
+
+def _reshard_op_escapes_regroup():
+    # the barrier forgets one gather: the old mesh may dissolve while
+    # that RESHARD is still in flight
+    s = synthetic_reshard_schedule()
+    rg = next(op for op in s.ops if op.kind == REGROUP)
+    return (_replace_op(s, rg.op_id,
+                        depends_on=tuple(rg.depends_on[1:])),
+            dict(_RS_CTX))
+
+
 def _donated_pre_read():
     s = _zero1(defer=True)
     pre = next(op for op in s.ops if op.phase == PRE)
@@ -286,6 +355,17 @@ MUTATIONS: tuple[Mutation, ...] = (
     Mutation("donated-pre-read", "donation", "donated-pre-read",
              "deferred gather reads a bucket whose buffer is donated",
              _donated_pre_read),
+    Mutation("pre-crosses-regroup", "reshard", "pre-crosses-regroup",
+             "an op tagged PRE inside an elastic transition schedule "
+             "(deferred carry crossing the regroup barrier)",
+             _pre_crosses_regroup),
+    Mutation("reshard-leaf-lost", "reshard", "leaf-lost",
+             "a gathered stream never scattered onto the new mesh",
+             _reshard_leaf_lost),
+    Mutation("reshard-op-escapes-regroup", "reshard",
+             "op-escapes-regroup",
+             "the REGROUP barrier does not join one old-side gather",
+             _reshard_op_escapes_regroup),
 )
 
 
@@ -305,4 +385,6 @@ def valid_cases() -> list[tuple[str, CommSchedule, dict[str, Any]]]:
                 _zero1(strat, defer=defer, clip=True),
                 {"mesh_shape": MESH, "expect_defer": defer,
                  "plan_comm_dtype": jnp.float32}))
+    out.append(("reshard-transition", synthetic_reshard_schedule(),
+                dict(_RS_CTX)))
     return out

@@ -1,4 +1,4 @@
-"""The five analysis passes (DESIGN.md §11).
+"""The six analysis passes (DESIGN.md §11, §13).
 
 Every pass is a pure function ``CommSchedule (+ context) -> [Finding]``:
 no jax, no tracing, no devices — a schedule with hundreds of ops checks
@@ -27,17 +27,22 @@ from repro.core.schedule import (
     POST,
     PRE,
     REDUCE_SCATTER,
+    REGROUP,
+    RESHARD,
     UPDATE,
     CommSchedule,
     np_itemsize,
 )
 
-PASS_NAMES = ("deadlock", "spmd", "carry", "accounting", "donation")
+PASS_NAMES = ("deadlock", "spmd", "carry", "accounting", "donation",
+              "reshard")
 
 # kinds whose issue order on a shared communicator must be rank-uniform
 # (an ALL_GATHER is the second half of a matched pair — it attaches to
-# its producing RS/UPDATE and free-flies, the paper's OUTSTANDING window)
-_SERIAL_KINDS = (ALLREDUCE, REDUCE_SCATTER, NORM)
+# its producing RS/UPDATE and free-flies, the paper's OUTSTANDING window;
+# a REGROUP barrier is itself a collective every member must reach in
+# the same program position)
+_SERIAL_KINDS = (ALLREDUCE, REDUCE_SCATTER, NORM, REGROUP)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -699,4 +704,166 @@ def check_donation(schedule: CommSchedule,
                 Witness("donated buffer crossing the step boundary:",
                         (_op_str(op),
                          f"donated buckets: {sorted(donated)}"))))
+    return out
+
+
+# ----------------------------------- pass 6: reshard/regroup soundness
+
+def check_reshard(
+    schedule: CommSchedule,
+    *,
+    old_mesh_shape: Mapping[str, int] | None = None,
+    new_mesh_shape: Mapping[str, int] | None = None,
+    leaf_divisibility: Mapping[str, tuple[int, int]] | None = None,
+) -> list[Finding]:
+    """Soundness of an elastic transition (DESIGN.md §13).
+
+    A transition schedule is gather-side RESHARD ops (old mesh), ONE
+    REGROUP barrier the old communicator joins, then scatter-side
+    RESHARD ops (new mesh) — ``split_regroup`` executes the two sides as
+    separate programs.  Checked statically:
+
+      - every schedule with RESHARD ops carries a REGROUP (the
+        group-rebuild moment; without it the two meshes race),
+      - no PRE (deferred) op crosses a regroup — the carry is flushed
+        via ``TrainStep.finalize`` BEFORE the old mesh dissolves, so a
+        deferred op in a transition schedule reads state that no longer
+        exists,
+      - the barrier is real: every old-side op is an ancestor of the
+        REGROUP, and every post-regroup RESHARD depends on it,
+      - gather axes exist on the OLD mesh, scatter axes on the NEW,
+      - byte conservation per leaf: every gathered leaf is scattered
+        exactly once with the same total size (state neither lost,
+        duplicated, nor conjured across the transition),
+      - static divisibility of each param leaf's sharded dim by the new
+        mesh (``leaf_divisibility``: leaf → (dim_size, divisor), built
+        by the planner from the new mesh's specs).
+
+    On schedules with no RESHARD/REGROUP ops (every plain training
+    plan) this returns [] immediately.
+    """
+    reshard_ops = [op for op in schedule.ops if op.kind == RESHARD]
+    regroups = [op for op in schedule.ops if op.kind == REGROUP]
+    out: list[Finding] = []
+    if leaf_divisibility:
+        for name, (dim, div) in sorted(leaf_divisibility.items()):
+            if div and dim % div:
+                out.append(Finding(
+                    "reshard", "leaf-indivisible",
+                    f"leaf {name!r}: sharded dim of size {dim} is not "
+                    f"divisible by the new mesh's axis product {div} — "
+                    f"the scatter side cannot tile it"))
+    if not reshard_ops and not regroups:
+        return out
+    if structural_findings(schedule):
+        return out           # side/ordering analysis needs sound order
+
+    if reshard_ops and not regroups:
+        out.append(Finding(
+            "reshard", "regroup-missing",
+            f"schedule moves state with {len(reshard_ops)} RESHARD "
+            f"op(s) but has no REGROUP barrier — the old and new "
+            f"communicators are never synchronized",
+            tuple(op.op_id for op in reshard_ops)))
+
+    for op in schedule.ops:
+        if regroups and op.phase == PRE:
+            out.append(Finding(
+                "reshard", "pre-crosses-regroup",
+                f"op {op.op_id} ({op.kind}) is tagged PRE in a "
+                f"transition schedule — deferred carries must be "
+                f"flushed (TrainStep.finalize) before the regroup; a "
+                f"PRE op here reads opt_state['pending'] of a mesh "
+                f"that no longer exists",
+                (op.op_id,),
+                Witness("deferred op crossing the regroup barrier:",
+                        (_op_str(op),))))
+
+    pos = {op.op_id: i for i, op in enumerate(schedule.ops)}
+    first_rg = regroups[0] if regroups else None
+    cut = pos[first_rg.op_id] if first_rg is not None else len(schedule.ops)
+    gathers = [op for op in reshard_ops if pos[op.op_id] < cut]
+    scatters = [op for op in reshard_ops if pos[op.op_id] > cut]
+
+    if first_rg is not None:
+        anc = _ancestor_masks(schedule)
+        for op in schedule.ops[:cut]:
+            if not _reaches(anc, pos, op.op_id, first_rg.op_id):
+                out.append(Finding(
+                    "reshard", "op-escapes-regroup",
+                    f"op {op.op_id} precedes the REGROUP barrier (op "
+                    f"{first_rg.op_id}) but the barrier does not "
+                    f"transitively depend on it — the old mesh may "
+                    f"dissolve while the op is still in flight",
+                    (op.op_id, first_rg.op_id),
+                    Witness("old-side op the barrier does not join:",
+                            (_op_str(op), _op_str(first_rg)))))
+        for op in scatters:
+            if not _reaches(anc, pos, first_rg.op_id, op.op_id):
+                out.append(Finding(
+                    "reshard", "reshard-after-regroup-unanchored",
+                    f"scatter-side RESHARD {op.op_id} does not depend "
+                    f"on the REGROUP barrier (op {first_rg.op_id}) — "
+                    f"it could run before the old mesh quiesced",
+                    (op.op_id, first_rg.op_id)))
+
+    for ops, shape, side in ((gathers, old_mesh_shape, "old"),
+                             (scatters, new_mesh_shape, "new")):
+        if shape is None:
+            continue
+        for op in ops:
+            missing = [a for a in op.bucket.reduce_axes if a not in shape]
+            if missing:
+                out.append(Finding(
+                    "reshard", "reshard-axis-unknown",
+                    f"{side}-side RESHARD {op.op_id} moves state over "
+                    f"axes {missing} absent from the {side} mesh "
+                    f"{dict(shape)}", (op.op_id,)))
+
+    # byte conservation per leaf name, gather side vs scatter side
+    if regroups:
+        def tally(ops):
+            sizes: dict[str, int] = {}
+            counts: dict[str, int] = {}
+            for op in ops:
+                for leaf in op.bucket.leaves:
+                    sizes[leaf.name] = sizes.get(leaf.name, 0) + leaf.size
+                    counts[leaf.name] = counts.get(leaf.name, 0) + 1
+            return sizes, counts
+
+        g_sizes, g_counts = tally(gathers)
+        s_sizes, s_counts = tally(scatters)
+        for name, cnt in sorted({**g_counts, **s_counts}.items()):
+            if max(g_counts.get(name, 0), s_counts.get(name, 0)) > 1:
+                out.append(Finding(
+                    "reshard", "leaf-duplicated",
+                    f"leaf {name!r} is moved more than once on one side "
+                    f"of the transition (gathered "
+                    f"{g_counts.get(name, 0)}×, scattered "
+                    f"{s_counts.get(name, 0)}×)"))
+        if gathers and scatters:
+            for name in sorted(set(g_sizes) - set(s_sizes)):
+                out.append(Finding(
+                    "reshard", "leaf-lost",
+                    f"leaf {name!r} is gathered off the old mesh but "
+                    f"never scattered onto the new one — "
+                    f"{g_sizes[name]} elements of state are dropped",
+                    tuple(op.op_id for op in gathers
+                          if any(l.name == name for l in op.bucket.leaves))))
+            for name in sorted(set(s_sizes) - set(g_sizes)):
+                out.append(Finding(
+                    "reshard", "leaf-unsourced",
+                    f"leaf {name!r} is scattered onto the new mesh but "
+                    f"never gathered off the old one — the scatter "
+                    f"reads uninitialized state",
+                    tuple(op.op_id for op in scatters
+                          if any(l.name == name for l in op.bucket.leaves))))
+            for name in sorted(set(g_sizes) & set(s_sizes)):
+                if g_sizes[name] != s_sizes[name]:
+                    out.append(Finding(
+                        "reshard", "leaf-size-drift",
+                        f"leaf {name!r}: gather side moves "
+                        f"{g_sizes[name]} elements but scatter side "
+                        f"expects {s_sizes[name]} — byte conservation "
+                        f"across the transition is violated"))
     return out

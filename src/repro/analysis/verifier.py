@@ -1,4 +1,4 @@
-"""Analyzer entry points: run all five passes, report or raise.
+"""Analyzer entry points: run all six passes, report or raise.
 
 ``verify_schedule`` is the planning-time hook (GradSync / KVStore,
 ``verify=True`` by default): first finding raises ``ScheduleError``
@@ -21,6 +21,7 @@ from repro.analysis.passes import (
     check_carry,
     check_deadlock,
     check_donation,
+    check_reshard,
     check_spmd,
 )
 
@@ -89,6 +90,9 @@ def run_passes(
     expect_defer: bool | None = None,
     donated_buckets: Iterable[int] = (),
     rank_programs: Mapping[tuple[int, ...], Sequence[int]] | None = None,
+    old_mesh_shape: Mapping[str, int] | None = None,
+    new_mesh_shape: Mapping[str, int] | None = None,
+    leaf_divisibility: Mapping[str, tuple[int, int]] | None = None,
     passes: Sequence[str] = PASS_NAMES,
 ) -> AnalysisReport:
     """Run the requested passes over ``schedule`` and collect findings.
@@ -106,6 +110,12 @@ def run_passes(
       rank_programs    — per-rank issue-order override (mutation corpus;
                          real planning is SPMD so all ranks share the
                          schedule's tuple order).
+      old_mesh_shape / new_mesh_shape / leaf_divisibility
+                       — elastic-transition context for the reshard
+                         pass (DESIGN.md §13): the dissolving and
+                         forming mesh shapes, and per-leaf
+                         (dim_size, divisor) static divisibility facts
+                         from the new mesh's specs.
     """
     findings: list[Finding] = []
     for name in passes:
@@ -123,6 +133,11 @@ def run_passes(
                 default_reducer=default_reducer)
         elif name == "donation":
             findings += check_donation(schedule, donated_buckets)
+        elif name == "reshard":
+            findings += check_reshard(
+                schedule, old_mesh_shape=old_mesh_shape,
+                new_mesh_shape=new_mesh_shape,
+                leaf_divisibility=leaf_divisibility)
         else:
             raise ValueError(f"unknown analysis pass {name!r}")
     return AnalysisReport(tuple(findings), num_ops=len(schedule.ops))
@@ -137,6 +152,9 @@ def verify_schedule(
     expect_defer: bool | None = None,
     donated_buckets: Iterable[int] = (),
     rank_programs: Mapping[tuple[int, ...], Sequence[int]] | None = None,
+    old_mesh_shape: Mapping[str, int] | None = None,
+    new_mesh_shape: Mapping[str, int] | None = None,
+    leaf_divisibility: Mapping[str, tuple[int, int]] | None = None,
 ) -> AnalysisReport:
     """``run_passes`` that raises ``ScheduleError`` (with the witness in
     its message) if any pass found anything — the ``verify=`` hook."""
@@ -148,4 +166,7 @@ def verify_schedule(
         expect_defer=expect_defer,
         donated_buckets=donated_buckets,
         rank_programs=rank_programs,
+        old_mesh_shape=old_mesh_shape,
+        new_mesh_shape=new_mesh_shape,
+        leaf_divisibility=leaf_divisibility,
     ).raise_if_failed()

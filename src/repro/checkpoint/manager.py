@@ -19,7 +19,8 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Optional
+import time
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
@@ -100,35 +101,73 @@ def restore(root: str, step: int, like: Any) -> Any:
 
 
 class CheckpointManager:
-    """Periodic async checkpointing with retention (keep last k)."""
+    """Periodic async checkpointing with retention (keep last k).
+
+    ``retries``/``backoff_s`` wrap every save/restore attempt in
+    retry-with-exponential-backoff against transient I/O faults (flaky
+    network filesystems, the elastic supervisor's injected faults).
+    Atomicity is untouched: each attempt goes through the tmp-dir +
+    rename protocol, so an attempt that dies mid-write never becomes
+    ``latest()``.  ``fault_injector(op)`` — op in {"save", "restore"} —
+    is called at the START of each attempt; raising ``OSError`` from it
+    simulates the transient fault (tests, supervisor fault plans).
+    """
 
     def __init__(self, root: str, *, every: int = 100, keep: int = 3,
-                 blocking: bool = False):
+                 blocking: bool = False, retries: int = 0,
+                 backoff_s: float = 0.05,
+                 fault_injector: Callable[[str], None] | None = None):
         self.root = root
         self.every = every
         self.keep = keep
         self.blocking = blocking
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.fault_injector = fault_injector
         self._last_thread: Optional[threading.Thread] = None
         os.makedirs(root, exist_ok=True)
+
+    def _with_retries(self, op: str, fn: Callable[[], Any]) -> Any:
+        """Run ``fn`` with up to ``retries`` retried attempts; sleeps
+        ``backoff_s * 2**i`` between attempts."""
+        attempts = self.retries + 1
+        for i in range(attempts):
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector(op)
+                return fn()
+            except OSError:
+                if i == attempts - 1:
+                    raise
+                time.sleep(self.backoff_s * (2 ** i))
 
     def maybe_save(self, step: int, tree: Any) -> bool:
         if step % self.every:
             return False
         self.wait()
         if self.blocking:
-            save(self.root, step, tree, blocking=True)
+            self._with_retries(
+                "save", lambda: save(self.root, step, tree, blocking=True))
         else:
-            named, _ = flatten_with_names(tree)
-            host_tree = tree  # device_get happens inside save()
             self._last_thread = threading.Thread(
-                target=save, args=(self.root, step, host_tree),
-                kwargs={"blocking": True}, daemon=True)
+                target=self._with_retries, args=(
+                    "save",
+                    lambda: save(self.root, step, tree, blocking=True)),
+                daemon=True)
             # snapshot to host BEFORE returning control (cheap on CPU;
             # on TPU this is the D2H copy that must precede async write)
             jax.block_until_ready(jax.tree.leaves(tree))
             self._last_thread.start()
         self._gc()
         return True
+
+    def save_now(self, step: int, tree: Any) -> None:
+        """Blocking save with the retry policy — the supervisor's
+        post-transition anchor checkpoint."""
+        self.wait()
+        self._with_retries(
+            "save", lambda: save(self.root, step, tree, blocking=True))
+        self._gc()
 
     def wait(self):
         if self._last_thread is not None:
@@ -151,4 +190,15 @@ class CheckpointManager:
         s = self.latest() if step is None else step
         if s is None:
             raise FileNotFoundError(f"no checkpoint under {self.root}")
-        return s, restore(self.root, s, like)
+        return s, self._with_retries(
+            "restore", lambda: restore(self.root, s, like))
+
+    def manifest(self, step: int) -> list[str]:
+        """Leaf names recorded in a checkpoint's manifest — lets a
+        restorer validate the target structure (e.g. that a deferred
+        step's ``opt_state["pending"]`` carry is actually present)
+        BEFORE loading arrays."""
+        path = os.path.join(self.root, f"step_{step:08d}",
+                            "manifest.json")
+        with open(path) as f:
+            return [l["name"] for l in json.load(f)["leaves"]]

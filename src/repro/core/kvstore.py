@@ -31,6 +31,7 @@ from repro.core.schedule import (
     ALL_GATHER,
     ALLREDUCE,
     REDUCE_SCATTER,
+    REGROUP,
     CollectiveOp,
     CommSchedule,
     emit_gated,
@@ -291,6 +292,7 @@ class KVStore:
         self._last_op: dict[int, int] = {}   # channel -> last op_id
         self._rs_ops: dict[int, int] = {}    # key -> its RS op_id
         self._barrier_join: tuple[int, ...] = ()  # chain tails at barrier()
+        self._regroups = 0                   # regroup() count (bucket ids)
 
     @classmethod
     def create(cls, kind: str, **kw) -> "KVStore":
@@ -410,6 +412,44 @@ class KVStore:
         self._tokens = [joined for _ in self._tokens]
         self._barrier_join = tuple(sorted(self._last_op.values()))
         self._last_op = {}
+
+    def regroup(self, *, reduce_axes: tuple[str, ...] | None = None,
+                mesh_shape: dict[str, int] | None = None) -> jax.Array:
+        """MXNET-MPI group rebuild (DESIGN.md §13): dissolve the current
+        communicator and re-form it over ``reduce_axes``/``mesh_shape``.
+
+        Stronger than ``barrier()``: besides joining every outstanding
+        chain, the OLD group runs one scalar psum — a real collective
+        every member must reach, the analogue of ``MPI_Group_free`` +
+        ``MPI_Comm_create`` — recorded in the IR as a REGROUP op that
+        depends on every chain tail, so the reshard analysis pass can
+        prove no old-group op is still in flight when membership
+        changes.  Returns the barrier's scalar (== old group size).
+        """
+        tails = tuple(sorted(self._last_op.values())) or self._barrier_join
+        bucket = Bucket(
+            leaves=(LeafInfo(name=f"__regroup{self._regroups}", index=0,
+                             shape=(), dtype=jnp.float32, size=1),),
+            reduce_axes=self.reduce_axes, channel=0,
+            bucket_id=1_000_000 + self._regroups)
+        op = CollectiveOp(op_id=len(self._ops), bucket=bucket, chain=0,
+                          depends_on=tails, kind=REGROUP)
+        self._ops.append(op)
+        self._regroups += 1
+        joined = dep.update(dep.new_token(), *self._tokens)
+        done, tok = emit_gated(
+            jnp.float32(1.0), joined,
+            lambda v: jax.lax.psum(v, self.reduce_axes))
+        self._tokens = [tok for _ in self._tokens]
+        self._last_op = {}
+        self._barrier_join = (op.op_id,)
+        if reduce_axes is not None:
+            self.reduce_axes = tuple(reduce_axes)
+        if mesh_shape is not None:
+            self.mesh_shape = mesh_shape
+        if self.info.two_phase:
+            self._group = self._group_size()
+        return done
 
     def schedule(self, verify: bool = True) -> CommSchedule:
         """The IR of every collective this store has emitted so far.

@@ -48,8 +48,17 @@ ALL_GATHER = "all_gather"
 # sync, as schedulable nodes (DESIGN.md §9):
 UPDATE = "update"    # sharded optimizer update of one bucket's RS shard
 NORM = "norm"        # scalar psum of local squared grad norms (clipping)
+# elastic (repro.elastic, DESIGN.md §13) kinds — live mesh transitions as
+# schedulable nodes:
+RESHARD = "reshard"  # move one state bucket across a mesh transition:
+#                      gather side (old mesh, shard arrives via ``pending``)
+#                      materializes the global view; scatter side (new
+#                      mesh) re-slices it into the new dp shards
+REGROUP = "regroup"  # the MXNET-MPI group-rebuild barrier: a scalar psum
+#                      joining every old-mesh chain before new-mesh ops
 
-KINDS = (ALLREDUCE, REDUCE_SCATTER, ALL_GATHER, UPDATE, NORM)
+KINDS = (ALLREDUCE, REDUCE_SCATTER, ALL_GATHER, UPDATE, NORM,
+         RESHARD, REGROUP)
 # kinds that move a bucket's payload over the wire exactly once (RS/AG
 # pairs are counted at the RS; UPDATE is local math, NORM a scalar)
 _WIRE_KINDS = (ALLREDUCE, REDUCE_SCATTER)
@@ -169,6 +178,37 @@ class CommSchedule:
             for op in self.ops if op.phase == PRE)
         return (CommSchedule(post).validate(),
                 CommSchedule(pre).validate())
+
+    def split_regroup(self) -> tuple["CommSchedule", "CommSchedule"]:
+        """(old, new) sub-schedules of an elastic transition, split at the
+        first REGROUP op (which stays on the old side — the barrier runs
+        on the mesh being dissolved).
+
+        The two sides execute as SEPARATE programs on DIFFERENT meshes,
+        so new-side deps on old-side ops are dropped: those producers'
+        results cross the transition as carried host state (the encoded
+        global view), not as in-schedule edges — the same rule
+        ``split_phases`` applies at the step boundary.
+        """
+        cut = next((i for i, op in enumerate(self.ops)
+                    if op.kind == REGROUP), None)
+        if cut is None:
+            raise ValueError("split_regroup: schedule has no REGROUP op")
+        old = self.ops[:cut + 1]
+        old_ids = {op.op_id for op in old}
+        new_ids = {op.op_id for op in self.ops[cut + 1:]}
+        new = tuple(
+            dataclasses.replace(
+                op, depends_on=tuple(d for d in op.depends_on
+                                     if d in new_ids))
+            for op in self.ops[cut + 1:])
+        for op in old:
+            if not old_ids.issuperset(op.depends_on):
+                raise ValueError(
+                    f"old-side op {op.op_id} depends on post-regroup "
+                    f"op(s) {sorted(set(op.depends_on) - old_ids)}")
+        return (CommSchedule(old).validate(),
+                CommSchedule(new).validate())
 
     def stats(self) -> dict[str, Any]:
         lengths = self.chain_lengths()
@@ -537,6 +577,57 @@ class _OpEmitter:
                     full = full * s
                 self._stage_out(bucket, full, 1.0 / self.loss_scale,
                                 flat_out)
+
+        elif op.kind == RESHARD:
+            # Elastic state movement (DESIGN.md §13).  One op kind, two
+            # sides, disambiguated exactly like deferred gathers: a shard
+            # in ``pending`` marks the GATHER side (old mesh — rebuild the
+            # bucket's global view from this rank's dp shard); no pending
+            # entry marks the SCATTER side (new mesh — pack the global
+            # leaves and slice this rank's new dp shard).
+            group = self._group_of(bucket)
+            if self.pending is not None and bucket.bucket_id in self.pending:
+                shard, n = self.pending[bucket.bucket_id], bucket.size
+
+                def rag(b, _bk=bucket, _g=group):
+                    if _g == 1:
+                        return b
+                    if two_phase_impl == "ring":
+                        return coll_ops.ring_all_gather(
+                            b, _bk.reduce_axes, mesh_shape)
+                    return jax.lax.all_gather(
+                        b, _bk.reduce_axes, axis=0, tiled=True)
+
+                full, self.tokens[op.op_id] = emit_gated(shard, token, rag)
+                if full.shape[0] != n:
+                    full = full[:n]
+                # state values, never gradients: no dp mean, no loss scale
+                self._stage_out(bucket, full, 1.0, flat_out)
+            else:
+                buf = self._stage_in(bucket, flat_out)
+                n = buf.shape[0]
+                if (-n) % group:
+                    buf = jnp.pad(buf, (0, (-n) % group))
+                n_shard = buf.shape[0] // group
+                axes = bucket.reduce_axes
+                idx = jax.lax.axis_index(
+                    axes if len(axes) > 1 else axes[0])
+                shard = jax.lax.dynamic_slice_in_dim(
+                    buf, idx * n_shard, n_shard, 0)
+                self.tokens[op.op_id] = dep.update(token, shard)
+                self.shards[op.op_id] = (shard, n)
+                if self.aux is not None:
+                    self.aux.setdefault(
+                        "reshard_shards", {})[bucket.bucket_id] = shard
+
+        elif op.kind == REGROUP:
+            # the group-rebuild barrier: a scalar psum every member of the
+            # dissolving communicator joins — the MXNET-MPI regroup moment
+            done, self.tokens[op.op_id] = emit_gated(
+                jnp.float32(1.0), token,
+                lambda v, _ax=bucket.reduce_axes: jax.lax.psum(v, _ax))
+            if self.aux is not None:
+                self.aux["regroup_done"] = done
 
         else:
             raise ValueError(f"unknown op kind {op.kind!r}")

@@ -1,0 +1,40 @@
+"""repro.elastic — online elastic training (DESIGN.md §13).
+
+The MXNET-MPI companion paper (PAPERS.md, arxiv 1801.03855) extends the
+source paper's fixed communicator with MPI *groups* inside a
+parameter-server task model: workers regroup when membership changes.
+This package makes that first-class and *scheduled*:
+
+  reshard.py    — ``StateCodec`` (gather/scatter programs that move live
+                  ZeRO-1 opt-state through the shared ``_OpEmitter`` as
+                  RESHARD ops), ``plan_reshard`` (the transition IR:
+                  gathers → REGROUP barrier → scatters, verified by the
+                  reshard analysis pass and costed by ``repro.sim``),
+                  and ``reshard_state`` (the old-mesh → new-mesh state
+                  transfer).
+  supervisor.py — ``Supervisor``: wraps ``Trainer`` with a fault plan
+                  (rank loss, checkpoint-I/O faults, stragglers) and the
+                  policy ladder retry → restore → shrink → grow-back,
+                  driving full mesh cycles with bit-exact resume.
+"""
+from repro.elastic.reshard import (
+    ReshardPlan,
+    StateCodec,
+    plan_reshard,
+    reshard_state,
+)
+from repro.elastic.supervisor import (
+    ElasticCheckpointer,
+    FaultPlan,
+    Supervisor,
+)
+
+__all__ = [
+    "ElasticCheckpointer",
+    "FaultPlan",
+    "ReshardPlan",
+    "StateCodec",
+    "Supervisor",
+    "plan_reshard",
+    "reshard_state",
+]

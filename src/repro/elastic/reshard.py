@@ -1,0 +1,382 @@
+"""Live state reshard as scheduled collectives (DESIGN.md §13).
+
+The problem: checkpoints of ZeRO-1 optimizer state are built from the
+"global view" of the per-bucket stat shards — a dp-sharded flat array.
+Under tensor parallelism that view is a LIE: each tp rank's shard holds
+stats for *its* slice of the params, the values genuinely differ across
+tp ranks, and ``device_get`` silently collapses them to one rank's copy.
+A plain save/restore of zero1 state under tp > 1 is lossy.
+
+``StateCodec`` fixes this by moving the state through the IR: a *gather*
+program (RESHARD ops through the shared ``_OpEmitter``) all-gathers each
+bucket's dp shards into the TRUE global view — an f32 tree shaped like
+the params, sharded like the params, so per-tp-rank values survive — and
+a *scatter* program re-slices that view into the dp shards of any mesh.
+``encode ∘ decode`` on the same mesh is bit-exact: pack/unpack are exact
+inverses, and pad regions stay exactly zero forever (adamw:
+m' = b1·0 + (1-b1)·0 = 0, v likewise; sgd momentum 0; a pending update
+at a pad position is -lr·(0/(√0+eps) + wd·0) = 0 because the padded
+param is 0 too).
+
+``plan_reshard`` builds the mesh-transition IR — per-stream gathers on
+the old mesh, ONE REGROUP barrier every old-group member joins, then
+per-stream scatters on the new mesh — with GLOBAL leaf sizes (so byte
+conservation is checkable even when tp changes) and per-leaf
+divisibility facts for the new mesh.  The reshard analysis pass verifies
+it; ``repro.sim`` costs it like any other schedule.
+
+``reshard_state`` is the execution: encode on the old mesh, one host
+bounce, decode on the new mesh.  Deferred carries must be flushed
+(``TrainStep.finalize``) before a transition — the pending stream is
+deliberately NOT part of the transition IR, and the analysis pass
+rejects any PRE op that crosses the regroup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.buckets import Bucket, LeafInfo
+from repro.core.schedule import (
+    REGROUP,
+    RESHARD,
+    CollectiveOp,
+    CommSchedule,
+    execute,
+)
+from repro.utils.trees import flatten_with_names
+
+
+def _dp_spec(dp_axes: tuple[str, ...]) -> P:
+    if not dp_axes:
+        return P()
+    return P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+
+
+def _require_zero1(ts) -> Any:
+    gs = ts.gradsync
+    if gs is None or gs.dp_plan is None:
+        raise ValueError(
+            "elastic reshard needs a scheduled ZeRO-1 TrainStep "
+            "(gradsync with a dp_plan); non-zero1 optimizer state is "
+            "param-shaped and moves through the plain checkpoint path")
+    return gs
+
+
+class StateCodec:
+    """Gather/scatter programs between zero1 opt-state shards and the
+    TRUE (tp-honest) global view, for one ``TrainStep``.
+
+    One shared gather program and one shared scatter program serve every
+    stream ("inner/m", "inner/v", "pending", …): the programs depend
+    only on the dp bucket plan, not on which stream's values flow
+    through them.
+    """
+
+    def __init__(self, ts):
+        gs = _require_zero1(ts)
+        self.ts = ts
+        self.gs = gs
+        self.dp_plan = gs.dp_plan
+        self.keys = tuple((b.bucket_id, str(i))
+                          for i, b in enumerate(self.dp_plan.buckets))
+        for b in self.dp_plan.buckets:
+            for leaf in b.leaves:
+                if np.dtype(leaf.dtype) != np.dtype(np.float32):
+                    raise ValueError(
+                        f"StateCodec requires f32 params (stat values "
+                        f"round-trip through the param-shaped view); "
+                        f"leaf {leaf.name!r} is {np.dtype(leaf.dtype)}")
+        dp_axes = self.dp_plan.buckets[0].reduce_axes
+        self.dp_size = 1
+        for a in dp_axes:
+            self.dp_size *= int(gs.mesh_shape.get(a, 1))
+        self._shard_spec = _dp_spec(dp_axes)
+        # stat stream names from the inner state structure (scalar-free
+        # for every shipped optimizer: adamw {m,v}, sgd {mom})
+        inner0 = ts.opt_state_like["inner"]["0"]
+        named, _ = flatten_with_names(inner0)
+        self.stat_names = tuple(n for n, _ in named)
+        for n, leaf in named:
+            if len(leaf.shape) != 1:
+                raise ValueError(
+                    f"inner stat {n!r} has shape {leaf.shape}; the codec "
+                    f"only understands flat (n_shard,) zero1 stat leaves")
+        self.has_pending = "pending" in ts.opt_state_like
+
+        # transfer schedules: one RESHARD op per dp bucket.  The SAME
+        # schedule serves both directions — ``pending`` presence flips
+        # the emitter to the gather side.
+        ops = tuple(
+            CollectiveOp(op_id=i, bucket=b, chain=i, kind=RESHARD)
+            for i, b in enumerate(self.dp_plan.buckets))
+        self._sched = CommSchedule(ops).validate()
+        self._exec_kw = dict(
+            reducer=lambda b, _bk: b,        # no allreduce ops planned
+            mesh_shape=gs.mesh_shape,
+            use_fused_staging=gs.cfg.use_fused_staging,
+            two_phase_impl=gs._two_phase_impl())
+
+        def gather_fn(params, shards):
+            # shards: {bucket_id: local (n_shard,) f32} — all-gathered
+            # over the dp axes and unpacked into a zeros param tree
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            return execute(self._sched, zeros, self.dp_plan,
+                           pending=dict(shards), **self._exec_kw)
+
+        def scatter_fn(tree):
+            aux: dict = {}
+            execute(self._sched, tree, self.dp_plan, aux=aux,
+                    **self._exec_kw)
+            return {bid: aux["reshard_shards"][bid]
+                    for bid, _ in self.keys}
+
+        pspecs = ts.param_specs
+        shard_specs = {bid: self._shard_spec for bid, _ in self.keys}
+        self._gather = jax.jit(jax.shard_map(
+            gather_fn, mesh=ts.mesh, in_specs=(pspecs, shard_specs),
+            out_specs=pspecs, check_vma=False))
+        self._scatter = jax.jit(jax.shard_map(
+            scatter_fn, mesh=ts.mesh, in_specs=(pspecs,),
+            out_specs=shard_specs, check_vma=False))
+
+    # ------------------------------------------------------------ encode
+
+    def _stream_shards(self, opt_state, stream: str) -> dict[int, Any]:
+        if stream == "pending":
+            return {bid: opt_state["pending"][k] for bid, k in self.keys}
+        stat = stream.split("/", 1)[1]
+        return {bid: opt_state["inner"][k][stat] for bid, k in self.keys}
+
+    def encode(self, params, opt_state, *,
+               include_pending: bool = True) -> dict[str, Any]:
+        """Live (params, opt_state) → mesh-portable global trees.
+
+        Returns ``{"params": ..., "stats": {stream: tree}}`` where every
+        stats tree is param-shaped f32 with the params' shardings — the
+        honest global view that survives any tp layout.
+        """
+        streams = [f"inner/{s}" for s in self.stat_names]
+        if include_pending and self.has_pending:
+            streams.append("pending")
+        stats = {}
+        for stream in streams:
+            shards = self._stream_shards(opt_state, stream)
+            for bid, arr in shards.items():
+                n = next(b.size for b in self.dp_plan.buckets
+                         if b.bucket_id == bid)
+                want = (n + (-n) % self.dp_size)
+                if arr.shape != (want,):
+                    raise ValueError(
+                        f"stream {stream!r} bucket {bid}: global shard "
+                        f"array is {arr.shape}, expected ({want},) — "
+                        f"opt_state does not match this codec's dp plan")
+            stats[stream] = self._gather(params, shards)
+        return {"params": params, "stats": stats}
+
+    def encoded_like(self) -> dict[str, Any]:
+        """ShapeDtypeStructs of ``encode``'s output (checkpoint restore
+        template): params keep their dtype, stats are f32 param-shaped,
+        pending included iff the step carries one."""
+        params_like = self._params_like()
+        f32_like = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(tuple(l.shape), jnp.float32),
+            params_like)
+        streams = [f"inner/{s}" for s in self.stat_names]
+        if self.has_pending:
+            streams.append("pending")
+        return {"params": params_like,
+                "stats": {s: f32_like for s in streams}}
+
+    def _params_like(self):
+        # global param structs: local dp_plan leaf shapes scaled back up
+        # by the sharded mesh axes of each spec dim
+        named_specs, treedef = flatten_with_names(self.ts.param_specs)
+        by_name = {}
+        for b in self.dp_plan.buckets:
+            for leaf in b.leaves:
+                by_name[leaf.name] = leaf
+        if len(by_name) != len(named_specs):
+            raise ValueError(
+                "dp plan does not cover every param leaf; the codec "
+                "cannot reconstruct the global param structs")
+        structs = []
+        for name, spec in named_specs:
+            leaf = by_name[name]
+            shape = list(leaf.shape)
+            for dim, entry in enumerate(spec):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, (tuple, list)) \
+                    else (entry,)
+                for a in axes:
+                    shape[dim] *= int(self.gs.mesh_shape.get(a, 1))
+            structs.append(jax.ShapeDtypeStruct(tuple(shape), leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, structs)
+
+    # ------------------------------------------------------------ decode
+
+    def decode(self, encoded: Mapping[str, Any]) -> tuple[Any, Any]:
+        """Mesh-portable trees → live (params, opt_state) on THIS codec's
+        mesh.  Streams absent from ``encoded["stats"]`` (the pending
+        carry after a flush) stay zero-initialized — gathering zeros is
+        the identity update, so the first step after a transition starts
+        exactly like a fresh deferred run."""
+        sh_params = self.ts.shardings(self.ts.param_specs)
+        params = jax.device_put(encoded["params"], sh_params)
+        f32_sh = jax.tree.map(
+            lambda s: NamedSharding(self.ts.mesh, s), self.ts.param_specs)
+        opt_state = self.ts.init_opt()
+        for stream, tree in encoded["stats"].items():
+            if stream != "pending" and stream.split("/", 1)[1] \
+                    not in self.stat_names:
+                raise ValueError(
+                    f"encoded stream {stream!r} has no slot in this "
+                    f"step's opt_state (stats: {self.stat_names})")
+            if stream == "pending" and not self.has_pending:
+                continue        # scheduled step: the carry has no home
+            placed = jax.device_put(tree, f32_sh)
+            shards = self._scatter(placed)
+            if stream == "pending":
+                for bid, k in self.keys:
+                    opt_state["pending"][k] = shards[bid]
+            else:
+                stat = stream.split("/", 1)[1]
+                for bid, k in self.keys:
+                    opt_state["inner"][k][stat] = shards[bid]
+        return params, opt_state
+
+
+# ------------------------------------------------------ transition IR
+
+@dataclasses.dataclass(frozen=True)
+class ReshardPlan:
+    """One planned mesh transition: the verified IR + its static facts."""
+
+    transition: CommSchedule
+    old_mesh_shape: dict[str, int]
+    new_mesh_shape: dict[str, int]
+    leaf_divisibility: dict[str, tuple[int, int]]
+    reshard_bytes: int              # gather-side state moved (f32 bytes)
+    streams: tuple[str, ...]
+
+
+def plan_reshard(old_ts, new_ts, params) -> ReshardPlan:
+    """Plan (and statically verify) the old-mesh → new-mesh transition.
+
+    The IR mirrors what ``reshard_state`` executes: per-stream gather
+    RESHARDs on the old mesh, ONE REGROUP barrier over every old mesh
+    axis (the MXNET-MPI group-rebuild moment) depending on all of them,
+    then per-stream scatter RESHARDs on the new mesh anchored on the
+    barrier.  Leaves carry GLOBAL sizes and per-stream names
+    ("param:<leaf>", "inner/m:<leaf>", …) so byte conservation is
+    checkable even when tp changes the local shapes.  The pending carry
+    is deliberately absent — it must be flushed before the transition.
+
+    ``params`` is the global param tree (arrays or ShapeDtypeStructs);
+    only shapes are read.
+    """
+    old_gs = _require_zero1(old_ts)
+    new_gs = _require_zero1(new_ts)
+    named, _ = flatten_with_names(params)
+    global_size = {n: (int(np.prod(l.shape)) if l.shape else 1)
+                   for n, l in named}
+
+    inner0 = (old_ts.opt_state_like["inner"]["0"])
+    stat_names, _ = flatten_with_names(inner0)
+    streams = ("param",) + tuple(f"inner/{n}" for n, _ in stat_names)
+
+    def rename(bucket: Bucket, stream: str, bid: int,
+               axes: tuple[str, ...]) -> Bucket:
+        leaves = tuple(
+            LeafInfo(name=f"{stream}:{l.name}", index=i,
+                     shape=(global_size[l.name],), dtype=jnp.float32,
+                     size=global_size[l.name])
+            for i, l in enumerate(bucket.leaves))
+        return Bucket(leaves=leaves, reduce_axes=axes, channel=0,
+                      bucket_id=bid, comm_dtype=jnp.float32)
+
+    ops: list[CollectiveOp] = []
+    for si, stream in enumerate(streams):
+        for b in old_gs.dp_plan.buckets:
+            oid = len(ops)
+            ops.append(CollectiveOp(
+                op_id=oid, bucket=rename(b, stream, oid, b.reduce_axes),
+                chain=si, kind=RESHARD))
+    rg_id = len(ops)
+    regroup_bucket = Bucket(
+        leaves=(LeafInfo(name="__regroup", index=0, shape=(),
+                         dtype=jnp.float32, size=1),),
+        reduce_axes=tuple(old_gs.mesh_shape), channel=0,
+        bucket_id=rg_id, comm_dtype=jnp.float32)
+    ops.append(CollectiveOp(
+        op_id=rg_id, bucket=regroup_bucket, chain=0,
+        depends_on=tuple(range(rg_id)), kind=REGROUP))
+    for si, stream in enumerate(streams):
+        for b in new_gs.dp_plan.buckets:
+            oid = len(ops)
+            ops.append(CollectiveOp(
+                op_id=oid, bucket=rename(b, stream, oid, b.reduce_axes),
+                chain=si, depends_on=(rg_id,), kind=RESHARD))
+    transition = CommSchedule(tuple(ops))
+
+    # static divisibility of every param leaf on the NEW mesh — the
+    # scatter side must be able to tile each sharded dim
+    new_specs, _ = flatten_with_names(new_gs.param_specs)
+    divis: dict[str, tuple[int, int]] = {}
+    for (name, leaf), (_, spec) in zip(named, new_specs):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+            div = 1
+            for a in axes:
+                div *= int(new_gs.mesh_shape.get(a, 1))
+            divis[f"{name}@dim{dim}"] = (int(leaf.shape[dim]), div)
+
+    reshard_bytes = sum(
+        op.bucket.size * 4 for op in ops[:rg_id])
+
+    from repro.analysis import verify_schedule
+    verify_schedule(
+        transition, mesh_shape=None,
+        old_mesh_shape=dict(old_gs.mesh_shape),
+        new_mesh_shape=dict(new_gs.mesh_shape),
+        leaf_divisibility=divis)
+
+    return ReshardPlan(
+        transition=transition,
+        old_mesh_shape=dict(old_gs.mesh_shape),
+        new_mesh_shape=dict(new_gs.mesh_shape),
+        leaf_divisibility=divis,
+        reshard_bytes=reshard_bytes,
+        streams=streams)
+
+
+# ------------------------------------------------------ execution
+
+def reshard_state(old_ts, new_ts, params, opt_state, *,
+                  old_codec: StateCodec | None = None,
+                  new_codec: StateCodec | None = None,
+                  include_pending: bool = False) -> tuple[Any, Any]:
+    """Move live (params, opt_state) from ``old_ts``'s mesh onto
+    ``new_ts``'s: encode on the old mesh (RESHARD gathers), one host
+    bounce, decode on the new (RESHARD scatters).
+
+    A deferred step's pending carry must be flushed
+    (``TrainStep.finalize``) BEFORE calling this with the default
+    ``include_pending=False``; the decoded carry starts at zeros, which
+    gathers to the identity update.
+    """
+    old_codec = old_codec or StateCodec(old_ts)
+    new_codec = new_codec or StateCodec(new_ts)
+    encoded = old_codec.encode(params, opt_state,
+                               include_pending=include_pending)
+    host = jax.device_get(encoded)
+    return new_codec.decode(host)

@@ -1,0 +1,369 @@
+"""Fault-injecting supervisor: the elastic policy ladder above the
+Trainer (DESIGN.md §13).
+
+The Trainer owns rungs 1–2 (retry the step in place, restore-and-replay
+from checkpoint).  Rungs 3–4 — shrink to a smaller mesh when members are
+lost or persistently slow, grow back when capacity returns — need a NEW
+mesh, which a loop bound to one mesh cannot build.  ``Supervisor`` runs
+the Trainer in segments over a mesh *ladder*, catching ``RankLost`` /
+``RemeshRequest`` and executing the transition:
+
+    finalize deferred carry → plan_reshard (verified IR, byte count)
+    → reshard_state (old-mesh gathers, host bounce, new-mesh scatters)
+    → blocking anchor checkpoint with the NEW mesh's codec
+
+Every transition the faulty run *realizes* is recorded as a script
+``(resume_step, mesh_key)``; replaying that script with no faults gives
+the clean twin whose final state must be bit-exact with the faulty run —
+the parity the elastic smoke benchmark asserts.
+
+``ElasticCheckpointer`` is the checkpoint adapter: it speaks the
+Trainer's ``{"params", "opt"}`` protocol but persists the ``StateCodec``
+encoding — the tp-honest, param-shaped global view that any mesh in the
+ladder can decode, so a checkpoint written on the 8-device mesh restores
+on the 4-device mesh and vice versa.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.elastic.reshard import StateCodec, plan_reshard, reshard_state
+from repro.runtime.train_loop import (
+    RankLost,
+    RemeshRequest,
+    Trainer,
+    TransientStepError,
+)
+
+
+class ElasticCheckpointer:
+    """Mesh-portable checkpointing: Trainer protocol, codec encoding.
+
+    ``maybe_save``/``save_now`` encode the live ``{"params", "opt"}``
+    state into the codec's global view before handing it to the
+    ``CheckpointManager``; ``restore`` loads that view and decodes it
+    onto whatever mesh the CURRENT codec targets.  ``attach`` swaps the
+    codec at a mesh transition — old checkpoints stay restorable because
+    the persisted trees are global (param-shaped), not mesh-local.
+    """
+
+    def __init__(self, manager: CheckpointManager, codec: StateCodec):
+        self.manager = manager
+        self.codec = codec
+
+    def attach(self, codec: StateCodec) -> None:
+        self.codec = codec
+
+    def _encode(self, tree: Mapping[str, Any]) -> dict[str, Any]:
+        return self.codec.encode(tree["params"], tree["opt"])
+
+    def maybe_save(self, step: int, tree: Mapping[str, Any]) -> bool:
+        if step % self.manager.every:
+            return False
+        return self.manager.maybe_save(step, self._encode(tree))
+
+    def save_now(self, step: int, tree: Mapping[str, Any]) -> None:
+        self.manager.save_now(step, self._encode(tree))
+
+    def restore(self, like: Any,
+                step: Optional[int] = None) -> tuple[int, Any]:
+        # ``like`` (the live mesh-local trees) is ignored: the on-disk
+        # structure is the codec's encoded view
+        s, encoded = self.manager.restore(self.codec.encoded_like(), step)
+        params, opt_state = self.codec.decode(encoded)
+        return s, {"params": params, "opt": opt_state}
+
+    def latest(self) -> Optional[int]:
+        return self.manager.latest()
+
+    def wait(self) -> None:
+        self.manager.wait()
+
+    def manifest(self, step: int) -> list[str]:
+        return self.manager.manifest(step)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """What the supervisor injects, and how the ladder responds.
+
+    Each step-keyed fault fires ONCE (the replayed step after recovery
+    runs clean, as a recovered fleet would).  ``ckpt_io_faults`` is a
+    budget of transient ``OSError``s raised at the start of checkpoint
+    save/restore attempts — the manager's retry-with-backoff must absorb
+    them without ever corrupting the atomic rename protocol.
+    """
+
+    rank_loss: frozenset[int] = frozenset()     # RankLost at these steps
+    transient: frozenset[int] = frozenset()     # TransientStepError once
+    step_retries: int = 1                       # rung-1 budget per step
+    ckpt_io_faults: int = 0                     # OSError budget (total)
+    ckpt_retries: int = 3                       # manager retry budget
+    straggler: frozenset[int] = frozenset()     # sleep at these steps
+    straggler_s: float = 0.0
+    straggler_shrink: bool = False              # opt-in rung 3 for stragglers
+
+
+@dataclasses.dataclass
+class Transition:
+    """One realized mesh transition (also the clean-replay script row)."""
+
+    resume_step: int
+    from_key: str
+    to_key: str
+    reason: str
+    reshard_bytes: int
+    latency_s: float
+
+
+class Supervisor:
+    """Run a Trainer across a mesh ladder, injecting and surviving
+    faults.
+
+    ``build(key)`` returns ``(train_step, pipeline, init_params)`` for a
+    mesh key; builds are memoized (jit cost is paid once per mesh).
+    ``ladder`` orders the keys largest-first — ``ladder[0]`` is the full
+    mesh, a shrink moves one rung down, a grow-back returns one rung up
+    after ``grow_back_after`` steps on the smaller mesh.  The batch
+    schedule must be identical across rungs (same dp extent) or the
+    replayed trajectory would diverge — that invariant is the builder's
+    contract, not checked here.
+
+    ``script`` replays a recorded transition schedule with no faults:
+    the clean twin of a faulty run.  Bit-exact parity between the two is
+    the supervisor's correctness criterion (asserted by
+    ``benchmarks/elastic_smoke.py`` and ``tests/_elworker.py``).
+    """
+
+    def __init__(self, build: Callable[[str], tuple[Any, Any, Any]],
+                 ladder: tuple[str, ...], ckpt_root: str,
+                 *, plan: FaultPlan | None = None,
+                 script: tuple[tuple[int, str], ...] | None = None,
+                 every: int = 4, grow_back_after: int = 4,
+                 straggler_factor: float = 3.0,
+                 straggler_patience: int = 3,
+                 printer: Callable[[str], None] = print,
+                 metrics=None, events_path: str | None = None):
+        from repro.obs import EventLog, MetricsRegistry
+
+        if len(ladder) < 1:
+            raise ValueError("mesh ladder must name at least one mesh")
+        self.build = build
+        self.ladder = tuple(ladder)
+        self.ckpt_root = ckpt_root
+        self.plan = plan or FaultPlan()
+        self.script = tuple(script) if script is not None else None
+        self.every = every
+        self.grow_back_after = grow_back_after
+        self.straggler_factor = straggler_factor
+        self.straggler_patience = straggler_patience
+        self.printer = printer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.event_log = EventLog(events_path)
+        self.events: list[dict] = []
+        self.transitions: list[Transition] = []
+        self._built: dict[str, tuple[Any, Any, Any]] = {}
+        self._codecs: dict[str, StateCodec] = {}
+        self._fired: set[tuple[str, int]] = set()
+        self._ckpt_io_left = 0 if self.script is not None \
+            else self.plan.ckpt_io_faults
+
+    # ------------------------------------------------------------ events
+
+    def _event(self, kind: str, **fields) -> None:
+        self.events.append({"kind": kind, **fields})
+        self.event_log.emit(kind, **fields)
+
+    # ------------------------------------------------------- mesh builds
+
+    def _get(self, key: str) -> tuple[Any, Any, Any]:
+        if key not in self._built:
+            self._built[key] = self.build(key)
+        return self._built[key]
+
+    def _codec(self, key: str) -> StateCodec:
+        if key not in self._codecs:
+            ts, _, _ = self._get(key)
+            self._codecs[key] = StateCodec(ts)
+        return self._codecs[key]
+
+    # --------------------------------------------------- fault injectors
+
+    def _step_injector(self) -> Callable[[int], None] | None:
+        if self.script is not None:
+            return None                       # clean twin: no faults
+        plan = self.plan
+
+        def inject(step: int) -> None:
+            if step in plan.transient and ("t", step) not in self._fired:
+                self._fired.add(("t", step))
+                raise TransientStepError(f"injected transient @ {step}")
+            if step in plan.rank_loss and ("r", step) not in self._fired:
+                self._fired.add(("r", step))
+                raise RankLost(f"injected rank loss @ {step}")
+            if step in plan.straggler and ("s", step) not in self._fired:
+                self._fired.add(("s", step))
+                time.sleep(plan.straggler_s)
+
+        return inject
+
+    def _ckpt_injector(self, op: str) -> None:
+        if self._ckpt_io_left > 0:
+            self._ckpt_io_left -= 1
+            raise OSError(f"injected checkpoint I/O fault ({op})")
+
+    def _remesh_hook(self, step: int) -> str | None:
+        if self.script is not None:
+            return None                       # clean twin: log only
+        return "shrink" if self.plan.straggler_shrink else None
+
+    # --------------------------------------------------------- transition
+
+    def _transition(self, resume_step: int, from_key: str, to_key: str,
+                    params, opt_state, ckpt: ElasticCheckpointer,
+                    reason: str):
+        """Move live state ``from_key`` → ``to_key`` and anchor it."""
+        t0 = time.perf_counter()
+        old_ts, _, _ = self._get(from_key)
+        new_ts, _, _ = self._get(to_key)
+
+        if old_ts.finalize is not None:
+            # flush the deferred carry: the pending update shards land
+            # in the params NOW; the transition IR (and the reshard
+            # analysis pass) forbid a PRE op crossing the regroup
+            params = old_ts.finalize(params, opt_state)
+
+        rplan = plan_reshard(old_ts, new_ts, self._codec(from_key)
+                             ._params_like())
+        params, opt_state = reshard_state(
+            old_ts, new_ts, params, opt_state,
+            old_codec=self._codec(from_key),
+            new_codec=self._codec(to_key),
+            include_pending=False)   # flushed above → decode zeros it
+
+        ckpt.attach(self._codec(to_key))
+        ckpt.save_now(resume_step, {"params": params, "opt": opt_state})
+
+        dt = time.perf_counter() - t0
+        tr = Transition(resume_step=resume_step, from_key=from_key,
+                        to_key=to_key, reason=reason,
+                        reshard_bytes=rplan.reshard_bytes, latency_s=dt)
+        self.transitions.append(tr)
+        self.metrics.histogram("recovery_latency_s").observe(dt)
+        self.metrics.counter("reshard_bytes_total").inc(
+            rplan.reshard_bytes)
+        self._event("transition", step=resume_step, from_mesh=from_key,
+                    to_mesh=to_key, reason=reason,
+                    reshard_bytes=rplan.reshard_bytes, latency_s=dt)
+        self.printer(
+            f"[supervisor] {reason}: {from_key} → {to_key} @ step "
+            f"{resume_step} ({rplan.reshard_bytes} B resharded, "
+            f"{dt*1e3:.0f} ms)")
+        return params, opt_state
+
+    # --------------------------------------------------------------- run
+
+    def run(self, num_steps: int) -> tuple[Any, Any, dict]:
+        """Train ``num_steps`` steps across the ladder; returns the
+        final ``(params, opt_state, report)``.  The report carries the
+        realized transition script — feed it back as ``script=`` to
+        replay the same mesh trajectory with no faults."""
+        rung = 0
+        key = self.ladder[rung]
+        ts, pipeline, params = self._get(key)
+        opt_state = ts.init_opt()
+        ckpt = ElasticCheckpointer(
+            CheckpointManager(
+                self.ckpt_root, every=self.every, keep=0, blocking=True,
+                retries=self.plan.ckpt_retries,
+                fault_injector=self._ckpt_injector),
+            self._codec(key))
+
+        scripted = list(self.script) if self.script is not None else None
+        grow_at: int | None = None
+        segments = 0
+        while True:
+            segments += 1
+            if segments > 64:
+                raise RuntimeError(
+                    "supervisor exceeded 64 trainer segments — "
+                    "fault plan or script is not converging")
+            # next planned boundary: a scripted transition or grow-back
+            if scripted:
+                seg_end = min(num_steps, scripted[0][0])
+            elif grow_at is not None:
+                seg_end = min(num_steps, grow_at)
+            else:
+                seg_end = num_steps
+
+            ts, pipeline, _ = self._get(key)
+            trainer = Trainer(
+                ts, pipeline, ckpt,
+                step_retries=self.plan.step_retries,
+                fault_injector=self._step_injector(),
+                remesh_hook=self._remesh_hook,
+                straggler_factor=self.straggler_factor,
+                straggler_patience=self.straggler_patience,
+                printer=self.printer, metrics=self.metrics,
+                log_every=10_000)
+            try:
+                params, opt_state, _ = trainer.run(
+                    params, opt_state, seg_end)
+            except (RemeshRequest, RankLost) as e:
+                self.events.extend(trainer.events)
+                if rung + 1 >= len(self.ladder):
+                    raise RuntimeError(
+                        "mesh ladder exhausted: no smaller mesh to "
+                        "shrink to") from e
+                reason = ("straggler_shrink"
+                          if isinstance(e, RemeshRequest) else "rank_loss")
+                down = self.ladder[rung + 1]
+                params, opt_state = self._transition(
+                    e.step, key, down, e.params, e.opt_state, ckpt,
+                    reason)
+                rung += 1
+                key = down
+                grow_at = e.step + self.grow_back_after
+                continue
+            self.events.extend(trainer.events)
+
+            if seg_end >= num_steps:
+                break
+            if scripted and scripted[0][0] == seg_end:
+                _, to_key = scripted.pop(0)
+                to_rung = self.ladder.index(to_key)
+                params, opt_state = self._transition(
+                    seg_end, key, to_key, params, opt_state, ckpt,
+                    "scripted")
+                rung, key = to_rung, to_key
+                # the script IS the mesh trajectory — never derive a
+                # grow-back the faulty run didn't realize
+                grow_at = None
+                continue
+            if grow_at is not None and seg_end == grow_at:
+                up = self.ladder[rung - 1]
+                params, opt_state = self._transition(
+                    seg_end, key, up, params, opt_state, ckpt,
+                    "grow_back")
+                rung -= 1
+                key = up
+                grow_at = None
+                continue
+
+        ckpt.wait()
+        report = {
+            "events": self.events,
+            "transitions": [dataclasses.asdict(t)
+                            for t in self.transitions],
+            "script": tuple((t.resume_step, t.to_key)
+                            for t in self.transitions),
+            "final_mesh": key,
+            "metrics": self.metrics.snapshot(),
+        }
+        return params, opt_state, report

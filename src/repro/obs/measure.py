@@ -33,6 +33,8 @@ from repro.core.schedule import (
     ALLREDUCE,
     NORM,
     REDUCE_SCATTER,
+    REGROUP,
+    RESHARD,
     UPDATE,
     CommSchedule,
     _OpEmitter,
@@ -119,7 +121,7 @@ def measured_timeline(
         dshard_ids = sorted(d for d in op.depends_on if d in shard_vals)
         dclip_ids = sorted(d for d in op.depends_on if d in clip_vals)
         pend_arr = None
-        if op.kind == ALL_GATHER and pending is not None:
+        if op.kind in (ALL_GATHER, RESHARD) and pending is not None:
             has_src = any(
                 d in shard_vals
                 and by_id[d].bucket.bucket_id == op.bucket.bucket_id
@@ -152,15 +154,23 @@ def measured_timeline(
             out_tree = jax.tree_util.tree_unflatten(plan.treedef, flat)
             if _op.kind in (REDUCE_SCATTER, UPDATE):
                 return em.shards[_op.op_id][0]
+            if _op.kind == RESHARD and not dpend:
+                return em.shards[_op.op_id][0]   # scatter side: new shard
+            if _op.kind == REGROUP:
+                return em.aux["regroup_done"]
             if _op.kind == NORM:
                 norm = em.aux["grad_norm"]
                 if _op.op_id in em.clip_scales:
                     return norm, em.clip_scales[_op.op_id]
                 return norm
-            return out_tree                 # ALLREDUCE / ALL_GATHER
+            return out_tree        # ALLREDUCE / ALL_GATHER / RESHARD gather
 
         if op.kind in (REDUCE_SCATTER, UPDATE):
             out_specs: Any = _shard_pspec(op.bucket.reduce_axes)
+        elif op.kind == RESHARD and pend_arr is None:
+            out_specs = _shard_pspec(op.bucket.reduce_axes)
+        elif op.kind == REGROUP:
+            out_specs = P()
         elif op.kind == NORM:
             out_specs = (P(), P()) if clip_norm > 0 else P()
         else:
@@ -183,6 +193,11 @@ def measured_timeline(
         if op.kind == REDUCE_SCATTER:
             shard_vals[op.op_id] = out
             shard_n[op.op_id] = op.bucket.size
+        elif op.kind == RESHARD and pend_arr is None:
+            shard_vals[op.op_id] = out           # new-mesh dp shard
+            shard_n[op.op_id] = op.bucket.size
+        elif op.kind == REGROUP:
+            pass                                 # barrier scalar: no state
         elif op.kind == UPDATE:
             srcs = [d for d in op.depends_on if d in shard_vals
                     and by_id[d].bucket.bucket_id == op.bucket.bucket_id]

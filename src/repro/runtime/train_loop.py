@@ -43,6 +43,39 @@ class SimulatedFailure(RuntimeError):
     """Injected node failure (testing the recovery path)."""
 
 
+class TransientStepError(RuntimeError):
+    """Injected transient step fault — retryable IN PLACE (rung 1 of the
+    elastic policy ladder): the step never committed state, so the same
+    step simply runs again up to ``step_retries`` times before
+    escalating to checkpoint recovery."""
+
+
+class RankLost(SimulatedFailure):
+    """Injected loss of mesh member(s): THIS mesh cannot continue.  The
+    Trainer attaches the last committed state (``.step``/``.params``/
+    ``.opt_state``) and re-raises — recovery means a NEW mesh, which is
+    the supervisor's job (``repro.elastic.supervisor``), not the
+    loop's."""
+
+    def __init__(self, message: str = "rank lost"):
+        super().__init__(message)
+        self.step: int = 0
+        self.params: Any = None
+        self.opt_state: Any = None
+
+
+class RemeshRequest(SimulatedFailure):
+    """Straggler-driven shrink request (opt-in via ``remesh_hook``):
+    like ``RankLost``, carries the post-step state for the supervisor's
+    shrink path — but the state is healthy; the mesh is just slow."""
+
+    def __init__(self, message: str = "remesh requested"):
+        super().__init__(message)
+        self.step: int = 0
+        self.params: Any = None
+        self.opt_state: Any = None
+
+
 def _batch_specs(batch_like: Any, mesh: Mesh) -> Any:
     bspec = batch_spec(mesh)
     return {
@@ -381,6 +414,9 @@ class Trainer:
                  *, fail_at: frozenset[int] = frozenset(),
                  straggler_factor: float = 3.0,
                  straggler_patience: int = 3,
+                 step_retries: int = 0,
+                 fault_injector: Callable[[int], None] | None = None,
+                 remesh_hook: Callable[[int], str | None] | None = None,
                  log_every: int = 10,
                  printer: Callable[[str], None] = print,
                  metrics: "MetricsRegistry | None" = None,
@@ -394,6 +430,16 @@ class Trainer:
         self.fail_at = set(fail_at)
         self.straggler_factor = straggler_factor
         self.straggler_patience = straggler_patience
+        # elastic policy ladder (DESIGN.md §13): transient faults retry
+        # the same step in place before escalating to checkpoint
+        # recovery; ``fault_injector(step)`` runs at the top of every
+        # step attempt (raise TransientStepError / RankLost / sleep to
+        # fake a straggler); ``remesh_hook(step)`` decides the response
+        # to persistent stragglers ("shrink" → raise RemeshRequest for
+        # the supervisor; anything else → log only)
+        self.step_retries = step_retries
+        self.fault_injector = fault_injector
+        self.remesh_hook = remesh_hook
         self.log_every = log_every
         self.printer = printer
         self.step_times: list[float] = []
@@ -409,6 +455,54 @@ class Trainer:
         """Record a lifecycle event in-memory AND on the JSONL stream."""
         self.events.append({"kind": kind, **fields})
         self.event_log.emit(kind, **fields)
+
+    def _place_restored(self, tree: Any, specs: Any) -> Any:
+        """Commit restored leaves to the step's shardings.  Host (numpy)
+        leaves are device_put; leaves that are already device arrays
+        (an ElasticCheckpointer decode) pass through unchanged."""
+        sh = self.step_fn.shardings(specs)
+        return jax.tree.map(
+            lambda v, s: jax.device_put(v, s)
+            if isinstance(v, np.ndarray) else v, tree, sh)
+
+    def _guard_pending(self, step: int) -> None:
+        """Deferred-plan restore guard: if this step carries an
+        ``opt_state["pending"]`` tree, the checkpoint being restored must
+        actually contain one — otherwise the resume would silently read
+        a zero carry where the saved trajectory had live update shards,
+        and the replayed run diverges from the original."""
+        like = getattr(self.step_fn, "opt_state_like", None)
+        if not isinstance(like, dict) or "pending" not in like:
+            return
+        manifest = getattr(self.ckpt, "manifest", None)
+        if manifest is None:
+            return
+        try:
+            names = manifest(step)
+        except (OSError, KeyError, ValueError):
+            return      # no manifest to check against — restore decides
+        if not any("pending" in n for n in names):
+            raise RuntimeError(
+                f"checkpoint at step {step} has no opt_state['pending'] "
+                f"carry but this zero1_plan='deferred' step requires one "
+                f"— resuming would silently drop the deferred updates "
+                f"(flush via TrainStep.finalize before saving, or restore "
+                f"into a scheduled-plan step)")
+
+    def _recover(self, params, opt_state):
+        """Restore-and-replay (rung 2 of the policy ladder).  Returns
+        ``(step, params, opt_state)`` or None when no checkpoint
+        exists."""
+        if self.ckpt is None or self.ckpt.latest() is None:
+            return None
+        self._guard_pending(self.ckpt.latest())
+        s, state = self.ckpt.restore({"params": params, "opt": opt_state})
+        params = self._place_restored(state["params"],
+                                      self.step_fn.param_specs)
+        opt_state = self._place_restored(state["opt"],
+                                         self.step_fn.opt_specs)
+        self._event("recover", step=s)
+        return s, params, opt_state
 
     def _account_static(self, params, opt_state) -> None:
         """One-time gauges/counters that don't change per step: comm
@@ -451,19 +545,20 @@ class Trainer:
 
         step = start_step
         if self.ckpt is not None and self.ckpt.latest() is not None:
+            self._guard_pending(self.ckpt.latest())
             step, state = self.ckpt.restore(
                 {"params": params, "opt": opt_state})
-            params = jax.device_put(
-                state["params"], self.step_fn.shardings(
-                    self.step_fn.param_specs))
-            opt_state = jax.device_put(
-                state["opt"], self.step_fn.shardings(self.step_fn.opt_specs))
+            params = self._place_restored(state["params"],
+                                          self.step_fn.param_specs)
+            opt_state = self._place_restored(state["opt"],
+                                             self.step_fn.opt_specs)
             self._event("restore", step=step)
             self.printer(f"[trainer] restored checkpoint at step {step}")
 
         self._account_static(params, opt_state)
         losses = deque(maxlen=self.loss_window)
         consec_slow = 0
+        retries_used = 0
         first_timed = self.compile_time is None
         while step < num_steps:
             batch = self.pipeline.batch_at(step)
@@ -472,29 +567,55 @@ class Trainer:
                 if k == "tokens") if isinstance(batch, dict) else 0
             t0 = time.perf_counter()
             try:
+                # injected faults fire at the top of the attempt — AFTER
+                # t0, so a straggler sleep injected here counts in dt
+                if self.fault_injector is not None:
+                    self.fault_injector(step)
                 if step in self.fail_at:
                     self.fail_at.discard(step)
                     raise SimulatedFailure(f"injected node loss @ {step}")
                 params, opt_state, metrics = self.step_fn.fn(
                     params, opt_state, batch, jnp.int32(step))
                 jax.block_until_ready(metrics["loss"])
-            except SimulatedFailure as e:
-                self._event("failure", step=step)
-                self.printer(f"[trainer] {e}; recovering from checkpoint")
-                if self.ckpt is None or self.ckpt.latest() is None:
+                retries_used = 0
+            except TransientStepError as e:
+                # rung 1: the step never committed state — retry in place
+                retries_used += 1
+                if retries_used <= self.step_retries:
+                    self._event("retry", step=step, attempt=retries_used)
+                    self.printer(f"[trainer] transient fault @ {step} "
+                                 f"({e}); retry {retries_used}/"
+                                 f"{self.step_retries}")
+                    continue
+                retries_used = 0
+                self._event("retry_exhausted", step=step)
+                self.printer(f"[trainer] {e}; retries exhausted — "
+                             f"recovering from checkpoint")
+                recovered = self._recover(params, opt_state)
+                if recovered is None:
                     self.printer("[trainer] no checkpoint; restart from 0")
                     step = start_step
                     continue
-                s, state = self.ckpt.restore(
-                    {"params": params, "opt": opt_state})
-                params = jax.device_put(
-                    state["params"],
-                    self.step_fn.shardings(self.step_fn.param_specs))
-                opt_state = jax.device_put(
-                    state["opt"],
-                    self.step_fn.shardings(self.step_fn.opt_specs))
-                step = s
-                self._event("recover", step=s)
+                step, params, opt_state = recovered
+                continue
+            except RankLost as e:
+                # rung 3 lives OUTSIDE the loop: a lost rank means this
+                # mesh is gone — hand the last committed state to the
+                # supervisor (repro.elastic) and unwind
+                e.step = step
+                e.params, e.opt_state = params, opt_state
+                self._event("rank_lost", step=step)
+                self.printer(f"[trainer] {e}; surrendering to supervisor")
+                raise
+            except SimulatedFailure as e:
+                self._event("failure", step=step)
+                self.printer(f"[trainer] {e}; recovering from checkpoint")
+                recovered = self._recover(params, opt_state)
+                if recovered is None:
+                    self.printer("[trainer] no checkpoint; restart from 0")
+                    step = start_step
+                    continue
+                step, params, opt_state = recovered
                 continue
 
             dt = time.perf_counter() - t0
@@ -514,12 +635,24 @@ class Trainer:
                         self._event("straggler", step=step, dt=dt,
                                     median=med)
                         if consec_slow >= self.straggler_patience:
-                            self._event("remesh_requested", step=step)
+                            decision = (self.remesh_hook(step)
+                                        if self.remesh_hook else None)
+                            self._event("remesh_requested", step=step,
+                                        decision=decision or "log-only")
                             self.printer(
                                 f"[trainer] {consec_slow} consecutive "
                                 f"straggler steps — requesting re-shard / "
-                                f"hot-spare swap")
+                                f"hot-spare swap "
+                                f"({decision or 'log-only'})")
                             consec_slow = 0
+                            if decision == "shrink":
+                                # hand the committed post-step state to
+                                # the supervisor; resume at step + 1
+                                e = RemeshRequest(
+                                    f"straggler shrink @ {step}")
+                                e.step = step + 1
+                                e.params, e.opt_state = params, opt_state
+                                raise e
                     else:
                         consec_slow = 0
                 self.step_times.append(dt)

@@ -36,6 +36,8 @@ from repro.core.schedule import (
     ALL_GATHER,
     NORM,
     REDUCE_SCATTER,
+    REGROUP,
+    RESHARD,
     UPDATE,
     CommSchedule,
 )
@@ -189,16 +191,38 @@ def simulate(
             g *= int(mesh_shape.get(a, 1))
         return max(g, 1)
 
+    # elastic transitions (DESIGN.md §13): a RESHARD after the first
+    # REGROUP is the scatter side — local pack + slice on the NEW mesh,
+    # no wire time (the gather side already paid the all-gather)
+    first_rg = next((i for i, op in enumerate(schedule.ops)
+                     if op.kind == REGROUP), None)
+    scatter_ids = frozenset(
+        op.op_id for op in (schedule.ops[first_rg + 1:]
+                            if first_rg is not None else ())
+        if op.kind == RESHARD)
+
     def duration(op) -> float:
         nbytes = op.bucket.size * itemsize_of(op)
         if op.kind == UPDATE:
             # sharded optimizer math: an HBM pass over the 1/group shard
             return compute.update.update_time(nbytes / group_of(op))
-        if op.kind == NORM:
-            # scalar psum of squared norms: latency-bound allreduce
+        if op.kind in (NORM, REGROUP):
+            # scalar psum (squared norms / the regroup barrier):
+            # latency-bound allreduce
             return net.allreduce_time(
                 max(nbytes, sim.itemsize), op.bucket.reduce_axes,
                 mesh_shape)
+        if op.kind == RESHARD:
+            if op.op_id in scatter_ids:
+                return net.staging_time(
+                    REDUCE_SCATTER, nbytes, len(op.bucket.leaves),
+                    fused=sim.fused_staging)
+            # gather side: an all-gather of the dp shard + staging out
+            return net.collective_time(
+                ALL_GATHER, nbytes, op.bucket.reduce_axes, mesh_shape,
+                reducer=op.reducer or sim.reducer) + net.staging_time(
+                ALL_GATHER, nbytes, len(op.bucket.leaves),
+                fused=sim.fused_staging)
         # wire time + the op's share of CopyFromTo staging (pack/unpack;
         # fused vs leafwise is a GradSyncConfig knob the tuner must see)
         return net.collective_time(

@@ -92,3 +92,95 @@ def test_reshard_divisibility_error(smoke_mesh):
         shape = {"data": 1, "model": 2}
     with pytest.raises(ValueError, match="not divisible"):
         validate_divisibility(t, specs, FakeMesh())
+
+
+# ---------------------------------------------- retry / transient I/O
+
+class _FlakyIO:
+    """Raises OSError for the first ``n`` attempts of the given op."""
+
+    def __init__(self, n, ops=("save", "restore")):
+        self.left = n
+        self.ops = ops
+        self.calls = []
+
+    def __call__(self, op):
+        self.calls.append(op)
+        if op in self.ops and self.left > 0:
+            self.left -= 1
+            raise OSError(f"injected {op} fault")
+
+
+def test_save_retries_absorb_transient_faults(tmp_path):
+    flaky = _FlakyIO(2, ops=("save",))
+    mgr = CheckpointManager(str(tmp_path), every=1, blocking=True,
+                            retries=3, backoff_s=0.001,
+                            fault_injector=flaky)
+    t = _tree()
+    assert mgr.maybe_save(1, t)
+    assert flaky.calls.count("save") == 3          # 2 faults + 1 success
+    s, out = mgr.restore(t)
+    assert s == 1
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+
+
+def test_restore_retries_absorb_transient_faults(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, blocking=True)
+    t = _tree()
+    mgr.maybe_save(1, t)
+    flaky = _FlakyIO(2, ops=("restore",))
+    mgr2 = CheckpointManager(str(tmp_path), every=1, retries=2,
+                             backoff_s=0.001, fault_injector=flaky)
+    s, out = mgr2.restore(t)
+    assert s == 1 and flaky.calls.count("restore") == 3
+
+
+def test_retries_exhausted_reraises(tmp_path):
+    flaky = _FlakyIO(10)
+    mgr = CheckpointManager(str(tmp_path), every=1, blocking=True,
+                            retries=2, backoff_s=0.001,
+                            fault_injector=flaky)
+    with pytest.raises(OSError, match="injected save fault"):
+        mgr.maybe_save(1, _tree())
+    assert flaky.calls.count("save") == 3          # retries + 1, then raise
+
+
+def test_atomicity_preserved_under_fault(tmp_path):
+    """A fault mid-retry never corrupts the last complete checkpoint:
+    every attempt goes through the tmp-dir + rename protocol."""
+    mgr = CheckpointManager(str(tmp_path), every=1, blocking=True)
+    t = _tree()
+    mgr.maybe_save(1, t)
+    flaky = _FlakyIO(10)
+    mgr2 = CheckpointManager(str(tmp_path), every=1, blocking=True,
+                             retries=1, backoff_s=0.001,
+                             fault_injector=flaky)
+    bad = jax.tree.map(lambda x: x * 0 - 1, t)
+    with pytest.raises(OSError):
+        mgr2.maybe_save(2, bad)
+    # latest is still the good step-1 checkpoint, bit-for-bit
+    assert latest_step(str(tmp_path)) == 1
+    s, out = mgr.restore(t)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+
+
+def test_save_now_blocking_anchor(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=100, blocking=False)
+    t = _tree()
+    assert not mgr.maybe_save(7, t)     # off the periodic grid
+    mgr.save_now(7, t)                  # the supervisor's anchor path
+    assert mgr.latest() == 7
+
+
+def test_manifest_lists_leaf_names(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, blocking=True)
+    t = _tree()
+    t["opt"]["pending"] = {"0": jnp.zeros((4,))}
+    mgr.maybe_save(1, t)
+    names = mgr.manifest(1)
+    assert "params/w" in names
+    assert any("pending" in n for n in names)
+    with pytest.raises(OSError):
+        mgr.manifest(99)                # absent step fails loudly

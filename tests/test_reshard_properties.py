@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) for checkpoint resharding: random
+leaf shapes × random grow/shrink meshes — divisible layouts always
+validate, indivisible ones always fail loudly with the offending leaf
+named.  Skips cleanly when hypothesis is absent (requirements-dev)."""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (requirements-dev.txt)")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.checkpoint.reshard import validate_divisibility  # noqa: E402
+
+hypothesis.settings.register_profile(
+    "repro", max_examples=60,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("repro")
+
+
+class FakeMesh:
+    """Duck-typed stand-in: ``validate_divisibility`` reads only
+    ``mesh.shape`` (an axis-name → size mapping), so grow/shrink meshes
+    far beyond the host's device count stay testable."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+
+
+def _leaf(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+# axis sizes cover shrink (1) through grow (8): a transition in either
+# direction validates against the TARGET mesh only
+mesh_sizes = st.fixed_dictionaries(
+    {"data": st.sampled_from([1, 2, 4, 8]),
+     "model": st.sampled_from([1, 2, 4, 8])})
+
+
+@given(mesh=mesh_sizes,
+       rows=st.integers(1, 8), cols=st.integers(1, 8))
+def test_divisible_layouts_always_validate(mesh, rows, cols):
+    m = FakeMesh(mesh)
+    tree = {"w": _leaf((rows * mesh["data"], cols * mesh["model"])),
+            "b": _leaf((cols * mesh["model"],))}
+    specs = {"w": P("data", "model"), "b": P("model")}
+    validate_divisibility(tree, specs, m)    # must not raise
+
+
+@given(mesh=mesh_sizes, rows=st.integers(1, 8))
+def test_indivisible_leaf_fails_loudly(mesh, rows):
+    hypothesis.assume(mesh["model"] > 1)
+    # dim 1 is off by one element: never divisible when model > 1
+    off = rows * mesh["model"] + 1
+    tree = {"ok": _leaf((4 * mesh["data"],)), "bad": _leaf((2, off))}
+    specs = {"ok": P("data"), "bad": P(None, "model")}
+    with pytest.raises(ValueError) as e:
+        validate_divisibility(tree, specs, FakeMesh(mesh))
+    assert "bad" in str(e.value) and "not divisible" in str(e.value)
+
+
+@given(mesh=mesh_sizes, k=st.integers(1, 6))
+def test_tuple_axis_specs_use_product(mesh, k):
+    # a dim sharded over BOTH axes must divide by the product...
+    prod = mesh["data"] * mesh["model"]
+    tree = {"w": _leaf((k * prod, 3))}
+    specs = {"w": P(("data", "model"), None)}
+    validate_divisibility(tree, specs, FakeMesh(mesh))
+    # ...and an off-by-one size must fail whenever the product > 1
+    if prod > 1:
+        bad = {"w": _leaf((k * prod + 1, 3))}
+        with pytest.raises(ValueError, match="not divisible"):
+            validate_divisibility(bad, specs, FakeMesh(mesh))
+
+
+@given(old=mesh_sizes, new=mesh_sizes, k=st.integers(1, 4))
+def test_grow_shrink_roundtrip_validates_against_target(old, new, k):
+    # the global view is mesh-independent: a tree built divisible for
+    # BOTH meshes validates on both (the supervisor's ladder contract)
+    lcm_d = old["data"] * new["data"]
+    lcm_m = old["model"] * new["model"]
+    tree = {"w": _leaf((k * lcm_d, lcm_m))}
+    specs = {"w": P("data", "model")}
+    validate_divisibility(tree, specs, FakeMesh(old))
+    validate_divisibility(tree, specs, FakeMesh(new))
+
+
+@given(mesh=mesh_sizes)
+def test_plan_reshard_divisibility_shares_the_rule(mesh):
+    """The elastic transition IR's static divisibility facts
+    (leaf_divisibility) agree with validate_divisibility: same
+    dim-size-vs-axis-product rule, checked by the reshard pass."""
+    from repro.analysis import ScheduleError, verify_schedule
+    from repro.analysis.mutations import (
+        NEW_MESH_RS,
+        OLD_MESH_RS,
+        synthetic_reshard_schedule,
+    )
+
+    s = synthetic_reshard_schedule()
+    n = mesh["data"] * mesh["model"]
+    facts = {"w@dim0": (8 * n, n)}
+    verify_schedule(s, old_mesh_shape=OLD_MESH_RS,
+                    new_mesh_shape=NEW_MESH_RS, leaf_divisibility=facts)
+    if n > 1:
+        with pytest.raises(ScheduleError, match="leaf-indivisible"):
+            verify_schedule(s, old_mesh_shape=OLD_MESH_RS,
+                            new_mesh_shape=NEW_MESH_RS,
+                            leaf_divisibility={"w@dim0": (8 * n + 1, n)})
