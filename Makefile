@@ -2,7 +2,7 @@
 PY ?= python
 
 .PHONY: test test-dev bench bench-smoke schedule dryrun sim-smoke analyze \
-	lint trace-smoke calibrate-smoke elastic-smoke
+	lint trace-smoke calibrate-smoke elastic-smoke serve-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -66,3 +66,11 @@ calibrate-smoke:
 # ZeRO-1; seeded reshard-pass mutation must be caught → BENCH_elastic.json
 elastic-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.elastic_smoke
+
+# open-loop serving shootout on 8 fake devices (DESIGN.md §14): paged
+# continuous engine must be bit-exact with the static path under greedy
+# and beat it on tokens/s AND p99 under mixed-length open-loop load;
+# records the host-sync delta and the decode-plan simulated-vs-measured
+# row → BENCH_serve.json
+serve-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.serve_smoke

@@ -21,6 +21,7 @@ import numpy as np
 from repro.core.schedule import (
     ALL_GATHER,
     ALLREDUCE,
+    DECODE,
     KINDS,
     NORM,
     PHASES,
@@ -295,8 +296,8 @@ def reducer_stages(op, default_reducer: str = "flat",
     """The wire collectives one op expands into, per reducer family —
     what each rank actually issues on the network (DESIGN.md §3, §8)."""
     axes = op.bucket.reduce_axes
-    if op.kind == UPDATE:
-        return ()                       # local optimizer math
+    if op.kind in (UPDATE, DECODE):
+        return ()                       # local math, no wire payload
     if op.kind != ALLREDUCE:
         return ((op.kind, axes),)
     fam = _family(op.reducer or default_reducer)
@@ -637,7 +638,7 @@ def check_accounting(schedule: CommSchedule, *,
         if op.kind == ALL_GATHER:
             srcs = [by_id[d] for d in op.depends_on if d in by_id
                     and by_id[d].bucket.bucket_id == op.bucket.bucket_id
-                    and by_id[d].kind in (REDUCE_SCATTER, UPDATE)]
+                    and by_id[d].kind in (REDUCE_SCATTER, UPDATE, DECODE)]
             if not srcs and op.phase != PRE:
                 out.append(Finding(
                     "accounting", "ag-no-producer",

@@ -56,9 +56,16 @@ RESHARD = "reshard"  # move one state bucket across a mesh transition:
 #                      mesh) re-slices it into the new dp shards
 REGROUP = "regroup"  # the MXNET-MPI group-rebuild barrier: a scalar psum
 #                      joining every old-mesh chain before new-mesh ops
+# serving (repro.runtime, DESIGN.md §14) kind — decode-time compute as a
+# schedulable node, so decode plans (per-layer DECODE → tp psum ALLREDUCE,
+# sampler ALL_GATHER) rank through the same sim as training plans:
+DECODE = "decode"    # local decode math for one layer group / the lm_head:
+#                      no wire payload (its tp collectives are explicit
+#                      ALLREDUCE/ALL_GATHER ops downstream); the sim costs
+#                      it as an HBM pass over the node's local param bytes
 
 KINDS = (ALLREDUCE, REDUCE_SCATTER, ALL_GATHER, UPDATE, NORM,
-         RESHARD, REGROUP)
+         RESHARD, REGROUP, DECODE)
 # kinds that move a bucket's payload over the wire exactly once (RS/AG
 # pairs are counted at the RS; UPDATE is local math, NORM a scalar)
 _WIRE_KINDS = (ALLREDUCE, REDUCE_SCATTER)
@@ -628,6 +635,17 @@ class _OpEmitter:
                 lambda v, _ax=bucket.reduce_axes: jax.lax.psum(v, _ax))
             if self.aux is not None:
                 self.aux["regroup_done"] = done
+
+        elif op.kind == DECODE:
+            # local decode compute placeholder: the serving engine runs the
+            # real math (repro.runtime.serve_loop); in a traced program the
+            # node is a pure scheduling point — gate on deps, advance the
+            # token — so decode plans execute/replay without special-casing
+            done, self.tokens[op.op_id] = emit_gated(
+                jnp.float32(1.0), token, lambda v: v)
+            if self.aux is not None:
+                self.aux.setdefault("decode_nodes", []).append(
+                    op.bucket.bucket_id)
 
         else:
             raise ValueError(f"unknown op kind {op.kind!r}")

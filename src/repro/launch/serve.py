@@ -1,7 +1,13 @@
-"""Production serving launcher: batched greedy decoding for any arch with
-a serve path.
+"""Production serving launcher: continuous-batching (default) or static
+batched decoding for any arch with a serve path.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --temperature 0.8 --top-k 16 --seed 7
+
+Defaults keep greedy decoding (temperature 0) and the continuous engine
+for families with a paged decode hook; ``--engine static`` forces the
+original ``RequestQueue`` batcher.
 """
 from __future__ import annotations
 
@@ -15,7 +21,7 @@ from repro.configs import get_arch
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
 from repro.models.registry import family_of
 from repro.parallel.sharding import dp_axes_of
-from repro.runtime import Server
+from repro.runtime import ContinuousScheduler, SamplingParams, Server
 from repro.runtime.serve_loop import RequestQueue
 
 
@@ -26,7 +32,23 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static batcher width / continuous in-flight slots")
+    ap.add_argument("--engine", choices=("continuous", "static"),
+                    default="continuous",
+                    help="continuous falls back to static for families "
+                         "without a paged decode hook")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV-cache block size (must divide max-len)")
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps per device launch (one host sync)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (the default)")
+    ap.add_argument("--top-k", type=int, default=0, help="0 = no cap")
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="per-request sampling seed base")
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -41,22 +63,43 @@ def main():
     if api.prefill is None:
         raise SystemExit(f"{args.arch} has no serve path")
     params = api.init(jax.random.PRNGKey(0), cfg)
-    server = Server(cfg, mesh, params, max_len=64)
-    queue = RequestQueue(server, batch=args.batch)
+    server = Server(cfg, mesh, params, max_len=args.max_len)
 
     rng = np.random.default_rng(0)
-    handles = [queue.submit(
-        rng.integers(1, min(cfg.vocab, 512), size=rng.integers(4, 12),
-                     dtype=np.int32), args.max_new)
-        for _ in range(args.requests)]
+    prompts = [rng.integers(1, min(cfg.vocab, 512),
+                            size=rng.integers(4, 12), dtype=np.int32)
+               for _ in range(args.requests)]
+
+    use_continuous = (args.engine == "continuous"
+                      and api.decode_paged is not None)
+    if args.engine == "continuous" and not use_continuous:
+        print(f"[serve] {cfg.name}'s family has no paged decode hook; "
+              f"falling back to the static batcher")
+
     t0 = time.perf_counter()
-    done = 0
-    while done < args.requests:
-        done += queue.serve_once()
+    if use_continuous:
+        eng = ContinuousScheduler(
+            server, slots=args.batch, block_size=args.block_size,
+            chunk=args.chunk)
+        handles = [eng.submit(p, args.max_new, SamplingParams(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, seed=args.seed + i))
+            for i, p in enumerate(prompts)]
+        eng.run_until_idle()
+    else:
+        queue = RequestQueue(server, batch=args.batch)
+        handles = [queue.submit(p, args.max_new) for p in prompts]
+        done = 0
+        while done < args.requests:
+            done += queue.serve_once()
     dt = time.perf_counter() - t0
     for i, h in enumerate(handles):
-        print(f"req {i}: {h.get(timeout=30).tolist()}")
-    print(f"[serve] {args.requests} requests in {dt:.2f}s "
+        out = h.get(timeout=30)
+        if isinstance(out, Exception):
+            raise out
+        print(f"req {i}: {out.tolist()}")
+    print(f"[serve] engine={'continuous' if use_continuous else 'static'} "
+          f"{args.requests} requests in {dt:.2f}s "
           f"({args.requests * args.max_new / dt:.1f} tok/s)")
 
 

@@ -116,7 +116,10 @@ def decode_attention(
     q: jax.Array,            # (B, 1, Hq, D)
     k_cache: jax.Array,      # (B, Smax, Hkv, D)
     v_cache: jax.Array,
-    kv_len: jax.Array,       # scalar int32: valid cache length (incl. new tok)
+    kv_len: jax.Array,       # int32 valid cache length (incl. new token):
+    #                          scalar (shared) or (B,) per-row (the paged
+    #                          continuous-batching path, where every slot
+    #                          sits at its own position)
     *,
     window: Optional[int] = None,
 ) -> jax.Array:
@@ -129,10 +132,18 @@ def decode_attention(
     qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, rep, D)
     s = jnp.einsum("bhrd,bshd->bhrs", qf, k_cache.astype(jnp.float32))
     pos = jnp.arange(Smax, dtype=jnp.int32)
-    valid = pos < kv_len
-    if window is not None:
-        valid &= pos > (kv_len - 1) - window
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if kv_len.ndim == 0:
+        valid = pos < kv_len
+        if window is not None:
+            valid &= pos > (kv_len - 1) - window
+        valid = valid[None, None, None, :]
+    else:
+        valid = pos[None, :] < kv_len[:, None]          # (B, Smax)
+        if window is not None:
+            valid &= pos[None, :] > (kv_len[:, None] - 1) - window
+        valid = valid[:, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhrs,bshd->bhrd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, 1, Hq, D).astype(q.dtype)

@@ -24,6 +24,9 @@ class ModelAPI:
     decode_step: Optional[Callable[..., Any]] = None
     make_decode_state: Optional[Callable[..., Any]] = None
     decode_state_specs: Optional[Callable[..., Any]] = None
+    # paged (block-table) decode for the continuous-batching engine;
+    # families without it fall back to the static serving path
+    decode_paged: Optional[Callable[..., Any]] = None
 
 
 def _tf_make_state(cfg, batch, max_len):
@@ -52,6 +55,7 @@ FAMILIES: dict[str, ModelAPI] = {
         decode_step=tf_lib.decode_step,
         make_decode_state=_tf_make_state,
         decode_state_specs=tf_lib.decode_state_specs,
+        decode_paged=tf_lib.decode_step_paged,
     ),
     "rwkv": ModelAPI(
         family="rwkv",

@@ -419,10 +419,17 @@ def train_forward(params, batch, cfg: TransformerConfig) -> jax.Array:
 
 # ------------------------------------------------------------------ serve
 def prefill(params, tokens, cfg: TransformerConfig, img_embeds=None,
-            frame_embeds=None):
+            frame_embeds=None, last_pos=None):
     """Full-sequence forward; returns (next_token_logits_local, kv_cache).
 
     Cache layout: dict of (n_self, B, S, kv_local, hd) stacked arrays.
+
+    ``last_pos`` (scalar int32) selects which position's logits to
+    return — the continuous-batching engine right-pads prompts to a
+    length bucket and reads the logits at the true last prompt token
+    (causality makes every position < last_pos+1 independent of the
+    padding, so the bucketed prefill is bit-exact with an exact-length
+    one).  None keeps the static behavior (last position).
     """
     B, S = tokens.shape
     x = embed_lookup(params["embed"], tokens, cfg.tp).astype(cfg.dtype)
@@ -470,7 +477,11 @@ def prefill(params, tokens, cfg: TransformerConfig, img_embeds=None,
             caches.append(c)
         cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *caches)
 
-    h = rms_norm(x[:, -1:], params["ln_f"])
+    if last_pos is None:
+        sel = x[:, -1:]
+    else:
+        sel = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, 1)
+    h = rms_norm(sel, params["ln_f"])
     logits = h @ params["lm_head"]
     return logits[:, 0], cache
 
@@ -548,6 +559,66 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig,
     h = rms_norm(x, params["ln_f"])
     logits = (h @ params["lm_head"])[:, 0]               # (B, V/tp)
     return logits, new_cache
+
+
+def decode_step_paged(params, pool_k, pool_v, block_tables, tokens,
+                      positions, cfg: TransformerConfig):
+    """One decode step over a paged KV pool with per-slot positions.
+
+    pool_k/pool_v: (n_self, num_blocks, block_size, kv_local, hd) — the
+    rank-local physical block pool.  block_tables: (W, max_blocks) int32
+    local block ids per slot; tokens: (W,) the token each slot consumes;
+    positions: (W,) its absolute position.  Logical position ``p`` of
+    slot ``w`` lives at flat pool row ``table[w, p // bs] * bs + p %
+    bs``.  The per-position math is identical to ``decode_step`` (same
+    qkv/rope/attention/psum sequence, per-slot kv_len instead of a
+    shared scalar), so greedy decoding through the pool is bit-exact
+    with the static cache when the gathered extent matches ``max_len``.
+    Returns (logits_local (W, V/tp), new_pool_k, new_pool_v).
+    """
+    assert cfg.n_cross == 0, "paged decode serves decoder-only archs"
+    W = tokens.shape[0]
+    bs = pool_k.shape[2]
+    MB = block_tables.shape[1]
+    x = embed_lookup(params["embed"], tokens[:, None], cfg.tp).astype(cfg.dtype)
+    cos, sin = rope_angles(positions[:, None], cfg.hd, cfg.rope_theta)
+    # per-slot write row + gather map into the flat (num_blocks*bs) pool
+    wr = (jnp.take_along_axis(block_tables, (positions // bs)[:, None],
+                              axis=1)[:, 0] * bs + positions % bs)
+    gat = ((block_tables * bs)[:, :, None]
+           + jnp.arange(bs, dtype=jnp.int32)[None, None, :]).reshape(
+               W, MB * bs)
+    kv_len = positions + 1
+    win = (cfg.swa_window
+           if (cfg.swa_window and MB * bs > cfg.swa_window) else None)
+
+    def body(x, xs):
+        p, kc, vc = xs
+        p = fsdp_gather(p, cfg)
+        h = rms_norm(x, p["ln1"])
+        q, k, v = _attn_qkv(p, h, cfg)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        kf = kc.reshape(-1, *kc.shape[2:])
+        vf = vc.reshape(-1, *vc.shape[2:])
+        kf = kf.at[wr].set(k[:, 0])
+        vf = vf.at[wr].set(v[:, 0])
+        kw = jnp.take(kf, gat, axis=0)
+        vw = jnp.take(vf, gat, axis=0)
+        o = attn_lib.decode_attention(q, kw, vw, kv_len, window=win)
+        o = o.reshape(W, 1, -1) @ p["wo"]
+        o = jax.lax.psum(o, MODEL_AXIS) if cfg.tp > 1 else o
+        x = x + o
+        h = rms_norm(x, p["ln2"])
+        f, _ = _ffn(p, h, cfg)
+        return x + f, {"k": kf.reshape(kc.shape), "v": vf.reshape(vc.shape)}
+
+    x, new_pool = jax.lax.scan(
+        body, x, (params["blocks"], pool_k, pool_v),
+        unroll=cfg.scan_unroll)
+    h = rms_norm(x, params["ln_f"])
+    logits = (h @ params["lm_head"])[:, 0]
+    return logits, new_pool["k"], new_pool["v"]
 
 
 def make_cache(cfg: TransformerConfig, batch: int, max_len: int):

@@ -3,6 +3,26 @@ from repro.runtime.train_loop import (
     Trainer,
     make_train_step,
 )
-from repro.runtime.serve_loop import Server
+from repro.runtime.serve_loop import (
+    ContinuousScheduler,
+    RequestQueue,
+    SamplingParams,
+    Server,
+    sharded_argmax,
+    sharded_sample,
+)
+from repro.runtime.kvcache import BlockAllocator, PagedLayout
 
-__all__ = ["SimulatedFailure", "Server", "Trainer", "make_train_step"]
+__all__ = [
+    "BlockAllocator",
+    "ContinuousScheduler",
+    "PagedLayout",
+    "RequestQueue",
+    "SamplingParams",
+    "Server",
+    "SimulatedFailure",
+    "Trainer",
+    "make_train_step",
+    "sharded_argmax",
+    "sharded_sample",
+]

@@ -1,13 +1,36 @@
-"""Serving runtime: shard_map'd prefill + decode with a batched request
-queue (static batching with padding; the cache lives sharded on-device).
+"""Serving runtime: static batcher + continuous-batching engine.
 
-Decode sharding: batch over DP axes, heads/vocab over "model".  Greedy
-sampling uses a vocab-sharded argmax (no full-vocab gather)."""
+Two serving paths share the sharded params and the vocab-sharded
+samplers:
+
+- ``Server``/``RequestQueue`` — the original static batcher: one padded
+  batch prefills together and decodes to the batch-wide ``max_new``
+  (kept as the reference path and for families without a paged decode
+  hook).  Decode tokens stay on device and materialize once per
+  ``generate`` (``sync_per_token=True`` restores the old per-token
+  host sync, for measuring the delta).
+
+- ``ContinuousScheduler`` — in-flight batching over a paged KV pool
+  (DESIGN.md §14): a fixed-width decode batch whose slots are admitted
+  and retired per step; new requests prefill (bucketed, bit-exact) into
+  free slots, finished/EOS slots retire immediately and their cache
+  blocks return to the ``repro.runtime.kvcache`` allocator.  Decode runs
+  in chunks of ``chunk`` tokens with ONE host sync per chunk (tokens
+  come back ``-1``-masked per slot), and sampling happens on the
+  vocab-sharded logits without a full-vocab gather
+  (``sharded_sample``: local top-k per shard → all-gather tp×k
+  candidates → global categorical).
+
+Decode sharding: slots over DP axes (slot ``w`` is owned by dp rank
+``w // W_local``; its cache blocks live in that rank's pool shard),
+heads/vocab over "model".
+"""
 from __future__ import annotations
 
 import dataclasses
 import queue
-from typing import Any
+import time
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +39,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.registry import family_of
 from repro.parallel.sharding import batch_spec, dp_axes_of
+from repro.runtime.kvcache import SCRATCH_BLOCK, BlockAllocator, PagedLayout
 
 
+# ------------------------------------------------------------- samplers
 def sharded_argmax(logits_local: jax.Array, tp: int) -> jax.Array:
     """Greedy token from (B, V/tp) vocab-sharded logits → (B,) global ids."""
     if tp == 1:
@@ -34,6 +59,76 @@ def sharded_argmax(logits_local: jax.Array, tp: int) -> jax.Array:
     return jnp.take_along_axis(args, best[None], axis=0)[0]
 
 
+def sharded_sample(
+    logits_local: jax.Array,     # (B, V/tp) f32 vocab-sharded logits
+    tp: int,
+    keys: jax.Array,             # (B, 2) uint32 per-row PRNG keys
+    temperature: jax.Array,      # (B,) f32; 0 → greedy (exact argmax)
+    top_k: jax.Array,            # (B,) int32; 0 → no top-k cap
+    top_p: jax.Array,            # (B,) f32; 1.0 → no nucleus cap
+    *,
+    k_cand: int = 16,
+) -> jax.Array:
+    """Temperature/top-k/top-p sampling on vocab-sharded logits → (B,) ids.
+
+    Generalizes ``sharded_argmax``: each shard keeps its local top
+    ``k_cand`` logits, one all-gather moves the tp×k_cand candidates
+    (not the vocab), and the categorical draws among them.  Candidates
+    are stably ordered by (value desc, shard asc, index asc), so the
+    head candidate is exactly ``sharded_argmax``'s pick — at
+    temperature 0 the two are identical, ties included.  Sampling is
+    exact whenever the effective top-k ≤ ``k_cand`` (per shard);
+    an unbounded-tail draw (top_k=0, top_p=1) is truncated to the
+    tp×k_cand most likely tokens.
+    """
+    B, v_local = logits_local.shape
+    k_eff = min(k_cand, v_local)
+    vals, idx = jax.lax.top_k(logits_local, k_eff)       # (B, k) desc, stable
+    idx = idx.astype(jnp.int32)
+    if tp > 1:
+        shard = jax.lax.axis_index("model")
+        idx = idx + shard * v_local
+        # (tp, B, k) → (B, tp, k) → (B, tp*k): shard-major candidate order
+        vals = jnp.swapaxes(
+            jax.lax.all_gather(vals, "model", axis=0), 0, 1
+        ).reshape(B, -1)
+        idx = jnp.swapaxes(
+            jax.lax.all_gather(idx, "model", axis=0), 0, 1
+        ).reshape(B, -1)
+    K = vals.shape[-1]
+    # stable sort keeps shard-asc/index-asc order among equal values —
+    # the same tie-break as sharded_argmax
+    order = jnp.argsort(-vals, axis=-1, stable=True)
+    vals = jnp.take_along_axis(vals, order, axis=-1)
+    idx = jnp.take_along_axis(idx, order, axis=-1)
+    greedy = idx[:, 0]
+
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = vals.astype(jnp.float32) / t
+    ranks = jnp.arange(K, dtype=jnp.int32)[None, :]
+    kcap = jnp.where(top_k > 0, jnp.minimum(top_k, K), K)[:, None]
+    mask = ranks < kcap
+    probs = jax.nn.softmax(jnp.where(mask, scaled, -jnp.inf), axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # nucleus: keep candidates whose preceding mass is < top_p (the head
+    # candidate always survives: its preceding mass is 0)
+    mask &= (cum - probs) < top_p[:, None]
+    masked = jnp.where(mask, scaled, -jnp.inf)
+    draw = jax.vmap(jax.random.categorical)(keys, masked)
+    sampled = jnp.take_along_axis(idx, draw[:, None], axis=-1)[:, 0]
+    return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs; the default is greedy decoding."""
+    temperature: float = 0.0
+    top_k: int = 0               # 0 → no cap
+    top_p: float = 1.0
+    seed: int = 0
+
+
+# ------------------------------------------------------- static batcher
 @dataclasses.dataclass
 class ServeFns:
     prefill: Any
@@ -106,10 +201,16 @@ class Server:
             return leaf
         return jax.tree.map(pad, cache)
 
-    def generate(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
-        """prompts: (B, S) int32 → (B, max_new) greedy continuations."""
-        import time
+    def generate(self, prompts: np.ndarray, max_new: int, *,
+                 sync_per_token: bool = False) -> np.ndarray:
+        """prompts: (B, S) int32 → (B, max_new) greedy continuations.
 
+        Tokens accumulate ON DEVICE and materialize once at the end —
+        the decode loop enqueues ``max_new`` steps without a host sync
+        per token.  ``sync_per_token=True`` restores the old
+        np.asarray-per-step behavior (kept for measuring the delta in
+        ``BENCH_serve.json``).
+        """
         B, S = prompts.shape
         if B not in self._fns:
             self._fns[B] = self._build(B)
@@ -128,12 +229,15 @@ class Server:
                 cache, jax.tree.map(
                     lambda s: NamedSharding(self.mesh, s), fns.cache_specs))
         t_prefill = time.perf_counter()
-        out = [np.asarray(tok)]
+        out = [tok]
         pos = S
         for _ in range(max_new - 1):
             tok, cache = fns.decode(self.params, cache, tok, jnp.int32(pos))
-            out.append(np.asarray(tok))
+            if sync_per_token:
+                np.asarray(tok)
+            out.append(tok)
             pos += 1
+        result = np.asarray(jnp.stack(out, axis=1))      # ONE device sync
         t_end = time.perf_counter()
         self.metrics.counter("serve.requests_total").inc(B)
         self.metrics.counter("serve.tokens_generated").inc(B * max_new)
@@ -144,12 +248,17 @@ class Server:
                 (t_end - t_prefill) / (max_new - 1))
         self.metrics.gauge("serve.tokens_per_s").set(
             B * max_new / max(t_end - t_start, 1e-9))
-        return np.stack(out, axis=1)
+        return result
 
 
 class RequestQueue:
     """Minimal batching front-end: collects up to ``batch`` requests (or
-    ``timeout_s``), pads to a common length, serves, returns per-request."""
+    ``timeout_s``), pads to a common length, serves, returns per-request.
+
+    If ``Server.generate`` raises, the exception instance is delivered
+    to EVERY waiter's done queue (callers check
+    ``isinstance(result, Exception)``) — waiters never block forever on
+    a failed batch."""
 
     def __init__(self, server: Server, batch: int, timeout_s: float = 0.05):
         self.server = server
@@ -183,7 +292,417 @@ class RequestQueue:
         toks = np.zeros((pad_to, max_len), np.int32)
         for i, (p, _, _) in enumerate(reqs):
             toks[i, max_len - p.shape[0]:] = p   # left-pad
-        out = self.server.generate(toks, max_new)
+        out: np.ndarray | None = None
+        err: Exception | None = None
+        try:
+            out = self.server.generate(toks, max_new)
+        except Exception as e:                   # noqa: BLE001 — delivered
+            err = e
         for i, (_, mn, done) in enumerate(reqs):
-            done.put(out[i, :mn])
+            done.put(err if err is not None else out[i, :mn])
         return n
+
+
+# -------------------------------------------- continuous-batching engine
+@dataclasses.dataclass
+class Request:
+    """One in-flight generation request (engine-internal state)."""
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    sampling: SamplingParams
+    done: queue.Queue
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    blocks: list[int] = dataclasses.field(default_factory=list)
+    pos: int = 0                 # absolute position of ``tok``
+    tok: int = 0                 # last token (feeds the next decode step)
+    rem: int = 0                 # tokens still to emit (0 → inactive)
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class ContinuousScheduler:
+    """In-flight batching over a paged KV pool (DESIGN.md §14).
+
+    Replaces ``RequestQueue`` for families with a ``decode_paged`` hook:
+    a fixed-width decode batch of ``slots`` whose rows are admitted and
+    retired independently.  Admission prefills the prompt (right-padded
+    to a block-aligned bucket — bit-exact by causality, logits read at
+    the true last token via ``last_pos``), samples the first token, and
+    scatters the prompt's KV rows into the owner rank's block pool.
+    Decode then runs ``chunk`` tokens per launch with one host sync per
+    chunk; slots whose budget or EOS hits mid-chunk go inactive on
+    device (they rewrite their own scratch row) and retire on the host
+    at the chunk boundary, freeing their blocks immediately.
+
+    Bit-exactness with the static path (greedy): pick ``block_size``
+    dividing the server's ``max_len`` — the gathered decode extent
+    (``max_blocks × block_size``) then equals the static cache's
+    ``max_len``, masked positions contribute exactly 0, and write-then-
+    attend ordering matches ``decode_step``, so the same prompt yields
+    the same tokens.
+
+    Failure semantics match ``RequestQueue``: a raise during admission
+    fails that request's done queue; a raise during a decode chunk
+    fails every in-flight request (the pool state is indeterminate) and
+    the engine resets.
+    """
+
+    def __init__(self, server: Server, *, slots: int = 8,
+                 block_size: int = 32, chunk: int = 8,
+                 num_blocks: int | None = None, k_cand: int = 16,
+                 eos_id: int | None = None):
+        self.server = server
+        self.cfg = server.cfg
+        self.mesh = server.mesh
+        self.api = server.api
+        assert self.api.decode_paged is not None, \
+            f"{self.cfg.name}'s family has no paged decode hook"
+        if server.max_len % block_size:
+            raise ValueError(
+                f"block_size {block_size} must divide max_len "
+                f"{server.max_len} (bit-exact decode extent)")
+        self.dp_size = server.dp_size
+        if slots % self.dp_size:
+            raise ValueError(f"slots {slots} not divisible by dp={self.dp_size}")
+        self.W = slots
+        self.W_local = slots // self.dp_size
+        self.chunk = chunk
+        self.k_cand = k_cand
+        self.eos_id = -1 if eos_id is None else int(eos_id)
+        self.layout = PagedLayout.for_requests(
+            server.max_len, block_size, self.W_local, num_blocks=num_blocks)
+        # one allocator per dp rank: slot w lives on rank w // W_local and
+        # its blocks index into THAT rank's pool shard
+        self.allocators = [BlockAllocator(self.layout)
+                           for _ in range(self.dp_size)]
+        self.slots = [_Slot() for _ in range(self.W)]
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._backlog: list[Request] = []    # popped but not yet admitted
+        self._next_rid = 0
+        self.metrics = server.metrics
+
+        bspec = batch_spec(self.mesh)
+        self._dp_entry = bspec[0] if len(bspec) else None
+        self._row_spec = P(self._dp_entry)
+        self._pool_spec = P(None, self._dp_entry, None, "model", None)
+        self._vec_sh = NamedSharding(self.mesh, self._row_spec)
+        self._tab_sh = NamedSharding(self.mesh, P(self._dp_entry, None))
+        self._tables = np.full((self.W, self.layout.max_blocks),
+                               SCRATCH_BLOCK, np.int32)
+        self.pool_k, self.pool_v = self._init_pool()
+        self._prefill_fns: dict[int, Any] = {}
+        self._decode_fn = self._build_decode()
+
+    # ----------------------------------------------------------- build
+    def _linear_dp_rank(self):
+        lin = jnp.int32(0)
+        for ax in dp_axes_of(self.mesh):
+            lin = lin * self.mesh.shape[ax] + jax.lax.axis_index(ax)
+        return lin
+
+    def _init_pool(self):
+        cfg, lay = self.cfg, self.cfg.layout
+        shape = (cfg.n_self, self.layout.num_blocks, self.layout.block_size,
+                 lay.kv_local, cfg.hd)
+
+        def init():
+            z = jnp.zeros(shape, cfg.dtype)
+            return z, z
+
+        f = jax.jit(jax.shard_map(
+            init, mesh=self.mesh, in_specs=(),
+            out_specs=(self._pool_spec, self._pool_spec), check_vma=False))
+        return f()
+
+    def _build_prefill(self, Sb: int):
+        """(prefill+sample, insert) pair for one prompt bucket length."""
+        cfg, api, mesh = self.cfg, self.api, self.mesh
+        # B=1 prefill runs replicated over dp (every rank computes it;
+        # only the owner's pool shard absorbs the insert)
+        cspec = P(None, None, None, "model", None)
+
+        def pf(params, tokens, last_pos, temp, topk, topp, seed):
+            logits, cache = api.prefill(params, tokens, cfg,
+                                        last_pos=last_pos)
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), last_pos + 1)
+            tok = sharded_sample(
+                logits.astype(jnp.float32), cfg.tp, key[None],
+                temp[None], topk[None], topp[None], k_cand=self.k_cand)
+            return tok, cache
+
+        pf_j = jax.jit(jax.shard_map(
+            pf, mesh=mesh,
+            in_specs=(self.server.pspecs, P(), P(), P(), P(), P(), P()),
+            out_specs=(P(), {"k": cspec, "v": cspec}), check_vma=False))
+
+        def ins(pool_k, pool_v, ck, cv, dest, owner):
+            # dest: (Sb,) flat pool rows (owner-local ids); non-owners and
+            # padded positions scatter out of range → dropped
+            nb, bs = pool_k.shape[1], pool_k.shape[2]
+            rows = nb * bs
+            dest = jnp.where(self._linear_dp_rank() == owner, dest, rows)
+            pk = pool_k.reshape(pool_k.shape[0], rows, *pool_k.shape[3:])
+            pv = pool_v.reshape(pool_v.shape[0], rows, *pool_v.shape[3:])
+            pk = pk.at[:, dest].set(ck[:, 0], mode="drop")
+            pv = pv.at[:, dest].set(cv[:, 0], mode="drop")
+            return pk.reshape(pool_k.shape), pv.reshape(pool_v.shape)
+
+        ins_j = jax.jit(jax.shard_map(
+            ins, mesh=mesh,
+            in_specs=(self._pool_spec, self._pool_spec, cspec, cspec,
+                      P(), P()),
+            out_specs=(self._pool_spec, self._pool_spec), check_vma=False),
+            donate_argnums=(0, 1))
+        return pf_j, ins_j
+
+    def _build_decode(self):
+        cfg, api = self.cfg, self.api
+        eos = self.eos_id
+        chunk = self.chunk
+
+        def dc(params, pool_k, pool_v, tables, toks, pos, rem,
+               temps, topks, topps, seeds):
+            def step(carry, _):
+                pool_k, pool_v, toks, pos, rem = carry
+                active = rem > 0
+                logits, pool_k, pool_v = api.decode_paged(
+                    params, pool_k, pool_v, tables, toks, pos, cfg)
+                keys = jax.vmap(
+                    lambda s, p: jax.random.fold_in(
+                        jax.random.PRNGKey(s), p + 1))(seeds, pos)
+                nxt = sharded_sample(
+                    logits.astype(jnp.float32), cfg.tp, keys,
+                    temps, topks, topps, k_cand=self.k_cand)
+                out = jnp.where(active, nxt, -1)
+                fin = active & (nxt == eos)
+                toks = jnp.where(active, nxt, toks)
+                pos = jnp.where(active, pos + 1, pos)
+                rem = jnp.where(fin, 0, jnp.where(active, rem - 1, 0))
+                return (pool_k, pool_v, toks, pos, rem), out
+
+            carry, outs = jax.lax.scan(
+                step, (pool_k, pool_v, toks, pos, rem), None, length=chunk)
+            pool_k, pool_v = carry[0], carry[1]
+            return pool_k, pool_v, outs          # outs: (chunk, W)
+
+        rs = self._row_spec
+        return jax.jit(jax.shard_map(
+            dc, mesh=self.mesh,
+            in_specs=(self.server.pspecs, self._pool_spec, self._pool_spec,
+                      P(self._dp_entry, None), rs, rs, rs, rs, rs, rs, rs),
+            out_specs=(self._pool_spec, self._pool_spec, P(None, self._dp_entry)),
+            check_vma=False), donate_argnums=(1, 2))
+
+    # ------------------------------------------------------------- API
+    def submit(self, prompt: np.ndarray, max_new: int,
+               sampling: SamplingParams | None = None) -> "queue.Queue":
+        """Enqueue one request; returns its done queue.  The result is a
+        (≤ max_new,) int32 token array, or an Exception instance."""
+        done: queue.Queue = queue.Queue(maxsize=1)
+        sp = sampling or SamplingParams()
+        L = int(prompt.shape[0])
+        cap = self.layout.seq_capacity
+        if L + max_new > cap or max_new < 1 or L < 1:
+            done.put(ValueError(
+                f"request needs {L}+{max_new} positions > capacity {cap}"))
+            return done
+        req = Request(self._next_rid, np.asarray(prompt, np.int32),
+                      int(max_new), sp, done, t_submit=time.perf_counter())
+        self._next_rid += 1
+        self.queue.put(req)
+        return done
+
+    def _bucket(self, L: int) -> int:
+        bs = self.layout.block_size
+        return -(-L // bs) * bs
+
+    def _retire(self, w: int) -> None:
+        s = self.slots[w]
+        r = s.req
+        self.allocators[w // self.W_local].free(s.blocks)
+        self._tables[w, :] = SCRATCH_BLOCK
+        self.slots[w] = _Slot()
+        r.done.put(np.asarray(r.tokens, np.int32))
+        self.metrics.histogram("serve.req_latency_s").observe(
+            time.perf_counter() - r.t_submit)
+        self.metrics.counter("serve.tokens_generated").inc(len(r.tokens))
+
+    def _fail(self, req: Request, err: Exception) -> None:
+        req.done.put(err)
+
+    def _admit(self) -> int:
+        """Fill free slots from the queue (FIFO, no reordering)."""
+        admitted = 0
+        while True:
+            if not self._backlog:
+                try:
+                    self._backlog.append(self.queue.get_nowait())
+                except queue.Empty:
+                    break
+            req = self._backlog[0]
+            L = len(req.prompt)
+            need = L + req.max_new
+            w = next(
+                (i for i, s in enumerate(self.slots) if s.free
+                 and self.allocators[i // self.W_local].can_fit(need)),
+                None)
+            if w is None:
+                break                            # head-of-line blocks: FIFO
+            self._backlog.pop(0)
+            try:
+                self._start(w, req)
+                admitted += 1
+            except Exception as e:               # noqa: BLE001 — delivered
+                self._fail(req, e)
+        return admitted
+
+    def _start(self, w: int, req: Request) -> None:
+        """Prefill ``req`` into slot ``w``: sample its first token and
+        scatter the prompt KV rows into the owner's pool shard."""
+        owner = w // self.W_local
+        alloc = self.allocators[owner]
+        L = len(req.prompt)
+        blocks = alloc.alloc(L + req.max_new)
+        assert blocks is not None                # _admit checked can_fit
+        Sb = self._bucket(L)
+        if Sb not in self._prefill_fns:
+            self._prefill_fns[Sb] = self._build_prefill(Sb)
+        pf, ins = self._prefill_fns[Sb]
+
+        toks = np.zeros((1, Sb), np.int32)
+        toks[0, :L] = req.prompt                 # right-pad (causal-exact)
+        sp = req.sampling
+        try:
+            tok, cache = pf(
+                self.server.params, jnp.asarray(toks),
+                jnp.int32(L - 1), jnp.float32(sp.temperature),
+                jnp.int32(sp.top_k), jnp.float32(sp.top_p),
+                jnp.int32(sp.seed))
+            bs = self.layout.block_size
+            row = alloc.table_row(blocks)
+            dest = np.full((Sb,), self.layout.num_blocks * bs, np.int32)
+            p = np.arange(L)
+            dest[:L] = np.asarray(row)[p // bs] * bs + p % bs
+            self.pool_k, self.pool_v = ins(
+                self.pool_k, self.pool_v, cache["k"], cache["v"],
+                jnp.asarray(dest), jnp.int32(owner))
+            first = int(np.asarray(tok)[0])
+        except Exception:
+            alloc.free(blocks)
+            raise
+        req.tokens.append(first)
+        req.t_first = time.perf_counter()
+        self.metrics.histogram("serve.ttft_s").observe(
+            req.t_first - req.t_submit)
+        self.metrics.counter("serve.requests_total").inc()
+        s = self.slots[w]
+        s.req, s.blocks, s.pos, s.tok = req, blocks, L, first
+        s.rem = req.max_new - 1
+        if first == self.eos_id:
+            s.rem = 0
+        self._tables[w, :] = alloc.table_row(blocks)
+        if s.rem == 0:
+            self._retire(w)
+
+    def _row_arrays(self):
+        """Device-side per-slot vectors rebuilt from the host mirror."""
+        W = self.W
+        toks = np.zeros(W, np.int32)
+        pos = np.zeros(W, np.int32)
+        rem = np.zeros(W, np.int32)
+        temps = np.zeros(W, np.float32)
+        topks = np.zeros(W, np.int32)
+        topps = np.ones(W, np.float32)
+        seeds = np.zeros(W, np.int32)
+        for w, s in enumerate(self.slots):
+            if s.free:
+                continue
+            toks[w], pos[w], rem[w] = s.tok, s.pos, s.rem
+            sp = s.req.sampling
+            temps[w], topks[w] = sp.temperature, sp.top_k
+            topps[w], seeds[w] = sp.top_p, sp.seed
+        put = lambda a: jax.device_put(a, self._vec_sh)
+        return (put(toks), put(pos), put(rem), put(temps), put(topks),
+                put(topps), put(seeds))
+
+    def step(self) -> int:
+        """Admit waiting requests, decode one chunk, retire finished
+        slots.  Returns the number of tokens emitted."""
+        self._admit()
+        active = [w for w, s in enumerate(self.slots) if not s.free]
+        self.metrics.gauge("serve.batch_fill").set(len(active) / self.W)
+        self.metrics.gauge("serve.kv_util").set(
+            max(a.utilization for a in self.allocators))
+        if not active:
+            return 0
+        toks, pos, rem, temps, topks, topps, seeds = self._row_arrays()
+        tables = jax.device_put(self._tables, self._tab_sh)
+        try:
+            self.pool_k, self.pool_v, outs = self._decode_fn(
+                self.server.params, self.pool_k, self.pool_v, tables,
+                toks, pos, rem, temps, topks, topps, seeds)
+            outs = np.asarray(outs)              # ONE host sync per chunk
+        except Exception as e:                   # noqa: BLE001 — delivered
+            for w in active:
+                self._fail(self.slots[w].req, e)
+                self.allocators[w // self.W_local].free(self.slots[w].blocks)
+                self._tables[w, :] = SCRATCH_BLOCK
+                self.slots[w] = _Slot()
+            self.pool_k, self.pool_v = self._init_pool()
+            return 0
+        emitted = 0
+        for w in active:
+            s = self.slots[w]
+            # replay the device transition on the host mirror
+            for t in range(self.chunk):
+                tok = int(outs[t, w])
+                if tok < 0:
+                    break
+                emitted += 1
+                s.req.tokens.append(tok)
+                s.tok, s.pos, s.rem = tok, s.pos + 1, s.rem - 1
+                if tok == self.eos_id:
+                    s.rem = 0
+                if s.rem == 0:
+                    break
+            if s.rem == 0:
+                self._retire(w)
+        return emitted
+
+    @property
+    def idle(self) -> bool:
+        return (self.queue.empty() and not self._backlog
+                and all(s.free for s in self.slots))
+
+    def run_until_idle(self, max_steps: int = 100_000) -> int:
+        total = 0
+        for _ in range(max_steps):
+            total += self.step()
+            if self.idle:
+                return total
+        raise RuntimeError("run_until_idle: engine did not drain")
+
+    def generate_batch(self, prompts: list[np.ndarray], max_new: int,
+                       sampling: SamplingParams | None = None
+                       ) -> list[np.ndarray]:
+        """Convenience: submit all, drain, return per-request tokens
+        (raises the first per-request error, if any)."""
+        dones = [self.submit(p, max_new, sampling) for p in prompts]
+        self.run_until_idle()
+        out = []
+        for d in dones:
+            r = d.get_nowait()
+            if isinstance(r, Exception):
+                raise r
+            out.append(r)
+        return out

@@ -43,6 +43,12 @@ from repro.sim.engine import (
     simulate_pipelined,
 )
 from repro.sim.netmodel import DCN, ICI, LinkModel, NetworkModel, default_network
+from repro.sim.serve import (
+    DecodeModel,
+    plan_decode,
+    rank_decode_plans,
+    simulate_decode,
+)
 from repro.sim.trace import (
     ascii_timeline,
     chrome_trace,
@@ -53,6 +59,7 @@ from repro.sim.trace import (
 __all__ = [
     "ComputeModel",
     "DCN",
+    "DecodeModel",
     "HardwareModel",
     "ICI",
     "LinkModel",
@@ -75,10 +82,13 @@ __all__ = [
     "grid_search",
     "last_auto_report",
     "plan_auto",
+    "plan_decode",
+    "rank_decode_plans",
     "rank_step_plans",
     "rank_strategies",
     "sim_config_for",
     "simulate",
+    "simulate_decode",
     "simulate_pipelined",
     "simulate_strategy",
     "write_chrome_trace",

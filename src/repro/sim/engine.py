@@ -34,6 +34,7 @@ import numpy as np
 from repro.core.schedule import (
     ALLREDUCE,
     ALL_GATHER,
+    DECODE,
     NORM,
     REDUCE_SCATTER,
     REGROUP,
@@ -206,6 +207,13 @@ def simulate(
         if op.kind == UPDATE:
             # sharded optimizer math: an HBM pass over the 1/group shard
             return compute.update.update_time(nbytes / group_of(op))
+        if op.kind == DECODE:
+            # decode-step compute for one node: memory-bandwidth-bound at
+            # batch≈1 — an HBM pass over the node's LOCAL param bytes
+            # (op.bucket.size carries the local element count); reuse the
+            # UpdateModel's HBM bandwidth with a 1-read pass
+            return (nbytes / compute.update.hbm_bw
+                    + compute.update.overhead)
         if op.kind in (NORM, REGROUP):
             # scalar psum (squared norms / the regroup barrier):
             # latency-bound allreduce

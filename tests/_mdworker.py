@@ -504,4 +504,88 @@ for strat in ("concom", "rsag"):
           abs(tl_m.step_time - sum(e.duration for e in tl_m.events))
           < 1e-9)
 
+# 13. continuous-batching serving (DESIGN.md §14) at dp=2 × tp=4: the
+#     paged engine must match the static path bit-for-bit under greedy
+#     on real process groups (vocab sharded over tp=4, slots over dp=2),
+#     and the vocab-sharded samplers must keep their tie-break and
+#     per-request seed contracts across shards.
+from repro.runtime import (ContinuousScheduler, SamplingParams, Server,
+                           sharded_argmax, sharded_sample)
+
+mk_serve = lambda: tf.TransformerConfig(
+    name="dense", n_layers=2, d_model=64, n_heads=8, kv_heads=4, d_ff=128,
+    vocab=96, tp=4, attn_chunk=16, dtype=jnp.float32)
+
+# sharded_argmax tie-break: equal maxima on shards 1 and 3 → the LOWEST
+# shard (and lowest index within it) must win, deterministically
+_v_local = 96 // 4
+_tie = np.full((2, 96), -5.0, np.float32)
+_tie[:, 1 * _v_local + 3] = 7.0          # shard 1, local index 3
+_tie[:, 3 * _v_local + 0] = 7.0          # shard 3, local index 0
+_tie[0, 1 * _v_local + 5] = 7.0          # row 0: another tie inside shard 1
+
+
+def _run_argmax(logits):
+    return jax.jit(lambda l: jax.shard_map(
+        lambda x: sharded_argmax(x, 4), mesh=mesh8,
+        in_specs=(P(None, "model"),), out_specs=P(),
+        check_vma=False)(l))(jnp.asarray(logits))
+
+
+_am = np.asarray(_run_argmax(_tie))
+check("serve-argmax-tiebreak-lowest-shard",
+      _am[0] == 1 * _v_local + 3 and _am[1] == 1 * _v_local + 3)
+
+# sharded_sample at temperature 0 ≡ sharded_argmax (ties included)
+_rng_s = np.random.default_rng(3)
+_rand = _rng_s.normal(size=(4, 96)).astype(np.float32)
+_rand[2] = _tie[0, :]                      # one all-tied row in the batch
+
+
+def _run_sample(logits, temps, topks, topps, seeds):
+    def body(l, t, k, p, s):
+        keys = jax.vmap(jax.random.PRNGKey)(s)
+        return sharded_sample(l, 4, keys, t, k, p)
+    return jax.jit(lambda *a: jax.shard_map(
+        body, mesh=mesh8, in_specs=(P(None, "model"),) + (P(),) * 4,
+        out_specs=P(), check_vma=False)(*a))(
+        jnp.asarray(logits), jnp.asarray(temps), jnp.asarray(topks),
+        jnp.asarray(topps), jnp.asarray(seeds))
+
+
+_z4 = np.zeros(4, np.float32)
+_s0 = _run_sample(_rand, _z4, np.zeros(4, np.int32), np.ones(4, np.float32),
+                  np.arange(4, dtype=np.uint32))
+check("serve-sample-temp0-equals-argmax",
+      np.array_equal(np.asarray(_s0), np.asarray(_run_argmax(_rand))))
+
+# the paged continuous-batching engine vs the static Server, end to end
+scfg = mk_serve()
+sparams = family_of(scfg).init(jax.random.PRNGKey(7), scfg)
+srv8 = Server(scfg, mesh8, sparams, max_len=64)
+eng8 = ContinuousScheduler(srv8, slots=8, block_size=16, chunk=4)
+
+_rng_p = np.random.default_rng(11)
+sprompts = [_rng_p.integers(1, 96, size=int(L)).astype(np.int32)
+            for L in (5, 12, 17, 3, 30, 9)]
+souts = eng8.generate_batch(sprompts, 10)
+_exact = all(
+    np.array_equal(srv8.generate(np.tile(p[None], (2, 1)), 10)[0], o)
+    for p, o in zip(sprompts, souts))
+check("serve-paged-greedy-bitexact-vs-static", _exact)
+
+ssp = SamplingParams(temperature=0.8, top_k=8, seed=42)
+sa = eng8.generate_batch(sprompts[:3], 10, ssp)
+sb = eng8.generate_batch(sprompts[:3], 10, ssp)
+check("serve-sample-seed-reproducible",
+      all(np.array_equal(x, y) for x, y in zip(sa, sb)))
+sc = eng8.generate_batch(sprompts[:3], 10,
+                         SamplingParams(temperature=0.8, top_k=8, seed=9))
+check("serve-sample-seed-differs",
+      any(not np.array_equal(x, y) for x, y in zip(sa, sc)))
+sk1 = eng8.generate_batch(sprompts[:3], 10,
+                          SamplingParams(temperature=0.9, top_k=1, seed=3))
+check("serve-sample-topk1-equals-greedy",
+      all(np.array_equal(x, y) for x, y in zip(sk1, souts[:3])))
+
 print("DONE", flush=True)
