@@ -2,7 +2,7 @@
 PY ?= python
 
 .PHONY: test test-dev bench bench-smoke schedule dryrun sim-smoke analyze \
-	lint trace-smoke calibrate-smoke elastic-smoke serve-smoke
+	lint trace-smoke calibrate-smoke elastic-smoke serve-smoke pp-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -23,6 +23,13 @@ bench:
 # monolithic at accum M∈{1,4}); all CI artifacts
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --sections pack,step,pipeline
+
+# pipeline-parallel benchmark (DESIGN.md §15) → BENCH_pp.json: measured
+# GPipe-vs-1F1B wall at dp2×stage2×tp2 (8 fake devices, subprocess) +
+# simulated bubble-fraction rows and the acceptance booleans (1F1B
+# bubble strictly below GPipe at M>=S; auto never worse than fixed)
+pp-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --sections pp
 
 schedule:
 	PYTHONPATH=src $(PY) -m benchmarks.schedule_analysis

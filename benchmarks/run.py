@@ -478,6 +478,164 @@ def bench_pipeline(emit):
              zero1_exposed_us=bz * 1e6, strictly_below=bool(bd < bz))
 
 
+PP_WORKER = r'''
+import os, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import warnings; warnings.filterwarnings("ignore")
+import repro  # applies the jaxcompat shim before jax imports
+import jax, jax.numpy as jnp
+from repro.core import GradSyncConfig
+from repro.data import TokenPipeline
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import transformer as tf
+from repro.models.registry import family_of
+from repro.optim import adamw
+from repro.runtime import make_train_step
+
+cfg = tf.TransformerConfig(
+    name="dense", n_layers=2, d_model=64, n_heads=8, kv_heads=2,
+    d_ff=128, vocab=96, tp=2, attn_chunk=16, dtype=jnp.float32)
+mesh = make_smoke_mesh(2, 2, stage=2)
+params = family_of(cfg).init(jax.random.PRNGKey(0), cfg)
+pipe = TokenPipeline(96, 32, 8, seed=7, mesh=mesh)
+out = {}
+for sched in ("gpipe", "1f1b"):
+    ts = make_train_step(
+        cfg, mesh, GradSyncConfig(strategy="concom",
+                                  bucket_bytes=1 << 12),
+        adamw(1e-3), batch_like=pipe.batch_at(0), params_like=params,
+        clip_norm=0.0, microbatch=4, pp_stages=2, pp_schedule=sched)
+    ps = jax.device_put(params, ts.shardings(ts.param_specs))
+    st = ts.init_opt()
+    ps, st, _ = ts.fn(ps, st, pipe.batch_at(0), jnp.int32(0))  # warmup
+    jax.block_until_ready(ps)
+    reps = 5
+    t0 = time.perf_counter()
+    for k in range(reps):
+        ps, st, m = ts.fn(ps, st, pipe.batch_at(k + 1), jnp.int32(k + 1))
+    jax.block_until_ready(ps)
+    out[sched] = (time.perf_counter() - t0) / reps * 1e6
+    out[sched + "_loss"] = float(m["loss"])
+print("PPBENCH " + json.dumps(out))
+'''
+
+
+def bench_pp(emit):
+    """§15 pipeline-parallel benchmark → BENCH_pp.json.
+
+    Measured: GPipe vs 1F1B wall per train step at dp2 × stage2 × tp2,
+    M=4 microbatches, on 8 fake CPU devices (subprocess — the main
+    process pins 1 device; CPU walls order overhead, not bubbles).
+    Simulated: analytic wall + bubble fraction per schedule at
+    M ∈ {2, 4, 8} under the calibration-default network's stage hop,
+    the joint ``pp:<sched>:<strategy>`` ranking at M=4, and the
+    acceptance booleans — 1F1B bubble strictly below GPipe at M >= S,
+    and the ``auto`` pick never worse than the best fixed schedule.
+    """
+    import subprocess
+    import sys
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.pipeline_program import plan_pipeline
+    from repro.core.stepprogram import zero1_bucket_plan
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import transformer as tf
+    from repro.models.registry import family_of
+    from repro.sim import compute_model_for
+    from repro.sim.autotune import choose_pp_schedule, rank_step_plans
+    from repro.sim.compute import pipeline_timeline
+    from repro.sim.netmodel import default_network
+
+    S = 2
+    cfg = tf.TransformerConfig(
+        name="dense", n_layers=2, d_model=64, n_heads=8, kv_heads=2,
+        d_ff=128, vocab=96, tp=2, attn_chunk=16, dtype=jnp.float32)
+    mesh_shape = {"data": 2, "stage": 2, "model": 2}
+    whole = compute_model_for(cfg, global_batch=8, seq_len=32,
+                              n_devices=8)
+    net = default_network()
+
+    bubble_ok = True
+    auto_ok = True
+    for M in (2, 4, 8):
+        act = (8 // 2 // M if M <= 4 else 1) * 32 * 64 * 4
+        wire = net.p2p_time(act, "stage", mesh_shape)
+        walls, bubbles = {}, {}
+        for sched in ("gpipe", "1f1b"):
+            tl = pipeline_timeline(
+                plan_pipeline(S, M, kind=sched, activation_bytes=act),
+                whole, wire_time=wire)
+            walls[sched], bubbles[sched] = tl.wall, tl.bubble_fraction
+            emit(f"pp_sim_{sched}_m{M}", tl.wall * 1e6,
+                 f"bubble{tl.bubble_fraction:.4f}",
+                 schedule=sched, microbatches=M, stages=S,
+                 simulated_wall_us=tl.wall * 1e6,
+                 bubble_fraction=round(tl.bubble_fraction, 6))
+        if M >= S:
+            bubble_ok &= bubbles["1f1b"] < bubbles["gpipe"]
+        pick = choose_pp_schedule(
+            S, M, activation_bytes=act, compute=whole, net=net,
+            mesh_shape=mesh_shape)
+        auto_ok &= walls[pick] <= min(walls.values()) + 1e-12
+        emit(f"pp_sim_auto_pick_m{M}", walls[pick] * 1e6, pick,
+             microbatches=M, pick=pick,
+             never_worse=bool(walls[pick]
+                              <= min(walls.values()) + 1e-12))
+    emit("pp_sim_1f1b_bubble_below_gpipe", 0,
+         f"pass={bubble_ok}", strictly_below=bool(bubble_ok))
+    emit("pp_sim_auto_never_worse_than_fixed", 0,
+         f"pass={auto_ok}", never_worse=bool(auto_ok))
+
+    # joint pipeline × zero1 ranking on the real dp bucket plan
+    params = family_of(cfg).init(jax.random.PRNGKey(0), cfg)
+    pspecs = family_of(cfg).param_rules(cfg).tree_specs(params)
+    mesh = make_smoke_mesh(1, 1)
+    dp_plan = zero1_bucket_plan(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                     params),
+        pspecs, mesh, dp_axes=("data",), bucket_bytes=1 << 16)
+    act4 = 1 * 32 * 64 * 4
+    ranked = rank_step_plans(
+        dp_plan, mesh_shape, dp_axes=("data",), compute=whole,
+        pp={"stages": S, "microbatches": 4, "activation_bytes": act4})
+    pp_rows = [(n, tl) for n, tl in ranked if n.startswith("pp:")]
+    for name, tl in pp_rows[:4]:
+        emit(f"pp_rank_{name.replace(':', '_')}", tl.step_time * 1e6,
+             f"exposed{tl.exposed_comm * 1e6:.0f}us", plan=name,
+             simulated_step_us=tl.step_time * 1e6,
+             simulated_exposed_us=tl.exposed_comm * 1e6,
+             overlap=round(tl.overlap_fraction, 3))
+
+    # measured walls on real stage process groups (subprocess)
+    with tempfile.NamedTemporaryFile("w", suffix=".py",
+                                     delete=False) as f:
+        f.write(PP_WORKER)
+        path = f.name
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run([sys.executable, path], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    os.unlink(path)
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("PPBENCH ")]
+    if proc.returncode != 0 or not line:
+        emit("pp_meas_failed", 0,
+             (proc.stderr or "no output")[-160:].replace(",", ";"))
+        return
+    meas = json.loads(line[0][len("PPBENCH "):])
+    for sched in ("gpipe", "1f1b"):
+        emit(f"pp_meas_{sched}_wall", meas[sched],
+             f"loss{meas[sched + '_loss']:.3f}", schedule=sched,
+             microbatches=4, stages=S, measured_wall_us=meas[sched])
+    emit("pp_meas_1f1b_vs_gpipe", 0,
+         f"wall{meas['gpipe'] / meas['1f1b']:.2f}x",
+         wall_ratio=round(meas["gpipe"] / meas["1f1b"], 3))
+
+
 def bench_roofline_summary(emit):
     path = "results/dryrun.json"
     if not os.path.exists(path):
@@ -507,6 +665,7 @@ SECTIONS = {
     "pack": bench_pack,
     "step": bench_step,
     "pipeline": bench_pipeline,
+    "pp": bench_pp,
     "roofline": bench_roofline_summary,
 }
 

@@ -22,21 +22,25 @@ from typing import Any, Callable
 import jax.numpy as jnp
 
 from repro.core.buckets import Bucket, BucketPlan, LeafInfo
+from repro.core.pipeline_program import compose_step, plan_pipeline
 from repro.core.registry import get_strategy
 from repro.core.schedule import (
     ALL_GATHER,
     ALLREDUCE,
     POST,
     PRE,
+    RECV,
     REDUCE_SCATTER,
     REGROUP,
     RESHARD,
+    SEND,
     CollectiveOp,
     CommSchedule,
 )
 from repro.core.stepprogram import zero1_schedule
 
 MESH = {"data": 8}
+PP_MESH = {"data": 8, "stage": 2}
 OLD_MESH_RS = {"data": 2, "model": 4}
 NEW_MESH_RS = {"data": 2, "model": 2}
 
@@ -293,6 +297,52 @@ def _reshard_op_escapes_regroup():
             dict(_RS_CTX))
 
 
+def _pp_unmatched_send():
+    # the final RECV of a 2-stage GPipe round dropped: the cotangent the
+    # last stage packed is never delivered — stage 0 waits forever
+    s = plan_pipeline(2, 1, kind="gpipe", activation_bytes=64).schedule
+    assert s.ops[-1].kind == RECV
+    return CommSchedule(s.ops[:-1]), {"mesh_shape": PP_MESH}
+
+
+def _pp_bucket(bid: int, name: str) -> Bucket:
+    return Bucket(
+        leaves=(LeafInfo(name=name, index=0, shape=(16,),
+                         dtype=jnp.float32, size=16),),
+        reduce_axes=("stage",), channel=0, bucket_id=bid,
+        comm_dtype=jnp.float32)
+
+
+def _pp_crossed_pairs():
+    # two boundary crossings interleaved recv-first on both chains:
+    # each pair's send transitively waits on the OTHER pair's recv, so
+    # neither payload is ever packed (pair B's data edge is necessarily
+    # missing — with it the crossing would be an outright cycle)
+    ba, bb = _pp_bucket(0, "pp/act/a"), _pp_bucket(1, "pp/act/b")
+    ops = (
+        CollectiveOp(op_id=0, bucket=bb, chain=1, kind=RECV, shift=1),
+        CollectiveOp(op_id=1, bucket=ba, chain=0, depends_on=(0,),
+                     kind=SEND, shift=1),
+        CollectiveOp(op_id=2, bucket=ba, chain=1, depends_on=(1,),
+                     kind=RECV, shift=1),
+        CollectiveOp(op_id=3, bucket=bb, chain=0, depends_on=(2,),
+                     kind=SEND, shift=1),
+    )
+    return CommSchedule(ops), {"mesh_shape": PP_MESH}
+
+
+def _pp_boundary_bytes():
+    # the RECV's bucket half the SEND's size: the two stages disagree on
+    # the boundary tensor — the delivered activation would be truncated
+    s = plan_pipeline(2, 1, kind="gpipe", activation_bytes=64).schedule
+    rcv = next(op for op in s.ops if op.kind == RECV)
+    leaf = rcv.bucket.leaves[0]
+    half = dataclasses.replace(leaf, shape=(leaf.size // 2,),
+                               size=leaf.size // 2)
+    bad = dataclasses.replace(rcv.bucket, leaves=(half,))
+    return _replace_op(s, rcv.op_id, bucket=bad), {"mesh_shape": PP_MESH}
+
+
 def _donated_pre_read():
     s = _zero1(defer=True)
     pre = next(op for op in s.ops if op.phase == PRE)
@@ -352,6 +402,15 @@ MUTATIONS: tuple[Mutation, ...] = (
     Mutation("unknown-reducer", "accounting", "unknown-reducer",
              "op tagged with an unregistered reducer",
              _unknown_reducer),
+    Mutation("pp-unmatched-send", "deadlock", "send-unmatched",
+             "a pipeline SEND whose RECV was dropped — the payload is "
+             "packed but never delivered", _pp_unmatched_send),
+    Mutation("pp-crossed-pairs", "deadlock", "crossed-send-recv",
+             "two SEND/RECV pairs crossed recv-first on both chains "
+             "(mutual rendezvous wait)", _pp_crossed_pairs),
+    Mutation("pp-boundary-bytes", "accounting", "send-recv-bytes",
+             "stage-boundary RECV sized differently from its SEND",
+             _pp_boundary_bytes),
     Mutation("donated-pre-read", "donation", "donated-pre-read",
              "deferred gather reads a bucket whose buffer is donated",
              _donated_pre_read),
@@ -387,4 +446,14 @@ def valid_cases() -> list[tuple[str, CommSchedule, dict[str, Any]]]:
                  "plan_comm_dtype": jnp.float32}))
     out.append(("reshard-transition", synthetic_reshard_schedule(),
                 dict(_RS_CTX)))
+    for kind in ("gpipe", "1f1b"):
+        pp = plan_pipeline(2, 4, kind=kind, activation_bytes=64)
+        out.append((f"pp-{kind}", pp.schedule,
+                    {"mesh_shape": PP_MESH, "expect_defer": False,
+                     "plan_comm_dtype": jnp.float32}))
+    pp = plan_pipeline(2, 4, kind="1f1b", activation_bytes=64)
+    joint, _ = compose_step(pp, _zero1("concom", defer=False))
+    out.append(("pp-1f1b-zero1-joint", joint,
+                {"mesh_shape": PP_MESH, "expect_defer": False,
+                 "plan_comm_dtype": jnp.float32}))
     return out

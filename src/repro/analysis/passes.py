@@ -27,9 +27,11 @@ from repro.core.schedule import (
     PHASES,
     POST,
     PRE,
+    RECV,
     REDUCE_SCATTER,
     REGROUP,
     RESHARD,
+    SEND,
     UPDATE,
     CommSchedule,
     np_itemsize,
@@ -276,6 +278,110 @@ def check_deadlock(schedule: CommSchedule) -> list[Finding]:
                     (a.op_id, b.op_id),
                     Witness(f"unordered writers of leaf {name!r}:",
                             (_op_str(a), _op_str(b)))))
+
+    out.extend(_check_rendezvous(schedule, anc, pos))
+    return out
+
+
+def _check_rendezvous(schedule: CommSchedule, anc, pos) -> list[Finding]:
+    """SEND/RECV pairing and rendezvous deadlock (DESIGN.md §15).
+
+    A boundary crossing is ONE ppermute executed at the RECV: every SEND
+    needs exactly one RECV on the same bucket (and vice versa), and the
+    RECV must carry the SEND in ``depends_on`` — the payload's data
+    edge, which also makes a crossed rendezvous unconstructible (the
+    recv can never precede its send).  When the data edges are missing,
+    two pairs can still CROSS: each pair's send transitively waits on
+    the OTHER pair's recv, so neither payload is ever packed — each hop
+    blocks on a payload only the other hop's completion would produce.
+    The op-level graph is acyclic (adding the data edges back closes
+    the cycle), so this is checked pairwise on ancestor reachability.
+    """
+    sends = [op for op in schedule.ops if op.kind == SEND]
+    recvs = [op for op in schedule.ops if op.kind == RECV]
+    if not sends and not recvs:
+        return []
+    out: list[Finding] = []
+    s_by_bucket: dict[int, list] = {}
+    r_by_bucket: dict[int, list] = {}
+    for op in sends:
+        s_by_bucket.setdefault(op.bucket.bucket_id, []).append(op)
+    for op in recvs:
+        r_by_bucket.setdefault(op.bucket.bucket_id, []).append(op)
+
+    for bid, ops in sorted(s_by_bucket.items()):
+        n_recv = len(r_by_bucket.get(bid, ()))
+        if len(ops) > 1 or n_recv > 1:
+            out.append(Finding(
+                "deadlock", "send-unmatched",
+                f"bucket {bid} carries {len(ops)} SEND / {n_recv} RECV "
+                f"op(s) — a boundary crossing is exactly one matched "
+                f"pair per bucket",
+                tuple(o.op_id for o in ops)))
+        elif n_recv == 0:
+            out.append(Finding(
+                "deadlock", "send-unmatched",
+                f"SEND {ops[0].op_id} (bucket {bid}) has no matching "
+                f"RECV — the packed payload is never moved and the "
+                f"receiving stage waits forever",
+                (ops[0].op_id,),
+                Witness("send without a receiver:", (_op_str(ops[0]),))))
+    for bid, ops in sorted(r_by_bucket.items()):
+        if bid not in s_by_bucket:
+            out.append(Finding(
+                "deadlock", "recv-unmatched",
+                f"RECV {ops[0].op_id} (bucket {bid}) has no matching "
+                f"SEND — there is no payload to move; the ppermute "
+                f"blocks every rank of the stage axis",
+                tuple(o.op_id for o in ops),
+                Witness("recv without a sender:", (_op_str(ops[0]),))))
+
+    pairs: list[tuple] = []            # (send, recv) matched 1:1
+    for bid, ops in sorted(s_by_bucket.items()):
+        rs = r_by_bucket.get(bid, ())
+        if len(ops) == 1 and len(rs) == 1:
+            snd, rcv = ops[0], rs[0]
+            if snd.op_id not in rcv.depends_on:
+                out.append(Finding(
+                    "deadlock", "recv-missing-send-edge",
+                    f"RECV {rcv.op_id} does not depend on its SEND "
+                    f"{snd.op_id} (bucket {bid}) — the hop may execute "
+                    f"before the payload is packed",
+                    (rcv.op_id, snd.op_id),
+                    Witness("pair without the payload data edge:",
+                            (_op_str(snd), _op_str(rcv)))))
+            if snd.shift != rcv.shift or \
+                    snd.bucket.reduce_axes != rcv.bucket.reduce_axes:
+                out.append(Finding(
+                    "deadlock", "send-recv-shift-mismatch",
+                    f"SEND {snd.op_id} (shift={snd.shift}, "
+                    f"axes={snd.bucket.reduce_axes}) and RECV "
+                    f"{rcv.op_id} (shift={rcv.shift}, "
+                    f"axes={rcv.bucket.reduce_axes}) disagree on the "
+                    f"hop — the two halves describe different "
+                    f"ppermutes", (snd.op_id, rcv.op_id)))
+            pairs.append((snd, rcv))
+
+    # crossed rendezvous: pair A's send waits on pair B's recv AND pair
+    # B's send waits on pair A's recv — with the data edges this would
+    # be a cycle (caught above); without them only this pairwise
+    # reachability check sees it.  Valid plans always carry the data
+    # edges, which make t(recv) ≥ t(send) and the pattern impossible.
+    for i, (sa, ra) in enumerate(pairs):
+        for sb, rb in pairs[i + 1:]:
+            if _reaches(anc, pos, rb.op_id, sa.op_id) and \
+                    _reaches(anc, pos, ra.op_id, sb.op_id):
+                out.append(Finding(
+                    "deadlock", "crossed-send-recv",
+                    f"SEND/RECV pairs (buckets "
+                    f"{sa.bucket.bucket_id}, {sb.bucket.bucket_id}) "
+                    f"are crossed: each pair's send transitively waits "
+                    f"on the other pair's recv, so neither payload is "
+                    f"ever packed — both hops block forever",
+                    (sa.op_id, ra.op_id, sb.op_id, rb.op_id),
+                    Witness("crossed rendezvous pairs:",
+                            (_op_str(sa), _op_str(ra),
+                             _op_str(sb), _op_str(rb)))))
     return out
 
 
@@ -298,6 +404,12 @@ def reducer_stages(op, default_reducer: str = "flat",
     axes = op.bucket.reduce_axes
     if op.kind in (UPDATE, DECODE):
         return ()                       # local math, no wire payload
+    if op.kind == SEND:
+        return ()                       # local pack; the RECV hops
+    if op.kind == RECV:
+        # the pair's single wire event: the ppermute every rank of the
+        # stage axis joins at the RECV
+        return (("ppermute", axes),)
     if op.kind != ALLREDUCE:
         return ((op.kind, axes),)
     fam = _family(op.reducer or default_reducer)
@@ -664,6 +776,30 @@ def check_accounting(schedule: CommSchedule, *,
                         f"all-gather {op.op_id} ({da.name}) and its "
                         f"producer {src.op_id} ({db.name}) disagree on "
                         f"the wire dtype", (op.op_id, src.op_id)))
+
+        if op.kind == RECV:
+            srcs = [by_id[d] for d in op.depends_on if d in by_id
+                    and by_id[d].kind == SEND
+                    and by_id[d].bucket.bucket_id == op.bucket.bucket_id]
+            for src in srcs:
+                if src.bucket.size != op.bucket.size:
+                    out.append(Finding(
+                        "accounting", "send-recv-bytes",
+                        f"stage boundary bucket {op.bucket.bucket_id}: "
+                        f"SEND {src.op_id} packs {src.bucket.size} "
+                        f"elements but RECV {op.op_id} delivers "
+                        f"{op.bucket.size} — the two halves of the hop "
+                        f"disagree on the payload size",
+                        (src.op_id, op.op_id),
+                        Witness("asymmetric stage boundary:",
+                                (_op_str(src), _op_str(op)))))
+                da, db = eff_dtype(op.bucket), eff_dtype(src.bucket)
+                if da is not None and db is not None and da != db:
+                    out.append(Finding(
+                        "accounting", "send-recv-dtype",
+                        f"RECV {op.op_id} ({da.name}) and its SEND "
+                        f"{src.op_id} ({db.name}) disagree on the "
+                        f"boundary wire dtype", (op.op_id, src.op_id)))
 
     # bookkeeping self-consistency: the stats the sim/benchmarks consume
     itemsize = 4 if plan_comm_dtype is None else \

@@ -7,6 +7,14 @@ from repro.core.buckets import Bucket, BucketPlan, make_bucket_plan
 from repro.core.dependency import chain, gate, new_token, update
 from repro.core.kvstore import GradSync, GradSyncConfig, KVStore
 from repro.core.overlap import scan_layers, sync_in_backward
+from repro.core.pipeline_program import (
+    PipelinePlan,
+    Slot,
+    bucket_stage_map,
+    compose_step,
+    max_in_flight,
+    plan_pipeline,
+)
 from repro.core.registry import (
     StrategyInfo,
     fixed_strategy_names,
@@ -74,14 +82,18 @@ __all__ = [
     "GradSyncConfig",
     "KVStore",
     "NetworkModel",
+    "PipelinePlan",
     "REDUCERS",
     "STRATEGIES",
     "SimConfig",
+    "Slot",
     "StepProgram",
     "StrategyInfo",
     "Timeline",
+    "bucket_stage_map",
     "build_step_program",
     "chain",
+    "compose_step",
     "compute_model_for",
     "default_network",
     "emit_gated",
@@ -93,7 +105,9 @@ __all__ = [
     "grid_search",
     "make_bucket_plan",
     "make_reducer",
+    "max_in_flight",
     "new_token",
+    "plan_pipeline",
     "rank_strategies",
     "reducer_names",
     "register_reducer",

@@ -70,6 +70,13 @@ class GradSyncConfig:
     # auto ranks schedules on comm alone (ComputeModel(0, 0)) and the
     # deferred family has no forward window to hide its gathers under
     sim_compute: Any = None
+    # pipeline context (DESIGN.md §15): stages > 1 → meta strategies
+    # rank pipeline × zero1 × accum jointly (``pp:<sched>:<strategy>``
+    # rows); the train step fills these from its resolved pipeline plan
+    pp_stages: int = 1
+    pp_schedule: str = "auto"        # "auto" | "gpipe" | "1f1b"
+    pp_microbatches: int = 0         # 0 → derived (accum, else 2·stages)
+    pp_activation_bytes: int = 0     # stage-boundary payload per hop
     # static analysis (DESIGN.md §11): run the five repro.analysis
     # passes over the planned schedule and raise ScheduleError (with a
     # printable witness) instead of deadlocking at run time / failing
@@ -132,6 +139,13 @@ class GradSync:
                 "fused_staging": cfg.use_fused_staging,
                 "compute": cfg.sim_compute,
             }
+            if cfg.pp_stages > 1:
+                plan_kw["context"]["pp"] = {
+                    "stages": cfg.pp_stages,
+                    "schedule": cfg.pp_schedule,
+                    "microbatches": cfg.pp_microbatches,
+                    "activation_bytes": cfg.pp_activation_bytes,
+                }
         # the strategy's dependency structure, planned once, inspectable
         self.schedule: CommSchedule = self.info.plan(
             self.plan, skip_names=self.skip_names, **plan_kw)

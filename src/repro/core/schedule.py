@@ -63,12 +63,26 @@ DECODE = "decode"    # local decode math for one layer group / the lm_head:
 #                      no wire payload (its tp collectives are explicit
 #                      ALLREDUCE/ALL_GATHER ops downstream); the sim costs
 #                      it as an HBM pass over the node's local param bytes
+# pipeline-parallel (DESIGN.md §15) kinds — one stage boundary crossing is
+# a matched SEND/RECV pair over the "stage" axis.  Under SPMD the wire
+# move is a single ppermute every stage rank issues; the pair is two
+# schedule nodes so each side carries its own deps (sender's compute,
+# receiver's readiness) and its own token.  Pairing is by bucket_id: a
+# SEND and the RECV with the same bucket_id are the two halves of one
+# transfer, and the RECV must list its SEND in ``depends_on`` (the data
+# edge the payload rides).  ``CollectiveOp.shift`` is the ppermute hop:
+# +1 moves payload to the next stage (forward activations), -1 to the
+# previous stage (backward cotangents).
+SEND = "send"        # pack the boundary payload, park it for the pair
+RECV = "recv"        # execute the ppermute hop, deliver into the leaves
 
 KINDS = (ALLREDUCE, REDUCE_SCATTER, ALL_GATHER, UPDATE, NORM,
-         RESHARD, REGROUP, DECODE)
+         RESHARD, REGROUP, DECODE, SEND, RECV)
 # kinds that move a bucket's payload over the wire exactly once (RS/AG
-# pairs are counted at the RS; UPDATE is local math, NORM a scalar)
+# pairs are counted at the RS; SEND/RECV pairs at the SEND; UPDATE is
+# local math, NORM a scalar)
 _WIRE_KINDS = (ALLREDUCE, REDUCE_SCATTER)
+_PAYLOAD_KINDS = _WIRE_KINDS + (SEND,)
 
 # execution phases (pipelined StepProgram, DESIGN.md §10): POST ops run
 # after this step's backward produced their inputs; PRE ops are DEFERRED
@@ -91,6 +105,8 @@ class CollectiveOp:
     kind: str = ALLREDUCE
     reducer: str = ""                   # registered reducer tag; "" = default
     phase: str = POST                   # POST (same step) | PRE (next step)
+    shift: int = 1                      # SEND/RECV only: ppermute hop along
+    #                                     the stage axis (+1 next, -1 prev)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,16 +142,17 @@ class CommSchedule:
 
     def comm_bytes(self, itemsize: int = 4) -> int:
         """Total payload bytes moved (RS/AG pairs counted once — they move
-        one bucket between them; UPDATE/NORM ops move no payload)."""
+        one bucket between them; SEND/RECV pairs once at the SEND;
+        UPDATE/NORM ops move no payload)."""
         return sum(op.bucket.size * itemsize for op in self.ops
-                   if op.kind in _WIRE_KINDS)
+                   if op.kind in _PAYLOAD_KINDS)
 
     def chain_bytes(self, itemsize: int = 4) -> dict[int, int]:
         """Payload bytes per dependency chain (the simulator's unit of
         serialization; also what a per-channel bandwidth budget sees)."""
         out: dict[int, int] = {}
         for op in self.ops:
-            if op.kind not in _WIRE_KINDS:
+            if op.kind not in _PAYLOAD_KINDS:
                 continue
             out[op.chain] = out.get(op.chain, 0) + op.bucket.size * itemsize
         return out
@@ -646,6 +663,39 @@ class _OpEmitter:
             if self.aux is not None:
                 self.aux.setdefault("decode_nodes", []).append(
                     op.bucket.bucket_id)
+
+        elif op.kind == SEND:
+            # Pipeline boundary, sender half (DESIGN.md §15): pack the
+            # payload and park it for the matched RECV.  The wire move is
+            # the RECV's ppermute — under SPMD that single collective IS
+            # both halves, so the SEND node contributes the sender-side
+            # deps (the producing stage compute) and the staging pass.
+            buf = self._stage_in(bucket, flat_out)
+            self.tokens[op.op_id] = dep.update(token, buf)
+            self.shards[op.op_id] = (buf, buf.shape[0])
+
+        elif op.kind == RECV:
+            # receiver half: gate on the matched SEND (the same-bucket
+            # dep) plus the receiver-side readiness deps, execute the
+            # ppermute hop, and deliver the payload into the leaves.
+            if len(bucket.reduce_axes) != 1:
+                raise ValueError(
+                    f"recv op {op.op_id}: SEND/RECV ride exactly one "
+                    f"stage axis, got {bucket.reduce_axes!r}")
+            src = self._shard_src(op, "send")
+            buf, _n = self.shards[src]
+            axis = bucket.reduce_axes[0]
+            group = self._group_of(bucket)
+            perm = [(i, (i + op.shift) % group) for i in range(group)]
+
+            def hop(b, _ax=axis, _perm=perm, _g=group):
+                if _g == 1:
+                    return b
+                return jax.lax.ppermute(b, _ax, _perm)
+
+            shifted, self.tokens[op.op_id] = emit_gated(buf, token, hop)
+            self._stage_out(bucket, shifted, 1.0 / self.loss_scale,
+                            flat_out)
 
         else:
             raise ValueError(f"unknown op kind {op.kind!r}")

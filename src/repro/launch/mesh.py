@@ -14,9 +14,19 @@ def make_production_mesh(*, multi_pod: bool = False):
                          axis_types=(AxisType.Auto,) * len(axes))
 
 
-def make_smoke_mesh(data: int = 1, model: int = 1):
+def make_smoke_mesh(data: int = 1, model: int = 1, stage: int = 0):
     """Tiny mesh for CPU tests; axes always present so all collective code
-    paths run (psum over size-1 axes is the identity)."""
+    paths run (psum over size-1 axes is the identity).  ``stage >= 1``
+    inserts a "stage" axis between "data" and "model" — dp×stage×tp,
+    the §15 pipeline smoke topology (extent 1 keeps the staged code path
+    with a trivial pipeline: the bit-exact stage=1 reference).  The
+    default 0 keeps the legacy two-axis mesh."""
+    if stage >= 1:
+        n = data * stage * model
+        return jax.make_mesh(
+            (data, stage, model), ("data", "stage", "model"),
+            axis_types=(AxisType.Auto,) * 3,
+            devices=jax.devices()[:n])
     n = data * model
     return jax.make_mesh(
         (data, model), ("data", "model"),

@@ -53,6 +53,15 @@ def main():
                          "opaque optimizer.update")
     ap.add_argument("--clip-norm", type=float, default=1.0)
     ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--pp-stages", type=int, default=1,
+                    help="pipeline stages over a 'stage' mesh axis "
+                         "(smoke mesh only; --microbatch doubles as the "
+                         "pipeline microbatch count M)")
+    ap.add_argument("--pp-schedule", default="auto",
+                    choices=["auto", "gpipe", "1f1b"],
+                    help="pipeline schedule; auto = argmin of the "
+                         "analytic pipeline wall (repro.sim."
+                         "choose_pp_schedule)")
     ap.add_argument("--no-accum-overlap", action="store_true",
                     help="keep the final microbatch inside the "
                          "accumulation scan (sync waits for the whole "
@@ -74,10 +83,15 @@ def main():
 
     arch = get_arch(args.arch)
     if args.smoke:
-        mesh = make_smoke_mesh(1, 1)
+        mesh = make_smoke_mesh(1, 1, stage=args.pp_stages
+                               if args.pp_stages > 1 else 0)
         cfg = arch.make_smoke()
         seq, batch = args.seq, args.batch
     else:
+        if args.pp_stages > 1:
+            raise SystemExit(
+                "--pp-stages needs the smoke mesh (--smoke); the "
+                "production mesh has no 'stage' axis")
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         cfg = arch.make_config(
             tp=mesh.shape["model"], dp_axes=dp_axes_of(mesh),
@@ -120,7 +134,9 @@ def main():
                          zero1_plan=args.zero1_plan,
                          microbatch=args.microbatch,
                          accum_overlap=not args.no_accum_overlap,
-                         donate=not args.smoke)
+                         donate=not args.smoke,
+                         pp_stages=args.pp_stages,
+                         pp_schedule=args.pp_schedule)
     ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) \
         if args.ckpt_dir else None
     trainer = Trainer(ts, pipe, ckpt, log_every=10,

@@ -27,6 +27,9 @@ class ModelAPI:
     # paged (block-table) decode for the continuous-batching engine;
     # families without it fall back to the static serving path
     decode_paged: Optional[Callable[..., Any]] = None
+    # staged wave-pipeline loss (DESIGN.md §15) for pp_stages > 1;
+    # families without it reject pipeline training
+    pipeline_train_forward: Optional[Callable[..., Any]] = None
 
 
 def _tf_make_state(cfg, batch, max_len):
@@ -56,6 +59,7 @@ FAMILIES: dict[str, ModelAPI] = {
         make_decode_state=_tf_make_state,
         decode_state_specs=tf_lib.decode_state_specs,
         decode_paged=tf_lib.decode_step_paged,
+        pipeline_train_forward=tf_lib.pipeline_train_forward,
     ),
     "rwkv": ModelAPI(
         family="rwkv",

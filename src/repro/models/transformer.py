@@ -417,6 +417,60 @@ def train_forward(params, batch, cfg: TransformerConfig) -> jax.Array:
     return local_sum / batch["global_tokens"] + aux * dp_scale / cfg.n_layers
 
 
+def pipeline_train_forward(params, mbs, cfg: TransformerConfig, *,
+                           n_stages: int, stage_axis: str = "stage"):
+    """Staged wave-pipeline loss (DESIGN.md §15): sum over microbatches
+    of the local-shard loss, nonzero ONLY on the last stage.
+
+    ``mbs`` is the microbatch-split batch tree (leading dim M, the same
+    split the grad-accumulation path uses — ``global_tokens`` already
+    divided by M).  Each device holds ONE stage's slice of the stacked
+    block params (dim 0 sharded over ``stage_axis``); stage 0 embeds the
+    injected microbatch, every stage runs its layer slice, activations
+    hop to the next stage via ppermute, and the last stage runs the head
+    + xent.  The aux (MoE) accumulator rides the activation carry so the
+    last stage folds it into the loss exactly like ``train_forward``.
+
+    The caller psums the result over ``stage_axis`` OUTSIDE the grad —
+    adding the other stages' masked exact zeros, so the staged loss and
+    gradients are bit-identical to a stage=1 run of this same code.
+    """
+    if cfg.n_cross:
+        raise ValueError(
+            "pipeline stages do not support cross-attention layers")
+    tokens = mbs["tokens"]
+    M = tokens.shape[0]
+    B, S = tokens.shape[1:]
+    cos, sin = rope_angles(jnp.arange(S), cfg.hd, cfg.rope_theta)
+    gtok = mbs["global_tokens"]                       # (M,) split scalars
+
+    def inject(m):
+        x = embed_lookup(params["embed"], tokens[m], cfg.tp)
+        x = x.astype(cfg.dtype)
+        if cfg.frame_embeds and "frame_embeds" in mbs:
+            x = x + mbs["frame_embeds"][m].astype(cfg.dtype)
+        return (x, jnp.zeros((), jnp.float32))
+
+    def stage(carry):
+        body = lambda p, c: self_block(p, c, cfg, (cos, sin))
+        return _stack_scan(cfg, body, params["blocks"], carry)
+
+    def head_loss(carry, m):
+        h, aux = carry
+        hn = rms_norm(h, params["ln_f"])
+        logits = hn @ params["lm_head"]
+        per_tok = sharded_softmax_xent(logits, mbs["labels"][m], cfg.tp)
+        dp_scale = (B * S) / gtok[m]
+        return (jnp.sum(per_tok) / gtok[m]
+                + aux * dp_scale / cfg.n_layers)
+
+    from repro.parallel.pipeline import pipeline_wave_loss
+
+    losses = pipeline_wave_loss(inject, stage, head_loss, M,
+                                n_stages=n_stages, axis=stage_axis)
+    return jnp.sum(losses)
+
+
 # ------------------------------------------------------------------ serve
 def prefill(params, tokens, cfg: TransformerConfig, img_embeds=None,
             frame_embeds=None, last_pos=None):

@@ -75,9 +75,18 @@ def adamw(lr: Callable[[jax.Array], jax.Array] | float,
     return Optimizer(init, update)
 
 
-def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+def clip_by_global_norm(
+    grads: Any, max_norm: float,
+    psum_axes: tuple[str, ...] = (),
+) -> tuple[Any, jax.Array]:
+    """Clip by the global grad norm.  ``psum_axes`` sums the squared
+    norm over mesh axes whose shards each hold a disjoint slice of the
+    tree (pipeline stages: each device sees only its layer slice), so
+    every shard applies the same scale."""
     sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
              for g in jax.tree.leaves(grads))
+    if psum_axes:
+        sq = jax.lax.psum(sq, psum_axes)
     norm = jnp.sqrt(sq)
     scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale

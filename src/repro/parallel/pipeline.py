@@ -1,11 +1,20 @@
-"""Pipeline parallelism skeleton: GPipe-style microbatch schedule over a
-"stage" mesh axis, collective-permute for activations between stages.
+"""Pipeline parallelism over a "stage" mesh axis (DESIGN.md §15).
 
-Not used by the assigned shapes (TP×DP covers them — DESIGN.md §5), but
-the mechanism ships tested: stages are a shard_map'd scan over microbatch
-waves where each device holds one stage's params and passes activations
-to its +1 neighbour via ``jax.lax.ppermute``.  Bubble fraction =
-(S−1)/(M+S−1) for S stages, M microbatches.
+Two layers:
+
+- ``pipeline_forward`` — the original GPipe-style inference skeleton:
+  stages are a shard_map'd scan over microbatch waves where each device
+  holds one stage's params and passes activations to its +1 neighbour
+  via ``jax.lax.ppermute``.  Bubble fraction = (S−1)/(M+S−1) for S
+  stages, M microbatches.
+
+- ``pipeline_wave_loss`` — the differentiable training counterpart used
+  by ``runtime.train_loop`` (``pp_stages > 1``): the same wave structure
+  but carrying an arbitrary pytree (activations + aux) and emitting a
+  per-microbatch loss on the last stage.  Warmup/drain garbage is killed
+  by ``jnp.where`` masks, whose VJP is an exact zero on the discarded
+  branch — so off-wave compute contributes bit-exact zeros to every
+  gradient and a staged run matches its stage=1 reference exactly.
 """
 from __future__ import annotations
 
@@ -23,11 +32,22 @@ def pipeline_forward(
     *,
     axis: str = "stage",
     n_stages: int,
+    broadcast: str = "psum",    # "psum" | "hop"
 ) -> jax.Array:
     """Run M microbatches through S pipeline stages; returns outputs in
     microbatch order.  Must run inside shard_map with ``axis`` in the
     mesh.  Each device applies its stage to whatever wave it holds, then
-    ppermutes the activation ring one step."""
+    ppermutes the activation ring one step.
+
+    ``broadcast`` picks how the finished outputs (which live on the last
+    stage) reach the caller: "psum" masks every other stage to
+    ``zeros_like`` and sums — the result is replicated on all stages and
+    the mask keeps integer outputs integer (a ``0.0`` fill would upcast
+    them, and an unmasked psum would sum S stale buffers); "hop" is the
+    cheaper one-hop alternative — a single ppermute moves the buffer
+    last→first instead of all-reducing it, so only stage 0 holds valid
+    outputs (other stages see zeros).
+    """
     M = microbatches.shape[0]
     sid = jax.lax.axis_index(axis)
     n_waves = M + n_stages - 1
@@ -59,10 +79,77 @@ def pipeline_forward(
             jnp.zeros((M, *mb_shape), microbatches.dtype))
     (_, outputs), _ = jax.lax.scan(
         wave, init, jnp.arange(n_waves, dtype=jnp.int32))
-    # outputs live on the last stage; broadcast so every stage returns them
-    outputs = jax.lax.psum(
-        jnp.where(sid == n_stages - 1, outputs, 0.0), axis)
-    return outputs
+    # outputs live on the last stage; mask with zeros_like (NOT 0.0 — that
+    # would upcast integer outputs) so the psum adds exact zeros
+    masked = jnp.where(sid == n_stages - 1, outputs,
+                       jnp.zeros_like(outputs))
+    if broadcast == "hop":
+        return jax.lax.ppermute(masked, axis, [(n_stages - 1, 0)])
+    if broadcast != "psum":
+        raise ValueError(f"broadcast must be 'psum' or 'hop', "
+                         f"got {broadcast!r}")
+    return jax.lax.psum(masked, axis)
+
+
+def pipeline_wave_loss(
+    inject_fn: Callable[[jax.Array], Any],
+    stage_fn: Callable[[Any], Any],
+    loss_fn: Callable[[Any, jax.Array], jax.Array],
+    n_microbatches: int,
+    *,
+    n_stages: int,
+    axis: str = "stage",
+) -> jax.Array:
+    """Differentiable wave pipeline for TRAINING (inside shard_map over
+    ``axis``).  Each device runs one stage; every wave it applies its
+    stage to whatever carry it holds, then the carry ring-rotates one
+    stage forward.  Returns the (M,) per-microbatch scalar losses —
+    nonzero ONLY on the last stage (psum over ``axis`` OUTSIDE the grad
+    makes the value global; adding the other stages' exact zeros keeps
+    it bit-identical to the last stage's local value).
+
+    - ``inject_fn(m)`` → the carry for microbatch ``m`` entering stage 0
+      (e.g. the embedded tokens plus a zero aux accumulator).
+    - ``stage_fn(carry)`` → carry after this device's layer slice.
+    - ``loss_fn(carry, m)`` → scalar local loss for microbatch ``m``
+      (the head + xent; only the last stage's value survives the mask).
+
+    Exactness: warmup/drain waves process garbage, but every garbage
+    path dies in a ``jnp.where`` (stage-0 inject overwrites the wrapped
+    ring carry; the (M,) mask drops off-wave losses) or in the discarded
+    final carry — all of which backpropagate exact-zero cotangents, so
+    gradients accumulate the same per-microbatch terms in the same order
+    as a stage=1 run of the identical code (plus exact ``+0.0`` terms).
+    """
+    M, S = n_microbatches, n_stages
+    sid = jax.lax.axis_index(axis)
+    last = S - 1
+    perm = [(i, (i + 1) % S) for i in range(S)]
+    mb_ix = jnp.arange(M)
+
+    def rotate(carry):
+        return jax.tree.map(
+            lambda a: jax.lax.ppermute(a, axis, perm), carry)
+
+    def wave(carry, t):
+        in_flight, losses = carry
+        fresh = inject_fn(jnp.clip(t, 0, M - 1))
+        x = jax.tree.map(lambda f, c: jnp.where(sid == 0, f, c),
+                         fresh, in_flight)
+        y = stage_fn(x)
+        md = jnp.clip(t - last, 0, M - 1)
+        val = loss_fn(y, md)
+        mask = jnp.logical_and(
+            jnp.logical_and(sid == last, t - last >= 0), mb_ix == md)
+        losses = jnp.where(mask, val, losses)
+        return (rotate(y), losses), None
+
+    # zeros_like keeps only shapes — XLA drops the inject compute
+    init = (jax.tree.map(jnp.zeros_like, inject_fn(jnp.int32(0))),
+            jnp.zeros((M,), jnp.float32))
+    (_, losses), _ = jax.lax.scan(
+        wave, init, jnp.arange(M + S - 1, dtype=jnp.int32))
+    return losses
 
 
 def bubble_fraction(n_stages: int, n_microbatches: int) -> float:

@@ -117,6 +117,37 @@ def localize_structs(tree: Any, specs: Any, mesh) -> Any:
                         is_leaf=lambda x: hasattr(x, "shape"))
 
 
+def stage_shard_specs(
+    specs: Any,
+    *,
+    axis: str = "stage",
+    prefixes: tuple[str, ...] = ("blocks/",),
+) -> Any:
+    """Overlay pipeline-stage sharding on a param-spec tree (DESIGN.md
+    §15): the layer-stack dim (dim 0) of every block param is sharded
+    over ``axis``, so each pipeline stage holds a contiguous slice of
+    the stacked layers.  Every other leaf keeps its spec — replicated
+    over the stage axis, which is exactly what ``missing_axes`` needs to
+    route their gradients through a psum over ``axis`` (the off-stage
+    contributions are where-masked exact zeros, so that psum is a
+    bit-exact broadcast of the owning stage's gradient)."""
+    from repro.utils.trees import flatten_with_names, unflatten_from_names
+
+    named, treedef = flatten_with_names(specs)
+    out = []
+    for n, s in named:
+        if any(n.startswith(p) for p in prefixes):
+            entries = list(s) if len(s) else [None]
+            if entries[0] is not None:
+                raise ValueError(
+                    f"stage overlay: {n} already shards its stack dim "
+                    f"over {entries[0]!r}")
+            entries[0] = axis
+            s = P(*entries)
+        out.append(s)
+    return unflatten_from_names(treedef, out)
+
+
 def batch_spec(mesh: Mesh | jax.sharding.AbstractMesh) -> P:
     """Batch dim sharded over every data-parallel axis present."""
     dp = dp_axes_of(mesh)

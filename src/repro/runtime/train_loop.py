@@ -168,6 +168,8 @@ def make_train_step(
     microbatch: int = 1,    # grad-accumulation factor (memory §Perf lever)
     accum_overlap: bool = True,  # peel the last microbatch out of the scan
     donate: bool = False,   # enable in production (launcher); off for tests
+    pp_stages: int = 1,     # pipeline stages over the "stage" mesh axis
+    pp_schedule: str = "auto",   # "auto" | "gpipe" | "1f1b"
 ) -> TrainStep:
     """Build the jitted, shard_map'd train step for one (arch, mesh, sync).
 
@@ -196,10 +198,83 @@ def make_train_step(
     backward produces its gradients — comm overlaps the last
     microbatch's compute instead of waiting for the whole scan
     (bit-exact with the plain scan: same accumulation order).
+
+    With a "stage" axis in the mesh (DESIGN.md §15) the step runs the
+    staged wave pipeline instead of the accumulation scan: ``microbatch``
+    doubles as the pipeline microbatch count M, the stacked block params
+    are sharded dim-0 over "stage" (each device holds one stage's layer
+    slice), and activations hop stage→stage+1 via ppermute inside the
+    forward.  ``pp_schedule="gpipe"`` differentiates the full M-wave
+    scan in one backward; ``"1f1b"`` splits M into chunks of S
+    microbatches with an accumulated ``jax.grad`` per chunk — the 1F1B
+    memory shape (≤ S microbatches of activations live at once).
+    ``"auto"`` delegates to ``repro.sim.choose_pp_schedule`` (the argmin
+    of the analytic pipeline wall over the fixed schedules).  A staged
+    run is bit-exact with the stage=1 reference (same mesh family with a
+    stage axis of extent 1): off-stage compute is where-masked to exact
+    zeros, and cross-stage psums only ever add those zeros.
     """
     api = family_of(cfg)
     rules = api.param_rules(cfg)
     pspecs = rules.tree_specs(params_like)
+    pp_axis = "stage"
+    pp_active = pp_stages > 1 or pp_axis in mesh.axis_names
+    pp_sched = None
+    if pp_active:
+        if pp_axis not in mesh.axis_names:
+            raise ValueError(
+                f"pp_stages={pp_stages} needs a {pp_axis!r} mesh axis "
+                f"(make_smoke_mesh(..., stage=N)); mesh has "
+                f"{mesh.axis_names}")
+        if int(mesh.shape[pp_axis]) != pp_stages:
+            raise ValueError(
+                f"pp_stages={pp_stages} != mesh {pp_axis!r} extent "
+                f"{mesh.shape[pp_axis]}")
+        if api.pipeline_train_forward is None:
+            raise ValueError(
+                f"family {api.family!r} has no pipeline_train_forward")
+        if getattr(cfg, "depcha_in_scan", False):
+            raise ValueError(
+                "depcha_in_scan is not supported with pipeline stages")
+        n_layers = getattr(cfg, "n_layers", 0)
+        if n_layers and n_layers % pp_stages:
+            raise ValueError(
+                f"n_layers={n_layers} not divisible by "
+                f"pp_stages={pp_stages}")
+        from repro.parallel.sharding import stage_shard_specs
+
+        pspecs = stage_shard_specs(pspecs, axis=pp_axis)
+        # stage-boundary activation payload for the cost model: one
+        # microbatch of (local_B, S, d_model) in the compute dtype
+        pp_mb = max(int(microbatch), 1)
+        try:
+            dims = next(np.shape(v) for v in jax.tree.leaves(batch_like)
+                        if np.ndim(v) > 0)
+            b_local = int(dims[0]) // max(
+                int(np.prod([mesh.shape[a] for a in dp_axes_of(mesh)])), 1)
+            act_bytes = (b_local // pp_mb
+                         * (int(dims[1]) if len(dims) > 1 else 1)
+                         * int(getattr(cfg, "d_model", 0))
+                         * np.dtype(getattr(cfg, "dtype", np.float32)
+                                    ).itemsize)
+        except StopIteration:
+            act_bytes = 0
+        if pp_schedule == "auto":
+            from repro.sim.autotune import choose_pp_schedule
+
+            pp_sched = choose_pp_schedule(
+                pp_stages, pp_mb, activation_bytes=act_bytes,
+                compute=_micro_compute(cfg, batch_like, mesh, 1),
+                mesh_shape=dict(zip(mesh.axis_names, mesh.devices.shape)))
+        elif pp_schedule in ("gpipe", "1f1b"):
+            pp_sched = pp_schedule
+        else:
+            raise ValueError(
+                f"pp_schedule must be 'auto', 'gpipe' or '1f1b', "
+                f"got {pp_schedule!r}")
+        sync = dataclasses.replace(
+            sync, pp_stages=pp_stages, pp_schedule=pp_sched,
+            pp_microbatches=pp_mb, pp_activation_bytes=act_bytes)
     bspecs = _batch_specs(batch_like, mesh)
     tp = getattr(cfg, "tp", 1)
     dp = dp_axes_of(mesh)
@@ -209,6 +284,13 @@ def make_train_step(
     zero1_scheduled = bool(zmeta) and zero1_mode \
         and zero1_plan in ("scheduled", "deferred")
     defer_ag = zero1_scheduled and zero1_plan == "deferred"
+    if pp_active and zero1_scheduled and clip_norm:
+        # the NORM op psums squared shard norms over the DP axes only —
+        # under pipeline stages the blocks are stage-sharded and the
+        # cross-stage terms would be silently missing from the norm
+        raise ValueError(
+            "scheduled ZeRO-1 clipping is not supported with pipeline "
+            "stages; pass clip_norm=0")
 
     # skip leaves from the post-backward schedule ONLY when the model is
     # actually emitting their psums inside the backward scan — otherwise
@@ -285,7 +367,51 @@ def make_train_step(
             # apply LAST step's deferred update shards before anything
             # reads the params
             params = gather_pending(params, opt_state)
-        if microbatch > 1:
+        if pp_active:
+            # staged wave pipeline (§15): microbatch IS the pipeline
+            # microbatch count M; the batch splits exactly like the
+            # accumulation path (global_tokens sees its 1/M share, the
+            # summed loss/grads divide by M below)
+            def psplit(path, x):
+                if np.ndim(x) == 0:
+                    if any(getattr(k, "key", None) == "global_tokens"
+                           for k in path):
+                        x = x / pp_mb
+                    return jnp.broadcast_to(x, (pp_mb,))
+                b = x.shape[0]
+                return x.reshape(pp_mb, b // pp_mb, *x.shape[1:])
+            mbs = jax.tree_util.tree_map_with_path(psplit, batch)
+
+            def pipe_loss(p, mb_tree):
+                return api.pipeline_train_forward(
+                    p, mb_tree, cfg, n_stages=pp_stages,
+                    stage_axis=pp_axis)
+
+            if pp_sched == "gpipe":
+                # one M-wave scan, one backward — autodiff replays the
+                # waves in reverse, the synchronous GPipe flush
+                loss, grads = jax.value_and_grad(
+                    lambda p: pipe_loss(p, mbs))(params)
+                grads = jax.tree.map(
+                    lambda g: g.astype(jnp.float32), grads)
+            else:
+                # 1f1b: chunks of S microbatches, each differentiated on
+                # its own — at most S microbatches of activations live
+                # at once (the 1F1B in-flight bound)
+                loss = jnp.float32(0.0)
+                grads = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                for c0 in range(0, pp_mb, pp_stages):
+                    chunk = jax.tree.map(
+                        lambda v: v[c0:c0 + pp_stages], mbs)
+                    l, g = jax.value_and_grad(
+                        lambda p: pipe_loss(p, chunk))(params)
+                    loss = loss + l
+                    grads = jax.tree.map(
+                        lambda a, x: a + x.astype(jnp.float32), grads, g)
+            loss = loss / pp_mb
+            grads = jax.tree.map(lambda g: g / pp_mb, grads)
+        elif microbatch > 1:
             # grad accumulation: scan over microbatches — activations live
             # only for one microbatch (temp memory ÷ microbatch).  Each
             # microbatch sees its 1/M share of the batch-level
@@ -364,15 +490,53 @@ def make_train_step(
             # in zero1's reduce-scatter inside optimizer.update.
             grads = gs(grads)
             if clip_norm and not zero1_mode:
-                # (monolithic zero1: grads are still DP-partial here —
-                # use zero1_plan="scheduled" for clipped ZeRO training)
-                grads, gnorm = clip_by_global_norm(grads, clip_norm)
+                if pp_active:
+                    # stage-sharded blocks: their squared norms psum
+                    # over "stage"; stage-replicated leaves count once
+                    from repro.parallel.sharding import flat_spec_axes
+
+                    stg = [pp_axis in flat_spec_axes(s)
+                           for s in jax.tree.leaves(pspecs)]
+
+                    def _sq(g, staged):
+                        g32 = jnp.square(g.astype(jnp.float32))
+                        if staged:
+                            # reduce each stacked layer row, psum the
+                            # per-leaf partial over "stage" BEFORE the
+                            # cross-leaf sum: the scalar then matches
+                            # the stage=1 layout bit-for-bit (psum adds
+                            # the same per-layer partials in the same
+                            # layer order, leaf by leaf)
+                            return jax.lax.psum(jnp.sum(jnp.sum(
+                                g32.reshape(g32.shape[0], -1), axis=1)),
+                                pp_axis)
+                        return jnp.sum(g32)
+
+                    sq = [_sq(g, t) for g, t in
+                          zip(jax.tree.leaves(grads), stg)]
+                    sh = sum(s for s, t in zip(sq, stg) if t)
+                    rep = sum(s for s, t in zip(sq, stg) if not t)
+                    gnorm = jnp.sqrt(jnp.float32(sh) + jnp.float32(rep))
+                    scale = jnp.minimum(
+                        1.0, clip_norm / (gnorm + 1e-9))
+                    grads = jax.tree.map(
+                        lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads)
+                else:
+                    # (monolithic zero1: grads are still DP-partial
+                    # here — use zero1_plan="scheduled" for clipped
+                    # ZeRO training)
+                    grads, gnorm = clip_by_global_norm(grads, clip_norm)
             else:
                 gnorm = jnp.float32(0.0)
             updates, opt_state = optimizer.update(
                 grads, opt_state, params, step_idx)
         if updates is not None:
             params = apply_updates(params, updates)
+        if pp_active:
+            # the staged loss is nonzero only on the last stage — the
+            # psum adds the other stages' exact zeros (bit-exact)
+            loss = jax.lax.psum(loss, pp_axis)
         loss = jax.lax.psum(loss, dp) if dp else loss
         metrics = {"loss": loss, "grad_norm": gnorm}
         return params, opt_state, metrics

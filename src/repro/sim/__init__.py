@@ -16,6 +16,7 @@ delegating to the predicted winner.
 """
 from repro.sim.autotune import (
     Prediction,
+    choose_pp_schedule,
     flat_step_schedule,
     grid_search,
     last_auto_report,
@@ -28,11 +29,13 @@ from repro.sim.autotune import (
 from repro.sim.compute import (
     ComputeModel,
     HardwareModel,
+    PipelineTimeline,
     StagingModel,
     UpdateModel,
     compute_model_for,
     count_params,
     fwd_flops,
+    pipeline_timeline,
 )
 from repro.sim.engine import (
     OpEvent,
@@ -65,6 +68,7 @@ __all__ = [
     "LinkModel",
     "NetworkModel",
     "OpEvent",
+    "PipelineTimeline",
     "PipelinedTimeline",
     "Prediction",
     "SimConfig",
@@ -72,6 +76,7 @@ __all__ = [
     "Timeline",
     "UpdateModel",
     "ascii_timeline",
+    "choose_pp_schedule",
     "chrome_trace",
     "chrome_trace_events",
     "compute_model_for",
@@ -81,6 +86,7 @@ __all__ = [
     "fwd_flops",
     "grid_search",
     "last_auto_report",
+    "pipeline_timeline",
     "plan_auto",
     "plan_decode",
     "rank_decode_plans",

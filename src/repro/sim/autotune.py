@@ -28,6 +28,12 @@ import dataclasses
 from typing import Any, Mapping, Sequence
 
 from repro.core.buckets import Bucket, BucketPlan, make_bucket_plan
+from repro.core.pipeline_program import (
+    STAGE_AXIS,
+    bucket_stage_map,
+    compose_step,
+    plan_pipeline,
+)
 from repro.core.registry import (
     fixed_strategy_names,
     get_strategy,
@@ -36,7 +42,7 @@ from repro.core.registry import (
 from repro.core.schedule import UPDATE, CollectiveOp, CommSchedule
 from repro.core.stepprogram import zero1_schedule
 
-from repro.sim.compute import ComputeModel
+from repro.sim.compute import ComputeModel, pipeline_timeline
 from repro.sim.engine import (
     SimConfig,
     Timeline,
@@ -147,6 +153,7 @@ def rank_step_plans(
     strategies: Sequence[str] | None = None,
     accum: int = 1,
     accum_overlap: bool = True,
+    pp: Mapping[str, Any] | None = None,
 ) -> list[tuple[str, Timeline]]:
     """Step-plan families × strategies, ranked by predicted step time.
 
@@ -163,6 +170,18 @@ def rank_step_plans(
     final microbatch's backward — during it with ``accum_overlap``, the
     peeled-tail training shape, else at the scan's end), and the
     deferred PRE window is the FIRST microbatch's forward.
+
+    ``pp`` ({"stages", "microbatches", "virtual", "activation_bytes",
+    "stage_axis"}) with stages > 1 adds ``pp:<sched>:<strategy>`` rows:
+    each fixed pipeline schedule is planned (``plan_pipeline``), costed
+    analytically (``pipeline_timeline`` — wire from the NetworkModel's
+    p2p hop), composed with the strategy's ZeRO-1 triple
+    (``compose_step``) and executed in the engine with per-op release
+    times — SEND/RECV gated on their producing slot, sync ops on their
+    owning stage's gradient release — so bucket reduce-scatters overlap
+    the drain bubble exactly as the joint plan allows.  The pipeline
+    wall (compute + bubble + lockstep wire) stands in for ``t_fwd`` so
+    a pp row's step_time is max(pipeline wall, sync comm end).
     """
     names = tuple(strategies) if strategies else fixed_strategy_names()
     base_compute = compute or ComputeModel(t_fwd=0.0, t_bwd=0.0)
@@ -186,8 +205,83 @@ def rank_step_plans(
                     simulate_pipelined(
                         post, pre, mesh_shape, compute=eff, net=net,
                         sim=scfg, pre_window=base_compute.t_fwd)))
+    ppc = dict(pp or {})
+    stages = int(ppc.get("stages", 1) or 1)
+    if stages > 1:
+        virtual = int(ppc.get("virtual", 1) or 1)
+        n_mb = int(ppc.get("microbatches") or
+                   (accum if accum > 1 else 2 * stages))
+        act = int(ppc.get("activation_bytes", 0) or 0)
+        axis = ppc.get("stage_axis", STAGE_AXIS)
+        # per-microbatch compute scales to the whole step; the pipeline
+        # timeline re-splits it into M × S_tot per-stage slots
+        whole = (dataclasses.replace(
+            base_compute, t_fwd=base_compute.t_fwd * accum,
+            t_bwd=base_compute.t_bwd * accum)
+            if accum > 1 else base_compute)
+        net_ = net or default_network()
+        wire = net_.p2p_time(act, axis, mesh_shape)
+        scheds = (("gpipe", "1f1b") if virtual == 1 else ("interleaved",))
+        for sched in scheds:
+            pplan = plan_pipeline(
+                stages, n_mb, kind=sched,
+                virtual=virtual if sched == "interleaved" else 1,
+                activation_bytes=act, stage_axis=axis)
+            ptl = pipeline_timeline(pplan, whole, wire_time=wire)
+            for name in names:
+                base = get_strategy(name).plan(dp_plan)
+                zs = zero1_schedule(base, dp_axes=tuple(dp_axes),
+                                    clip=clip)
+                joint, id_map = compose_step(pplan, zs)
+                stage_of = bucket_stage_map(pplan, zs)
+                last = max(ptl.stage_grad_release)
+                rel = dict(ptl.op_release)
+                for op in zs.ops:
+                    s = stage_of.get(op.bucket.bucket_id)
+                    rel[id_map[op.op_id]] = (
+                        ptl.stage_grad_release[s] if s is not None
+                        else last)
+                cm = dataclasses.replace(
+                    whole, t_fwd=ptl.wall, t_bwd=0.0)
+                scfg = sim_config_for(name, sim, in_scan_active=False)
+                out.append((f"pp:{sched}:{name}",
+                            simulate(joint, mesh_shape, compute=cm,
+                                     net=net, sim=scfg,
+                                     release_times=rel)))
     out.sort(key=lambda p: (p[1].step_time, p[0]))
     return out
+
+
+def choose_pp_schedule(
+    n_stages: int,
+    n_microbatches: int,
+    *,
+    virtual: int = 1,
+    activation_bytes: int = 0,
+    compute: ComputeModel | None = None,
+    net: NetworkModel | None = None,
+    mesh_shape: Mapping[str, int] | None = None,
+    stage_axis: str = STAGE_AXIS,
+) -> str:
+    """The executed counterpart of the ``pp:<sched>`` ranking: argmin of
+    the analytic pipeline wall over the fixed schedules a runtime with
+    ``pp_schedule="auto"`` could execute.  By construction the choice is
+    never worse than any fixed schedule under the same cost model (ties
+    break lexicographically — "1f1b" before "gpipe")."""
+    net = net or default_network()
+    shape = dict(mesh_shape or {stage_axis: n_stages})
+    wire = net.p2p_time(activation_bytes, stage_axis, shape)
+    cm = compute or ComputeModel(t_fwd=1.0, t_bwd=2.0)
+    cands = ("gpipe", "1f1b") if virtual == 1 else ("interleaved",)
+
+    def wall(kind: str) -> float:
+        pplan = plan_pipeline(
+            n_stages, n_microbatches, kind=kind,
+            virtual=virtual if kind == "interleaved" else 1,
+            activation_bytes=activation_bytes, stage_axis=stage_axis)
+        return pipeline_timeline(pplan, cm, wire_time=wire).wall
+
+    return min(cands, key=lambda k: (wall(k), k))
 
 
 # ------------------------------------------------------------------ auto
@@ -265,19 +359,33 @@ def plan_auto(
     net, net_source = _resolve_network(ctx, mesh_shape)
     zero1 = ctx.get("zero1")
     if zero1 is not None:
+        pp = dict(ctx.get("pp") or {})
+        pp_stages = int(pp.get("stages", 1) or 1)
         ranked = rank_step_plans(
             plan, mesh_shape, dp_axes=tuple(zero1["dp_axes"]),
             clip=bool(zero1.get("clip", False)),
             compute=ctx.get("compute"), net=net, sim=sim,
             accum=int(zero1.get("accum", 1)),
-            accum_overlap=bool(zero1.get("accum_overlap", True)))
+            accum_overlap=bool(zero1.get("accum_overlap", True)),
+            pp=pp if pp_stages > 1 else None)
         # the winner must come from the family the caller will EXECUTE
-        # (zero1_plan="deferred" → pipelined rows, else same-step rows);
-        # the full three-family ranking stays in the report for
-        # visibility, including the flat baseline no zero1 run executes
-        family = "deferred" if zero1.get("defer") else "zero1"
-        winner = next(n for n, _ in ranked
-                      if n.startswith(family + ":")).split(":", 1)[1]
+        # (pipeline context → the joint pp rows, narrowed to the fixed
+        # schedule when one is pinned — "auto" spans all of them, so it
+        # can never rank worse than the best fixed row; otherwise
+        # zero1_plan="deferred" → pipelined rows, else same-step rows);
+        # the full ranking stays in the report for visibility,
+        # including the flat baseline no zero1 run executes
+        pp_sched = None
+        if pp_stages > 1:
+            sched = pp.get("schedule") or "auto"
+            prefix = "pp:" if sched == "auto" else f"pp:{sched}:"
+            row = next(n for n, _ in ranked if n.startswith(prefix))
+            _, pp_sched, winner = row.split(":", 2)
+            family = f"pp:{pp_sched}"
+        else:
+            family = "deferred" if zero1.get("defer") else "zero1"
+            winner = next(n for n, _ in ranked
+                          if n.startswith(family + ":")).split(":", 1)[1]
         _LAST_AUTO.clear()
         _LAST_AUTO.update({
             "winner": winner,
@@ -285,6 +393,7 @@ def plan_auto(
             "ranking": [(n, tl.step_time) for n, tl in ranked],
             "zero1": True,
             "net": net_source,
+            **({"pp_schedule": pp_sched} if pp_sched else {}),
         })
         return get_strategy(winner).plan(plan, skip_names=skip_names)
     # in-scan psums are keyed on the CONFIGURED strategy, so a delegated

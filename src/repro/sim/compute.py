@@ -147,6 +147,115 @@ class ComputeModel:
         return dataclasses.replace(self, t_fwd=accum * micro, t_bwd=0.0)
 
 
+@dataclasses.dataclass(frozen=True)
+class PipelineTimeline:
+    """One pipeline step's analytic timeline (DESIGN.md §15).
+
+    ``op_release`` maps every SEND/RECV op of the plan to the time its
+    payload exists (the producing slot's compute end) — feed it to
+    ``sim.engine.simulate(release_times=...)`` so the rendezvous pairs
+    start no earlier than the stage compute that produces them.
+    ``stage_grad_release`` is per GLOBAL stage: the end of that stage's
+    final backward slot, i.e. when its gradients exist and the bucket
+    reduce-scatters wired by ``compose_step`` may begin.
+    """
+
+    wall: float              # last slot (or lockstep wave) retires
+    fwd_wall: float          # forward phase wall (gpipe: flush point)
+    pure_compute: float      # per-device compute alone (no bubble/wire)
+    op_release: dict         # op_id -> payload-ready time
+    stage_grad_release: tuple[float, ...]   # per global stage
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Idle share of the wall: 1 − pure_compute / wall.  For the
+        lockstep GPipe model at wire_time=0 this is exactly
+        (S−1)/(M+S−1)."""
+        if self.wall <= 0.0:
+            return 0.0
+        return max(0.0, 1.0 - self.pure_compute / self.wall)
+
+
+def pipeline_timeline(plan, compute: ComputeModel, *,
+                      wire_time: float = 0.0) -> PipelineTimeline:
+    """Cost a ``core.pipeline_program.PipelinePlan`` against ``compute``.
+
+    ``compute.t_fwd``/``t_bwd`` are WHOLE-step durations; each of the
+    ``M × S_tot`` forward (backward) slots takes an even share.
+    ``wire_time`` is one boundary crossing (the SEND/RECV ppermute hop,
+    priced by ``NetworkModel.p2p_time`` — passed as a number so this
+    module stays import-free of the network side).
+
+    gpipe        lockstep wave model: every wave is ``t_slot + wire``
+                 across all stages (the executed wave pipeline's scan
+                 step IS a ppermute barrier), so the wire rides the
+                 critical path of every wave.
+    1f1b /       deterministic replay of ``plan.commits`` with real
+    interleaved  durations: a slot starts at max(device clock, input
+                 arrival), where arrivals pay ``wire_time`` once per
+                 boundary crossing.  In steady state the transfer
+                 overlaps the neighbor's compute — the source of the
+                 measured 1F1B win beyond the shorter drain.
+    """
+    S, M, v = plan.n_stages, plan.n_microbatches, plan.virtual
+    S_tot = S * v
+    slots = max(1, M * S_tot)
+    tf = compute.t_fwd / slots
+    tb = compute.t_bwd / slots
+    w = max(0.0, float(wire_time))
+    pure = M * v * (tf + tb)      # one device's share: v stages × M slots
+
+    slot_end: dict[tuple[str, int, int], float] = {}
+    if plan.kind == "gpipe":
+        wave_f, wave_b = tf + w, tb + w
+        t_flush = (M + S - 1) * wave_f
+        for m in range(M):
+            for g in range(S):
+                slot_end[("F", g, m)] = (g + m) * wave_f + tf
+                slot_end[("B", g, m)] = (
+                    t_flush + ((S - 1 - g) + m) * wave_b + tb)
+        fwd_wall = t_flush
+        wall = t_flush + (M + S - 1) * wave_b
+    else:
+        dev_clock = [0.0] * S
+        fwd_wall = wall = 0.0
+        for dev, slot in plan.commits:
+            g, m = slot.stage, slot.mb
+            if slot.phase == "F":
+                ready = (0.0 if g == 0
+                         else slot_end[("F", g - 1, m)] + w)
+                end = max(dev_clock[dev], ready) + tf
+                fwd_wall = max(fwd_wall, end)
+            else:
+                ready = (slot_end[("F", g, m)] if g == S_tot - 1
+                         else slot_end[("B", g + 1, m)] + w)
+                end = max(dev_clock[dev], ready) + tb
+            slot_end[(slot.phase, g, m)] = end
+            dev_clock[dev] = end
+            wall = max(wall, end)
+
+    # SEND and its RECV both release when the producing slot's compute
+    # ends: for a forward boundary that is F(g, m) itself; for a
+    # backward boundary the producing slot is the CONSUMER-side mapping
+    # recorded in op_slot (send slots produce, recv slots consume — the
+    # recv still cannot fire before the payload exists, which the
+    # paired-send release plus the SEND→RECV data edge enforces).
+    op_release: dict[int, float] = {}
+    for op_id, (role, slot) in plan.op_slot.items():
+        g, m = slot.stage, slot.mb
+        if role == "send":
+            op_release[op_id] = slot_end[(slot.phase, g, m)]
+        else:
+            src = (("F", g - 1, m) if slot.phase == "F"
+                   else ("B", g + 1, m))
+            op_release[op_id] = slot_end[src]
+
+    grad_release = tuple(slot_end[("B", g, M - 1)] for g in range(S_tot))
+    return PipelineTimeline(
+        wall=wall, fwd_wall=fwd_wall, pure_compute=pure,
+        op_release=op_release, stage_grad_release=grad_release)
+
+
 def count_params(cfg) -> int:
     """Total parameter elements via eval_shape (no device allocation)."""
     import jax

@@ -36,9 +36,11 @@ from repro.core.schedule import (
     ALL_GATHER,
     DECODE,
     NORM,
+    RECV,
     REDUCE_SCATTER,
     REGROUP,
     RESHARD,
+    SEND,
     UPDATE,
     CommSchedule,
 )
@@ -131,11 +133,25 @@ def simulate(
     compute: ComputeModel | None = None,
     net: NetworkModel | None = None,
     sim: SimConfig | None = None,
+    release_times: Mapping[int, float] | None = None,
 ) -> Timeline:
     """Execute ``schedule`` as a discrete-event timeline.
 
     Emits exactly one ``OpEvent`` per CollectiveOp; events are returned
     in start-time order (ties by op_id).
+
+    ``release_times`` (op_id → earliest start) overrides the bucket
+    release for the listed ops — pipeline plans use it to gate each
+    SEND/RECV on its producing slot's compute end
+    (``sim.compute.pipeline_timeline().op_release``), which also keeps a
+    pp bucket_id from aliasing a same-numbered sync bucket's release.
+
+    SEND/RECV run with rendezvous semantics: the SEND is the sender's
+    local pack (staging only — the payload parks, exactly the emitter's
+    behavior), and the paired RECV — which carries the SEND in its
+    ``depends_on`` — is the synchronization point where the ppermute
+    hop executes: it starts at max(sender packed, receiver ready,
+    release) and pays the p2p wire plus the unpack.
     """
     net = net or default_network()
     sim = sim or SimConfig()
@@ -214,6 +230,18 @@ def simulate(
             # UpdateModel's HBM bandwidth with a 1-read pass
             return (nbytes / compute.update.hbm_bw
                     + compute.update.overhead)
+        if op.kind == SEND:
+            # local pack only: the wire move happens at the paired RECV
+            return net.staging_time(
+                SEND, nbytes, len(op.bucket.leaves),
+                fused=sim.fused_staging)
+        if op.kind == RECV:
+            # rendezvous point: one ppermute hop + the unpack
+            return net.collective_time(
+                RECV, nbytes, op.bucket.reduce_axes,
+                mesh_shape) + net.staging_time(
+                RECV, nbytes, len(op.bucket.leaves),
+                fused=sim.fused_staging)
         if op.kind in (NORM, REGROUP):
             # scalar psum (squared norms / the regroup barrier):
             # latency-bound allreduce
@@ -239,10 +267,14 @@ def simulate(
             op.kind, nbytes, len(op.bucket.leaves),
             fused=sim.fused_staging)
 
+    def release_of(op) -> float:
+        if release_times is not None and op.op_id in release_times:
+            return release_times[op.op_id]
+        return releases.get(op.bucket.bucket_id, compute.t_fwd)
+
     pending = {op.op_id: len(deps_of(op)) for op in schedule.ops}
     children: dict[int, list[int]] = {}
-    dep_ready = {op.op_id: releases.get(op.bucket.bucket_id, compute.t_fwd)
-                 for op in schedule.ops}
+    dep_ready = {op.op_id: release_of(op) for op in schedule.ops}
     for op in schedule.ops:
         for d in deps_of(op):
             children.setdefault(d, []).append(op.op_id)
@@ -283,7 +315,7 @@ def simulate(
             events.append(OpEvent(
                 op_id=oid, bucket_id=op.bucket.bucket_id, chain=op.chain,
                 kind=op.kind, nbytes=op.bucket.size * itemsize_of(op),
-                release=releases.get(op.bucket.bucket_id, compute.t_fwd),
+                release=release_of(op),
                 start=start, end=end))
         else:
             finish_one()

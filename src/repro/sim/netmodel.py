@@ -120,6 +120,17 @@ class NetworkModel:
         return sum(self._ring(nbytes, g, self.link(a), 1.0)
                    for a, g in self._axis_groups(axes, mesh_shape))
 
+    def p2p_time(self, nbytes: float, axis: str,
+                 mesh_shape: Mapping[str, int]) -> float:
+        """One point-to-point hop along ``axis`` (a pipeline SEND/RECV
+        pair's ppermute): single alpha plus the full payload once —
+        every rank sends to its neighbor concurrently, so the ring
+        step count is 1 regardless of the axis extent."""
+        if int(mesh_shape.get(axis, 1)) <= 1:
+            return 0.0
+        lk = self.link(axis)
+        return lk.latency + nbytes / lk.bandwidth
+
     # ------------------------------------------------- reducer variants
     def _hierarchical_time(self, nbytes: float,
                            groups: list[tuple[str, int]]) -> float | None:
@@ -177,17 +188,21 @@ class NetworkModel:
             return self.reduce_scatter_time(nbytes, axes, mesh_shape)
         if kind == "all_gather":
             return self.all_gather_time(nbytes, axes, mesh_shape)
+        if kind in ("send", "recv"):
+            return self.p2p_time(nbytes, axes[0] if axes else "stage",
+                                 mesh_shape)
         raise ValueError(f"unknown collective kind {kind!r}")
 
     def staging_time(self, kind: str, nbytes: float, num_leaves: int, *,
                      fused: bool = True) -> float:
         """CopyFromTo cost around one CommSchedule op: allreduce pays
         pack AND unpack; a reduce-scatter only packs, an all-gather only
-        unpacks (the RS/AG pair splits the round trip)."""
+        unpacks (the RS/AG pair splits the round trip; same split for a
+        SEND/RECV pair — pack at the SEND, unpack at the RECV)."""
         one = self.staging.stage_time(nbytes, num_leaves, fused=fused)
         if kind == "allreduce":
             return 2.0 * one
-        if kind in ("reduce_scatter", "all_gather"):
+        if kind in ("reduce_scatter", "all_gather", "send", "recv"):
             return one
         raise ValueError(f"unknown collective kind {kind!r}")
 

@@ -588,4 +588,92 @@ sk1 = eng8.generate_batch(sprompts[:3], 10,
 check("serve-sample-topk1-equals-greedy",
       all(np.array_equal(x, y) for x, y in zip(sk1, souts[:3])))
 
+# 14. pipeline parallelism (DESIGN.md §15) at dp=2 × stage=2 × tp=2:
+#     the staged wave pipeline over real stage process groups must match
+#     the stage=1 reference BIT-exactly — GPipe at any M (same reverse-
+#     wave accumulation order; warmup/drain garbage dies in exact-zero
+#     where-mask cotangents), 1F1B at M == S (its single chunk IS the
+#     GPipe wave).  Chunked 1F1B at M > S re-associates the chunk sum
+#     (float round-off, like the §10 accum peel), as does the clip
+#     norm's interaction with adamw's compiled update — both held to
+#     loose tolerance instead.
+from repro.launch.mesh import make_smoke_mesh
+from repro.sim.autotune import choose_pp_schedule
+
+mesh_pp2 = make_smoke_mesh(2, 2, stage=2)   # dp2 × stage2 × tp2
+mesh_pp1 = make_smoke_mesh(2, 2, stage=1)   # the staged S=1 reference
+
+mk_pp = lambda: tf.TransformerConfig(
+    name="dense", n_layers=2, d_model=64, n_heads=8, kv_heads=2,
+    d_ff=128, vocab=96, tp=2, attn_chunk=16, dtype=jnp.float32)
+
+
+def pp_steps(mesh, stage, schedule, microbatch, n=2, clip=0.0):
+    cfg = mk_pp()
+    params = family_of(cfg).init(jax.random.PRNGKey(2), cfg)
+    pipe = TokenPipeline(96, 32, 8, seed=5, mesh=mesh)
+    sync = GradSyncConfig(strategy="concom", bucket_bytes=1 << 12)
+    ts = make_train_step(cfg, mesh, sync, adamw(1e-3),
+                         batch_like=pipe.batch_at(0), params_like=params,
+                         clip_norm=clip, microbatch=microbatch,
+                         pp_stages=stage, pp_schedule=schedule)
+    ps = jax.device_put(params, ts.shardings(ts.param_specs))
+    st = ts.init_opt()
+    m = None
+    for k in range(n):
+        ps, st, m = ts.fn(ps, st, pipe.batch_at(k), jnp.int32(k))
+    return ps, m
+
+
+pg2, mg2 = pp_steps(mesh_pp2, 2, "gpipe", 4)
+pg1, mg1 = pp_steps(mesh_pp1, 1, "gpipe", 4)
+check("pp-gpipe-bitexact-vs-stage1",
+      worst_diff(pg2, pg1) == 0.0
+      and float(mg2["loss"]) == float(mg1["loss"]))
+
+# 1f1b at M == S: one chunk of S microbatches == the GPipe wave program
+pf2, mf2 = pp_steps(mesh_pp2, 2, "1f1b", 2)
+pw1, _ = pp_steps(mesh_pp1, 1, "gpipe", 2)
+check("pp-1f1b-m-eq-s-bitexact-vs-stage1", worst_diff(pf2, pw1) == 0.0)
+
+# chunked 1f1b at M > S: chunk-sum re-association only (round-off)
+pf4, _ = pp_steps(mesh_pp2, 2, "1f1b", 4)
+pf4r, _ = pp_steps(mesh_pp1, 1, "1f1b", 4)
+check("pp-1f1b-m4-close-vs-stage1", worst_diff(pf4, pf4r) < 1e-5)
+
+# clipped: gnorm is bit-identical across stagings (per-leaf psum in the
+# same layer order); the clip×adamw fusion is float round-off
+pc2, mc2 = pp_steps(mesh_pp2, 2, "gpipe", 4, clip=0.05)
+pc1, mc1 = pp_steps(mesh_pp1, 1, "gpipe", 4, clip=0.05)
+check("pp-clip-gnorm-bitexact",
+      float(mc2["grad_norm"]) == float(mc1["grad_norm"]))
+check("pp-clip-close-vs-stage1", worst_diff(pc2, pc1) < 1e-5)
+
+# staged S=1 vs the plain (no stage axis) accumulation path: same math,
+# different program shape — float round-off closeness
+mesh_pp0 = make_smoke_mesh(2, 2)
+cfg_pl = mk_pp()
+params_pl = family_of(cfg_pl).init(jax.random.PRNGKey(2), cfg_pl)
+pipe_pl = TokenPipeline(96, 32, 8, seed=5, mesh=mesh_pp0)
+ts_pl = make_train_step(
+    cfg_pl, mesh_pp0, GradSyncConfig(strategy="concom",
+                                     bucket_bytes=1 << 12),
+    adamw(1e-3), batch_like=pipe_pl.batch_at(0), params_like=params_pl,
+    clip_norm=0.0, microbatch=4)
+pp_pl = jax.device_put(params_pl, ts_pl.shardings(ts_pl.param_specs))
+st_pl = ts_pl.init_opt()
+for k in range(2):
+    pp_pl, st_pl, _ = ts_pl.fn(pp_pl, st_pl, pipe_pl.batch_at(k),
+                               jnp.int32(k))
+check("pp-staged-ref-close-vs-plain-accum",
+      worst_diff(pg1, pp_pl) < 1e-4)
+
+# auto resolves to a fixed schedule before compile and matches that
+# fixed schedule's trajectory bit-for-bit
+pick = choose_pp_schedule(2, 4)
+pa2, _ = pp_steps(mesh_pp2, 2, "auto", 4)
+pfix, _ = pp_steps(mesh_pp2, 2, pick, 4)
+check("pp-auto-equals-resolved-fixed-bitexact",
+      worst_diff(pa2, pfix) == 0.0)
+
 print("DONE", flush=True)
